@@ -1,0 +1,75 @@
+"""Shared benchmark setup: train-once NGP cache + standard cameras.
+
+Every benchmark renders through the same trained model so numbers are
+comparable across tables.  Training is cached on disk (first run ~2 min on
+this CPU); `--quick` uses fewer steps.
+"""
+from __future__ import annotations
+
+import pickle
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fields, model as model_lib, pipeline, rendering, scene
+from repro.core import train as train_lib
+
+CACHE = Path(__file__).resolve().parent / "_cache"
+CACHE.mkdir(exist_ok=True)
+
+SCENES = ("lego", "hotdog", "mic")
+EVAL_CAM = dict(theta=0.9, phi=0.55)
+IMG_HW = (64, 64)
+NS_FULL = 96
+CANDIDATES = (12, 24, 48)
+
+
+def trained_model(scene_name: str, quick: bool = False):
+    """Returns (params, cfg). Cached on disk keyed by scene+settings."""
+    steps = 80 if quick else 300
+    key = f"{scene_name}_s{steps}"
+    path = CACHE / f"ngp_{key}.pkl"
+    if path.exists():
+        with open(path, "rb") as f:
+            params, cfg = pickle.load(f)
+        params = jax.tree.map(jnp.asarray, params)
+        return params, cfg
+    tcfg = train_lib.NGPTrainConfig(
+        scene=scene_name, steps=steps, batch_rays=1024, n_samples=48,
+        n_views=8, view_hw=(72, 72), log_every=100,
+    )
+    params, cfg, _, _ = train_lib.train_ngp(tcfg, verbose=True)
+    host = jax.tree.map(lambda x: np.asarray(x), params)
+    with open(path, "wb") as f:
+        pickle.dump((host, cfg), f)
+    return params, cfg
+
+
+def eval_setup(scene_name: str, quick: bool = False):
+    """(fns, cfg, cam, reference image) for the eval view."""
+    params, cfg = trained_model(scene_name, quick)
+    fns = model_lib.field_fns(params, cfg)
+    field = scene.make_scene(scene_name)
+    cam = scene.look_at_camera(*IMG_HW, **EVAL_CAM)
+    o, d = scene.camera_rays(cam)
+    ref, _ = scene.render_reference(field, o, d)
+    ref_img = ref.reshape(*IMG_HW, 3)
+    return fns, cfg, cam, ref_img
+
+
+def baseline_image(fns, cam, ns=NS_FULL):
+    o, d = scene.camera_rays(cam)
+    rgb, _ = pipeline.render_fixed_fns(fns, o, d, ns)
+    return rgb.reshape(cam.height, cam.width, 3)
+
+
+def timer(fn, *args, repeats=3, **kw):
+    fn(*args, **kw)  # warm up / compile
+    t0 = time.time()
+    for _ in range(repeats):
+        out = fn(*args, **kw)
+        jax.block_until_ready(out)
+    return (time.time() - t0) / repeats

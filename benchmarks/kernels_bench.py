@@ -1,0 +1,43 @@
+"""Per-kernel microbenchmarks (interpret-mode CPU — correctness path cost,
+NOT TPU perf; the TPU story is the roofline report)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hashgrid, model as model_lib
+from repro.kernels import ops, ref
+
+from . import common
+
+
+def run(quick: bool = False):
+    cfg = model_lib.NGPConfig.small()
+    params = model_lib.init_ngp(jax.random.PRNGKey(0), cfg)
+    n = 2048 if quick else 8192
+    pts = jax.random.uniform(jax.random.PRNGKey(1), (n, 3))
+    dirs = pts / jnp.linalg.norm(pts, axis=-1, keepdims=True)
+    enc = hashgrid.encode(pts, params["grid"], cfg.grid)
+
+    rows = {}
+    rows["hash_encode_kernel_us"] = 1e6 * common.timer(
+        lambda: ops.hash_encode(pts, params["grid"], cfg.grid))
+    rows["hash_encode_ref_us"] = 1e6 * common.timer(
+        jax.jit(lambda p: hashgrid.encode(p, params["grid"], cfg.grid)), pts)
+    rows["fused_mlp_kernel_us"] = 1e6 * common.timer(
+        lambda: ops.fused_field(enc, dirs, params["mlps"], cfg.net))
+    R, S, g = 256, 96, 2
+    sig = jax.random.uniform(jax.random.PRNGKey(2), (R, S)) * 5
+    anch = jax.random.uniform(jax.random.PRNGKey(3), (R, -(-S // g), 3))
+    dl = jnp.full((R, S), 0.02)
+    rows["volume_render_kernel_us"] = 1e6 * common.timer(
+        lambda: ops.volume_render(sig, anch, dl, g))
+    return rows
+
+
+def main(quick: bool = False):
+    r = run(quick)
+    print("name,us_per_call")
+    for k, v in r.items():
+        print(f"{k},{v:.0f}")
+    return r

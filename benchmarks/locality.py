@@ -1,0 +1,44 @@
+"""Figs. 4/8/15 — locality profiles that motivate the architecture."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import fields, pipeline, reuse, scene
+
+from . import common
+
+
+def run(quick: bool = False):
+    fns, cfg, cam, _ = common.eval_setup("lego", quick)
+    o, d = scene.camera_rays(cam)
+
+    pts_a, _, _ = scene.sample_points(o[100:101], d[100:101], common.NS_FULL)
+    pts_b, _, _ = scene.sample_points(o[101:102], d[101:102], common.NS_FULL)
+    inter = reuse.inter_ray_repetition(pts_a[0], pts_b[0], cfg.grid)
+    intra = reuse.intra_ray_max_voxel_count(pts_a[0], cfg.grid)
+
+    _, aux = pipeline.render_fixed_fns(fns, o[:128], d[:128], common.NS_FULL)
+    cos = reuse.adjacent_color_cosine(aux["colors"])
+
+    tr_d = reuse.hash_address_trace(pts_a[0], cfg.grid, 0)
+    tr_h = reuse.hash_address_trace(pts_a[0], cfg.grid, cfg.grid.n_levels - 1)
+    return {
+        "inter_ray_repetition_per_level": inter.tolist(),
+        "intra_ray_max_count_per_level": intra.tolist(),
+        "cosine_frac_above_0.95": float((cos > 0.95).mean()),
+        "dense_addr_mean_jump": float(np.abs(np.diff(tr_d[:, 0])).mean()),
+        "hash_addr_mean_jump": float(np.abs(np.diff(tr_h[:, 0])).mean()),
+    }
+
+
+def main(quick: bool = False):
+    r = run(quick)
+    print("metric,value  # paper: Fig15a >90% low-res, Fig8 >95% cos~1")
+    print(f"inter_ray_rep_L0,{r['inter_ray_repetition_per_level'][0]:.3f}")
+    print(f"inter_ray_rep_Lmax,{r['inter_ray_repetition_per_level'][-1]:.3f}")
+    print(f"intra_ray_max_L0,{r['intra_ray_max_count_per_level'][0]}")
+    print(f"intra_ray_max_Lmax,{r['intra_ray_max_count_per_level'][-1]}")
+    print(f"cos_frac_gt_0.95,{r['cosine_frac_above_0.95']:.3f}")
+    print(f"dense_addr_jump,{r['dense_addr_mean_jump']:.1f}")
+    print(f"hash_addr_jump,{r['hash_addr_mean_jump']:.1f}")
+    return r

@@ -1,0 +1,47 @@
+"""Generate the EXPERIMENTS.md §Dry-run/§Roofline markdown tables from
+results/dryrun/*.json (single source of truth)."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parent.parent / "results" / "dryrun"
+
+
+def fmt_cell(r):
+    t = r["roofline"]
+    return (f"| {r['arch']} | {r['shape']} | {t['compute_s']:.4f} "
+            f"| {t['memory_s']:.4f} | {t['collective_s']:.4f} "
+            f"| {t['bottleneck']} | {t['roofline_fraction_compute']:.3f} "
+            f"| {r.get('useful_flops_ratio', 0):.2f} "
+            f"| {r['memory']['temp_bytes']/1e9:.2f} |")
+
+
+def main():
+    for mesh in ("single", "multi"):
+        print(f"\n### Mesh: {'(16,16) = 256 chips' if mesh=='single' else '(2,16,16) = 512 chips'}\n")
+        print("| arch | shape | compute (s) | memory (s) | collective (s) "
+              "| bottleneck | frac-of-roofline | useful/executed | peak GB/chip |")
+        print("|---|---|---|---|---|---|---|---|---|")
+        for p in sorted(RESULTS.glob(f"*_{mesh}.json")):
+            r = json.loads(p.read_text())
+            if r.get("skipped"):
+                print(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                      f"SKIP (full attention; DESIGN.md §4) | — | — | — |")
+                continue
+            print(fmt_cell(r))
+    # opt variants
+    print("\n### §Perf optimized variants (hillclimbed cells)\n")
+    print("| arch | shape | variant | compute (s) | memory (s) "
+          "| collective (s) | bottleneck | peak GB/chip |")
+    print("|---|---|---|---|---|---|---|---|")
+    for p in sorted(RESULTS.glob("*_opt.json")):
+        r = json.loads(p.read_text())
+        t = r["roofline"]
+        print(f"| {r['arch']} | {r['shape']} | opt | {t['compute_s']:.4f} "
+              f"| {t['memory_s']:.4f} | {t['collective_s']:.4f} "
+              f"| {t['bottleneck']} | {r['memory']['temp_bytes']/1e9:.2f} |")
+
+
+if __name__ == "__main__":
+    main()

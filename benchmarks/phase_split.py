@@ -1,0 +1,59 @@
+"""Fig. 18 — per-phase (encoding / MLP) work before vs after ASDR.
+
+The paper reports larger speedups in encoding than MLP because data
+mapping/reuse attacks gather traffic; we report the same split in work
+units: embedding-gather bytes (encoding) and MLP FLOPs.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import pipeline, reuse, scene
+from repro.core.mlp import flops_per_sample
+
+from . import common
+
+
+def run(quick: bool = False):
+    fns, cfg, cam, _ = common.eval_setup("lego", quick)
+    o, d = scene.camera_rays(cam)
+    R = o.shape[0]
+    ns = common.NS_FULL
+
+    acfg = pipeline.ASDRConfig(ns_full=ns, probe_stride=4,
+                               candidates=common.CANDIDATES,
+                               block_size=256, chunk=16)
+    _, stats = pipeline.render_asdr_image(fns, acfg, cam)
+
+    base_samples = R * ns
+    asdr_samples = float(stats["samples_processed"]) + stats["probe_samples"]
+
+    # encoding phase: gather bytes, with and without tile-dedup (register
+    # cache analogue, §5.2.2)
+    pts, _, _ = scene.sample_points(o[:64], d[:64], ns)
+    dedup = reuse.dedup_window_rate(
+        pts.reshape(-1, 3), cfg.grid, window=32, level=0)
+    enc_base = reuse.gather_bytes(base_samples, cfg.grid)
+    enc_asdr = reuse.gather_bytes(asdr_samples, cfg.grid, dedup_rate=dedup)
+
+    f = flops_per_sample(cfg.net)
+    mlp_base = base_samples * (f["density_flops"] + f["color_flops"])
+    mlp_asdr = (asdr_samples * f["density_flops"]
+                + asdr_samples / acfg.group * f["color_flops"])
+    return {
+        "encoding_bytes_baseline": enc_base,
+        "encoding_bytes_asdr": enc_asdr,
+        "encoding_speedup": enc_base / enc_asdr,
+        "mlp_flops_baseline": mlp_base,
+        "mlp_flops_asdr": mlp_asdr,
+        "mlp_speedup": mlp_base / mlp_asdr,
+        "tile_dedup_rate_L0": dedup,
+    }
+
+
+def main(quick: bool = False):
+    r = run(quick)
+    print("metric,value")
+    for k, v in r.items():
+        print(f"{k},{v:.4g}")
+    return r

@@ -1,0 +1,60 @@
+"""Roofline report — reads results/dryrun/*.json, emits the per-cell table
+(EXPERIMENTS.md §Roofline is generated from this)."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parent.parent / "results" / "dryrun"
+
+
+def load_records(mesh: str = "single"):
+    recs = []
+    for p in sorted(RESULTS.glob(f"*_{mesh}.json")):
+        r = json.loads(p.read_text())
+        recs.append(r)
+    return recs
+
+
+def table(mesh: str = "single"):
+    rows = []
+    for r in load_records(mesh):
+        if r.get("skipped"):
+            rows.append({"arch": r["arch"], "shape": r["shape"],
+                         "skipped": True})
+            continue
+        t = r["roofline"]
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"],
+            "compute_s": t["compute_s"], "memory_s": t["memory_s"],
+            "collective_s": t["collective_s"],
+            "bottleneck": t["bottleneck"],
+            "roofline_fraction": t["roofline_fraction_compute"],
+            "useful_ratio": r["useful_flops_ratio"],
+            "peak_gb": r["memory"]["temp_bytes"] / 1e9,
+            "compile_s": r["compile_s"],
+        })
+    return rows
+
+
+def main(quick: bool = False):
+    for mesh in ("single", "multi"):
+        rows = table(mesh)
+        if not rows:
+            print(f"# no dry-run records for mesh={mesh} "
+                  "(run python -m repro.launch.dryrun --all)")
+            continue
+        print(f"## mesh={mesh}")
+        print("arch,shape,compute_s,memory_s,collective_s,bottleneck,"
+              "roofline_frac,useful_ratio,peak_GB,compile_s")
+        for r in rows:
+            if r.get("skipped"):
+                print(f"{r['arch']},{r['shape']},SKIP(long_500k "
+                      "needs sub-quadratic attention)")
+                continue
+            print(f"{r['arch']},{r['shape']},{r['compute_s']:.4f},"
+                  f"{r['memory_s']:.4f},{r['collective_s']:.4f},"
+                  f"{r['bottleneck']},{r['roofline_fraction']:.3f},"
+                  f"{r['useful_ratio']:.3f},{r['peak_gb']:.2f},"
+                  f"{r['compile_s']:.1f}")
+    return table("single")

@@ -1,0 +1,51 @@
+"""Benchmark driver — one module per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--quick] [--only quality,sweeps]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+import traceback
+
+MODULES = [
+    "quality",        # Fig 16 / Table 3
+    "speedup",        # Fig 17 / Fig 24 (software-only analogue)
+    "phase_split",    # Fig 18
+    "ablation",       # Fig 20
+    "sweeps",         # Fig 21
+    "reuse_cache",    # Fig 22 (+ Fig 13 utilization)
+    "early_term",     # Fig 23
+    "locality",       # Figs 4 / 8 / 15
+    "kernels_bench",  # per-kernel timings
+    "roofline_report",  # EXPERIMENTS.md §Roofline source
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    mods = args.only.split(",") if args.only else MODULES
+
+    ok, failed = [], []
+    for name in mods:
+        print(f"\n{'='*70}\n# benchmark: {name}\n{'='*70}", flush=True)
+        t0 = time.time()
+        try:
+            mod = __import__(f"benchmarks.{name}", fromlist=["main"])
+            mod.main(quick=args.quick)
+            ok.append(name)
+            print(f"# [{name}] done in {time.time()-t0:.1f}s", flush=True)
+        except Exception:
+            failed.append(name)
+            traceback.print_exc()
+    print(f"\n# benchmarks complete: {len(ok)} ok, {len(failed)} failed "
+          f"({','.join(failed) if failed else '-'})")
+    if failed:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

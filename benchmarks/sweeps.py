@@ -1,0 +1,64 @@
+"""Fig. 21 — design-space sweeps: adaptive threshold delta, group size n."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import decouple, pipeline, rendering, scene
+
+from . import common
+
+
+def run(quick: bool = False):
+    fns, cfg, cam, ref = common.eval_setup("lego", quick)
+    o, d = scene.camera_rays(cam)
+    base = common.baseline_image(fns, cam)
+    p_base = float(rendering.psnr(base, ref))
+
+    deltas = [1.0 / 512, 1.0 / 1024, 1.0 / 2048, 1.0 / 4096, 0.0]
+    delta_rows = []
+    for dl in deltas:
+        acfg = pipeline.ASDRConfig(
+            ns_full=common.NS_FULL, probe_stride=4, delta=dl,
+            candidates=common.CANDIDATES, block_size=256, chunk=16,
+        )
+        img, stats = pipeline.render_asdr_image(fns, acfg, cam)
+        delta_rows.append({
+            "delta": dl,
+            "avg_samples": float(stats["avg_samples_per_ray"]),
+            "sample_reduction": float(stats["sample_reduction"]),
+            "psnr": float(rendering.psnr(img, ref)),
+            "psnr_drop_vs_base": p_base - float(rendering.psnr(img, ref)),
+        })
+
+    group_rows = []
+    for n in (1, 2, 4, 8):
+        img, stats = decouple.render_decoupled(
+            fns, o, d, common.NS_FULL, group=n)
+        img = img.reshape(*common.IMG_HW, 3)
+        group_rows.append({
+            "group": n,
+            "color_eval_fraction": stats["color_eval_fraction"],
+            "psnr": float(rendering.psnr(img, ref)),
+            "psnr_drop_vs_base": p_base - float(rendering.psnr(img, ref)),
+            "mlp_reduction": decouple.mlp_flops_saved(
+                cfg, common.NS_FULL, n)["reduction_fraction"],
+        })
+    return {"delta_sweep": delta_rows, "group_sweep": group_rows,
+            "psnr_baseline": p_base}
+
+
+def main(quick: bool = False):
+    r = run(quick)
+    print("## delta sweep (Fig 21a)")
+    print("delta,avg_samples,reduction,psnr,psnr_drop")
+    for row in r["delta_sweep"]:
+        print(f"{row['delta']:.6f},{row['avg_samples']:.1f},"
+              f"{row['sample_reduction']:.2f},{row['psnr']:.2f},"
+              f"{row['psnr_drop_vs_base']:.3f}")
+    print("## group-size sweep (Fig 21b)")
+    print("n,color_frac,psnr,psnr_drop,mlp_reduction")
+    for row in r["group_sweep"]:
+        print(f"{row['group']},{row['color_eval_fraction']:.3f},"
+              f"{row['psnr']:.2f},{row['psnr_drop_vs_base']:.3f},"
+              f"{row['mlp_reduction']:.3f}")
+    return r

@@ -1,0 +1,68 @@
+"""Quickstart: train Instant-NGP on an analytic scene, render with ASDR.
+
+  PYTHONPATH=src python examples/quickstart.py [--steps 150]
+
+Trains a small hash-grid NeRF on the procedural "lego" scene, then renders
+one view three ways — fixed-count baseline, ASDR two-phase adaptive, naive
+half-sampling — and prints the paper's headline comparison (ASDR ~=
+baseline quality with ~2x fewer samples; naive halving visibly worse).
+"""
+import argparse
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+import jax.numpy as jnp
+
+from repro.core import fields, model as model_lib, pipeline, rendering, scene
+from repro.core import train as train_lib
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=150)
+    ap.add_argument("--scene", default="lego")
+    ap.add_argument("--size", type=int, default=64)
+    args = ap.parse_args()
+
+    print(f"== training Instant-NGP on analytic '{args.scene}' "
+          f"({args.steps} steps) ==")
+    tcfg = train_lib.NGPTrainConfig(
+        scene=args.scene, steps=args.steps, batch_rays=1024, n_samples=48,
+        n_views=6, view_hw=(64, 64), log_every=50,
+    )
+    params, cfg, field, hist = train_lib.train_ngp(tcfg)
+
+    fns = model_lib.field_fns(params, cfg)
+    cam = scene.look_at_camera(args.size, args.size, theta=0.9, phi=0.55)
+    o, d = scene.camera_rays(cam)
+    ref, _ = scene.render_reference(field, o, d)
+    ref = ref.reshape(args.size, args.size, 3)
+
+    print("== rendering ==")
+    base, _ = pipeline.render_fixed_fns(fns, o, d, 96)
+    base = base.reshape(args.size, args.size, 3)
+
+    acfg = pipeline.ASDRConfig(ns_full=96, probe_stride=4,
+                               candidates=(12, 24, 48),
+                               block_size=256, chunk=16)
+    asdr_img, stats = pipeline.render_asdr_image(fns, acfg, cam)
+
+    naive, _ = pipeline.render_fixed_fns(fns, o, d, 48)
+    naive = naive.reshape(args.size, args.size, 3)
+
+    p = rendering.psnr
+    print(f"\nPSNR vs analytic reference:")
+    print(f"  fixed-96 baseline : {float(p(base, ref)):6.2f} dB")
+    print(f"  ASDR (two-phase)  : {float(p(asdr_img, ref)):6.2f} dB   "
+          f"avg {stats['avg_samples_per_ray']:.0f} samples/ray "
+          f"({stats['sample_reduction']:.2f}x fewer)")
+    print(f"  naive half (48)   : {float(p(naive, ref)):6.2f} dB")
+    print(f"\nASDR vs baseline drop: "
+          f"{float(p(base, ref)) - float(p(asdr_img, ref)):.2f} dB "
+          f"(paper: ~0.07)")
+
+
+if __name__ == "__main__":
+    main()

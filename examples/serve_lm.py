@@ -1,0 +1,63 @@
+"""Batched LM serving with the slot engine (prefill + decode).
+
+  PYTHONPATH=src python examples/serve_lm.py --arch gemma2-27b --requests 6
+
+Loads a reduced config of the chosen architecture (random weights — the
+point is the serving machinery: batched prefill, KV caches with ring
+buffers for local-attention layers, greedy/temperature sampling, slot
+waves) and reports per-request latency + aggregate decode throughput.
+"""
+import argparse
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+import dataclasses
+
+import jax
+import numpy as np
+
+import repro.configs as configs
+from repro.models import lm
+from repro.serve.engine import Request, ServeConfig, ServingEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma2-27b")
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--max-new", type=int, default=24)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    args = ap.parse_args()
+
+    cfg = dataclasses.replace(configs.get_smoke(args.arch), dtype="float32")
+    api = lm.build(cfg, remat_policy=None)
+    values = api.init(jax.random.PRNGKey(0))
+    eng = ServingEngine(api, values, ServeConfig(
+        max_seq=args.prompt_len + args.max_new + 8, slots=4,
+        temperature=args.temperature,
+    ))
+
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab, size=args.prompt_len),
+                    max_new=args.max_new)
+            for i in range(args.requests)]
+    print(f"== serving {args.requests} requests on {cfg.name} "
+          f"(slots=4, greedy={args.temperature == 0.0}) ==")
+    t0 = time.time()
+    done = eng.generate(reqs)
+    dt = time.time() - t0
+    tok = sum(len(r.out) for r in done)
+    for r in done[:3]:
+        print(f"  req {r.rid}: prompt[:6]={r.prompt[:6].tolist()} -> "
+              f"out[:8]={r.out[:8].tolist()} ({r.latency_s:.2f}s)")
+    print(f"\n{tok} tokens in {dt:.2f}s = {tok/dt:.1f} tok/s "
+          f"(CPU, reduced config)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""The paper's own model: Instant-NGP + ASDR two-phase rendering.
+
+This is the 11th config — the one the technique lives in end-to-end.
+``CONFIG`` is the paper-scale setup (2^19 tables, 16 levels, 192 samples,
+paper MLP split 8%/92%); ``SMOKE`` is the CPU-trainable reduction used by
+tests/examples.  launch/dryrun.py lowers its *render* and *train* steps
+data-parallel over rays (see launch/asdr_steps.py).
+"""
+import dataclasses
+
+from repro.core.model import NGPConfig
+from repro.core.pipeline import ASDRConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class NGPBundle:
+    name: str
+    model: NGPConfig
+    asdr: ASDRConfig
+    image_hw: tuple
+    train_batch_rays: int
+
+
+CONFIG = NGPBundle(
+    name="ingp-asdr",
+    model=NGPConfig.make(paper_mlp=True),
+    asdr=ASDRConfig(ns_full=192, probe_stride=5, delta=1.0 / 2048.0,
+                    group=2, block_size=4096, chunk=32),
+    image_hw=(800, 800),
+    train_batch_rays=1 << 18,
+)
+
+SMOKE = NGPBundle(
+    name="ingp-asdr-smoke",
+    model=NGPConfig.small(),
+    asdr=ASDRConfig(ns_full=64, probe_stride=4, group=2,
+                    block_size=64, chunk=16, candidates=(8, 16, 32)),
+    image_hw=(48, 48),
+    train_batch_rays=512,
+)

@@ -1,0 +1,98 @@
+"""§4.3 — Color-density decoupling via color-wise locality.
+
+Every sample gets a density-MLP evaluation; only every ``n``-th sample (the
+group anchor) gets a color-MLP evaluation.  Non-anchor colors are linear
+interpolations between the two enclosing anchors (the paper interpolates
+between c_{(i-1)n+1} and c_{in+1}; the trailing group clamps to the last
+anchor).  With n=2 the paper reports ~46% MLP-compute reduction at ~0 PSNR
+loss, beating naive 2x sample reduction by ~1.7 PSNR (Fig. 9) — reproduced
+in benchmarks/sweeps.py and benchmarks/quality.py.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from . import rendering, scene
+from .fields import FieldFns
+
+
+def interpolate_group_colors(anchor_colors: jnp.ndarray, n: int, S: int) -> jnp.ndarray:
+    """Expand anchor colors (R, A, 3) to all samples (R, S, 3) by lerp.
+
+    Anchors sit at sample indices 0, n, 2n, ...  A = ceil(S / n).
+    Sample j lies in group i = j // n with offset t = (j % n) / n and is
+    lerp(anchor_i, anchor_{i+1}, t) (anchor index clamped at the end).
+    """
+    R, A, _ = anchor_colors.shape
+    j = jnp.arange(S)
+    gi = j // n
+    t = (j % n).astype(anchor_colors.dtype) / n
+    left = anchor_colors[:, jnp.clip(gi, 0, A - 1)]
+    right = anchor_colors[:, jnp.clip(gi + 1, 0, A - 1)]
+    return left + (right - left) * t[None, :, None]
+
+
+def render_decoupled(
+    fns: FieldFns, origins, dirs, n_samples: int, group: int = 2,
+    key=None, white_background: bool = True,
+):
+    """Decoupled renderer: density for all samples, color for anchors only.
+
+    Returns (rgb, stats) where stats counts actual MLP evaluations.
+    """
+    pts, deltas, _ = scene.sample_points(origins, dirs, n_samples, key)
+    R, S = pts.shape[:2]
+    flat = pts.reshape(-1, 3)
+    sigma, geo = fns.density(flat)
+    sigma = sigma.reshape(R, S)
+    geo = geo.reshape(R, S, -1)
+
+    anchor_idx = jnp.arange(0, S, group)
+    A = anchor_idx.shape[0]
+    geo_anchor = geo[:, anchor_idx].reshape(R * A, -1)
+    dirs_anchor = jnp.repeat(dirs, A, axis=0)
+    anchor_colors = fns.color(geo_anchor, dirs_anchor)
+    anchor_colors = anchor_colors.reshape(R, A, 3)
+
+    colors = interpolate_group_colors(anchor_colors, group, S)
+    rgb, acc, _ = rendering.composite(
+        sigma, colors, deltas, white_background=white_background
+    )
+    stats = {
+        "density_evals": R * S,
+        "color_evals": R * A,
+        "color_eval_fraction": A / S,
+    }
+    return rgb, stats
+
+
+def render_naive_reduced(
+    fns: FieldFns, origins, dirs, n_samples: int, factor: int = 2, key=None,
+):
+    """The paper's Fig. 9(b) strawman: just use n_samples // factor samples
+    (both density AND color MLP run on the reduced set)."""
+    from . import pipeline
+
+    rgb, _ = pipeline.render_fixed_fns(
+        fns, origins, dirs, n_samples // factor, key
+    )
+    return rgb
+
+
+def mlp_flops_saved(cfg, n_samples: int, group: int) -> dict:
+    """Analytic MLP-FLOP reduction from decoupling (paper: 46% at n=2 with
+    the 92%-color-share MLP)."""
+    from . import mlp as mlp_lib
+
+    f = mlp_lib.flops_per_sample(cfg.net)
+    full = n_samples * (f["density_flops"] + f["color_flops"])
+    anchors = -(-n_samples // group)  # ceil
+    dec = n_samples * f["density_flops"] + anchors * f["color_flops"]
+    return {
+        "full_mlp_flops": full,
+        "decoupled_mlp_flops": dec,
+        "reduction_fraction": 1.0 - dec / full,
+    }

@@ -1,0 +1,40 @@
+"""Field abstraction — the composability seam of the renderer.
+
+Everything downstream of sampling (decoupling, adaptive probing, the
+two-phase ASDR pipeline, the Pallas volume-render kernel driver) consumes a
+``FieldFns`` pair instead of a concrete model, so the same pipeline runs
+
+  * the trained Instant-NGP network      (``model.field_fns``),
+  * the exact analytic scene field       (``analytic_field_fns``) — used by
+    tests to validate the *algorithm* independently of training error,
+  * a Pallas-kernel-backed fused network (``kernels.ops.field_fns``).
+
+``density(points) -> (sigma (N,), geo (N, G))`` and
+``color(geo, dirs) -> rgb (N, 3)``.  For analytic fields the "geo feature"
+is simply the ground-truth color and ``color`` is a projection.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Tuple
+
+import jax.numpy as jnp
+
+
+class FieldFns(NamedTuple):
+    density: Callable  # (N,3) -> (sigma (N,), geo (N,G))
+    color: Callable    # (geo (N,G), dirs (N,3)) -> rgb (N,3)
+
+
+def analytic_field_fns(field) -> FieldFns:
+    """Wrap an analytic ``scene.Field`` (points -> (sigma, color))."""
+
+    def density(points):
+        sigma, color = field(points)
+        inside = jnp.all((points >= 0.0) & (points <= 1.0), axis=-1)
+        return jnp.where(inside, sigma, 0.0), color
+
+    def color(geo, dirs):
+        del dirs
+        return geo
+
+    return FieldFns(density=density, color=color)

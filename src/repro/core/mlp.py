@@ -1,0 +1,140 @@
+"""Instant-NGP's density and color MLPs + spherical-harmonics direction encoding.
+
+Shapes follow the paper (§4.3 / Fig. 6b): the density network maps the
+32-d grid encoding to [density, 15-d geometry feature]; the color network
+consumes [geometry feature, SH(dir)] and emits RGB.  The color network is
+~92% of MLP FLOPs (paper §3, Challenge 2) — `flops_per_sample` below lets
+benchmarks report that split exactly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class MLPConfig:
+    encoding_dim: int = 32          # n_levels * feature_dim
+    density_hidden: int = 64
+    density_layers: int = 1         # hidden layers
+    geo_feature_dim: int = 15
+    sh_degree: int = 4              # 16 SH components
+    color_hidden: int = 64
+    color_layers: int = 2           # hidden layers
+
+    @property
+    def sh_dim(self) -> int:
+        return self.sh_degree**2
+
+    @property
+    def color_input_dim(self) -> int:
+        return self.geo_feature_dim + self.sh_dim
+
+
+def _dense_init(key, fan_in, fan_out, dtype):
+    scale = jnp.sqrt(6.0 / (fan_in + fan_out))
+    return jax.random.uniform(key, (fan_in, fan_out), dtype, -scale, scale)
+
+
+def init_mlps(key: jax.Array, cfg: MLPConfig, dtype=jnp.float32) -> Dict:
+    keys = jax.random.split(key, 8)
+    d_sizes = (
+        [cfg.encoding_dim]
+        + [cfg.density_hidden] * cfg.density_layers
+        + [1 + cfg.geo_feature_dim]
+    )
+    c_sizes = (
+        [cfg.color_input_dim] + [cfg.color_hidden] * cfg.color_layers + [3]
+    )
+    density = [
+        _dense_init(keys[i], d_sizes[i], d_sizes[i + 1], dtype)
+        for i in range(len(d_sizes) - 1)
+    ]
+    color = [
+        _dense_init(keys[4 + i], c_sizes[i], c_sizes[i + 1], dtype)
+        for i in range(len(c_sizes) - 1)
+    ]
+    return {"density": density, "color": color}
+
+
+def _mlp_forward(ws, x, final_act=None):
+    for i, w in enumerate(ws):
+        x = x @ w
+        if i < len(ws) - 1:
+            x = jax.nn.relu(x)
+    return final_act(x) if final_act is not None else x
+
+
+def trunc_exp(x):
+    """Numerically-safe exp used by Instant-NGP for density activation."""
+    return jnp.exp(jnp.clip(x, -15.0, 15.0))
+
+
+def density_apply(params: Dict, encoding: jnp.ndarray):
+    """(N, encoding_dim) -> (sigma (N,), geo_feat (N, geo_feature_dim))."""
+    out = _mlp_forward(params["density"], encoding)
+    sigma = trunc_exp(out[..., 0])
+    return sigma, out[..., 1:]
+
+
+def sh_encode(dirs: jnp.ndarray, degree: int = 4) -> jnp.ndarray:
+    """Real spherical harmonics up to `degree` (degree<=4 -> 16 dims).
+
+    dirs: (N, 3) unit vectors.
+    """
+    x, y, z = dirs[..., 0], dirs[..., 1], dirs[..., 2]
+    xx, yy, zz = x * x, y * y, z * z
+    xy, yz, xz = x * y, y * z, x * z
+    comps = [jnp.full_like(x, 0.28209479177387814)]
+    if degree > 1:
+        comps += [
+            -0.48860251190291987 * y,
+            0.48860251190291987 * z,
+            -0.48860251190291987 * x,
+        ]
+    if degree > 2:
+        comps += [
+            1.0925484305920792 * xy,
+            -1.0925484305920792 * yz,
+            0.94617469575755997 * zz - 0.31539156525251999,
+            -1.0925484305920792 * xz,
+            0.54627421529603959 * (xx - yy),
+        ]
+    if degree > 3:
+        comps += [
+            0.59004358992664352 * y * (-3.0 * xx + yy),
+            2.8906114426405538 * xy * z,
+            0.45704579946446572 * y * (1.0 - 5.0 * zz),
+            0.3731763325901154 * z * (5.0 * zz - 3.0),
+            0.45704579946446572 * x * (1.0 - 5.0 * zz),
+            1.4453057213202769 * z * (xx - yy),
+            0.59004358992664352 * x * (-xx + 3.0 * yy),
+        ]
+    return jnp.stack(comps, axis=-1)
+
+
+def color_apply(params: Dict, geo_feat: jnp.ndarray, dirs: jnp.ndarray, sh_degree: int = 4):
+    """(N, geo) x (N, 3) -> rgb (N, 3) in [0, 1]."""
+    sh = sh_encode(dirs, sh_degree)
+    x = jnp.concatenate([geo_feat, sh], axis=-1)
+    return _mlp_forward(params["color"], x, final_act=jax.nn.sigmoid)
+
+
+def flops_per_sample(cfg: MLPConfig) -> Dict[str, float]:
+    """2*fan_in*fan_out per matmul row — reproduces the paper's 8%/92% split."""
+    d_sizes = (
+        [cfg.encoding_dim]
+        + [cfg.density_hidden] * cfg.density_layers
+        + [1 + cfg.geo_feature_dim]
+    )
+    c_sizes = [cfg.color_input_dim] + [cfg.color_hidden] * cfg.color_layers + [3]
+    d = sum(2 * a * b for a, b in zip(d_sizes[:-1], d_sizes[1:]))
+    c = sum(2 * a * b for a, b in zip(c_sizes[:-1], c_sizes[1:]))
+    return {
+        "density_flops": float(d),
+        "color_flops": float(c),
+        "color_fraction": c / (c + d),
+    }

@@ -1,0 +1,139 @@
+"""Locality profiling & cache simulation — paper Figs. 4, 8, 15, 22 (§5.2.2).
+
+The paper motivates its register-based cache and hybrid address mapping by
+profiling (a) hash-address irregularity (Fig. 4), (b) color similarity of
+adjacent samples (Fig. 8), (c) inter-ray / intra-ray voxel repetition
+(Fig. 15), and (d) cache-size sensitivity (Fig. 22).  This module computes
+each profile for our scenes/models; benchmarks/locality.py and
+benchmarks/reuse_cache.py report them.
+
+On TPU the "register cache" becomes tile-local gather dedup (DESIGN.md §2);
+``dedup_window_rate`` measures exactly the win available to a tile of a
+given size, which is how we size the Pallas encode kernel's block.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Dict, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import hashgrid
+
+
+def hash_address_trace(points: jnp.ndarray, cfg: hashgrid.HashGridConfig,
+                       level: int) -> np.ndarray:
+    """Table-row addresses of the 8 corners for consecutive points (Fig. 4).
+
+    Returns (N, 8) int32 addresses for the given level.
+    """
+    res = cfg.level_resolution(level)
+    scaled = points * res
+    base = jnp.clip(jnp.floor(scaled).astype(jnp.int32), 0, res - 1)
+    corners = base[:, None, :] + hashgrid._corner_offsets()[None, :, :]
+    idx = hashgrid.level_indices(
+        corners, res, cfg.level_is_dense(level), cfg.table_size
+    )
+    return np.asarray(idx)
+
+
+def adjacent_color_cosine(colors: jnp.ndarray) -> np.ndarray:
+    """Cosine similarity between colors of adjacent samples along rays.
+
+    colors: (R, S, 3).  Returns flat array of cosines (Fig. 8: paper finds
+    >95% of mass near 1).
+    """
+    a = np.asarray(colors[:, :-1])
+    b = np.asarray(colors[:, 1:])
+    num = (a * b).sum(-1)
+    den = np.linalg.norm(a, axis=-1) * np.linalg.norm(b, axis=-1) + 1e-9
+    return (num / den).reshape(-1)
+
+
+def inter_ray_repetition(points_a: jnp.ndarray, points_b: jnp.ndarray,
+                         cfg: hashgrid.HashGridConfig) -> np.ndarray:
+    """Fraction of ray-b samples whose voxel (per level) also appears on
+    ray-a (Fig. 15a: neighboring rays share >90% of voxels at low res).
+
+    points_*: (S, 3) samples of two neighboring rays.
+    Returns (n_levels,) repetition rates.
+    """
+    ids_a = np.asarray(hashgrid.level_voxel_ids(points_a, cfg))
+    ids_b = np.asarray(hashgrid.level_voxel_ids(points_b, cfg))
+    rates = []
+    for l in range(cfg.n_levels):
+        rates.append(np.isin(ids_b[:, l], ids_a[:, l]).mean())
+    return np.asarray(rates)
+
+
+def intra_ray_max_voxel_count(points: jnp.ndarray,
+                              cfg: hashgrid.HashGridConfig) -> np.ndarray:
+    """Max #samples sharing one voxel, per level (Fig. 15b: 98/192 at L0)."""
+    ids = np.asarray(hashgrid.level_voxel_ids(points, cfg))
+    out = []
+    for l in range(cfg.n_levels):
+        _, counts = np.unique(ids[:, l], return_counts=True)
+        out.append(counts.max())
+    return np.asarray(out)
+
+
+def lru_cache_hit_rate(addresses: np.ndarray, cache_items: int) -> float:
+    """Simulate the paper's per-table LRU register cache (Fig. 22).
+
+    addresses: flat int array in access order.  Returns hit rate.
+    """
+    if cache_items <= 0:
+        return 0.0
+    cache: OrderedDict = OrderedDict()
+    hits = 0
+    for a in addresses.reshape(-1).tolist():
+        if a in cache:
+            hits += 1
+            cache.move_to_end(a)
+        else:
+            cache[a] = True
+            if len(cache) > cache_items:
+                cache.popitem(last=False)
+    return hits / max(addresses.size, 1)
+
+
+def cache_sweep(points: jnp.ndarray, cfg: hashgrid.HashGridConfig,
+                sizes: Sequence[int] = (0, 2, 4, 8, 16, 32)) -> Dict[int, np.ndarray]:
+    """Hit rate per (cache size, level) — reproduces Fig. 22's shape."""
+    out = {}
+    for s in sizes:
+        rates = []
+        for l in range(cfg.n_levels):
+            tr = hash_address_trace(points, cfg, l)
+            rates.append(lru_cache_hit_rate(tr, s))
+        out[s] = np.asarray(rates)
+    return out
+
+
+def dedup_window_rate(points: jnp.ndarray, cfg: hashgrid.HashGridConfig,
+                      window: int, level: int) -> float:
+    """Fraction of corner-gathers inside a `window`-sample tile that are
+    duplicates of an earlier gather in the same tile.
+
+    This is the available win for the Pallas encode kernel's tile-local
+    staging buffer (the TPU analogue of the register cache): a rate of r
+    means the kernel needs only (1-r) of the naive HBM gather traffic.
+    """
+    tr = hash_address_trace(points, cfg, level)  # (N, 8)
+    N = tr.shape[0]
+    dup = 0
+    total = 0
+    for s in range(0, N, window):
+        tile = tr[s : s + window].reshape(-1)
+        total += tile.size
+        dup += tile.size - np.unique(tile).size
+    return dup / max(total, 1)
+
+
+def gather_bytes(n_points: int, cfg: hashgrid.HashGridConfig,
+                 dedup_rate: float = 0.0, bytes_per_feat: int = 4) -> float:
+    """Embedding-gather traffic for n_points samples (all levels, 8 corners),
+    optionally after dedup — the paper's 'data access' currency."""
+    per_point = cfg.n_levels * 8 * cfg.feature_dim * bytes_per_feat
+    return n_points * per_point * (1.0 - dedup_rate)

@@ -1,0 +1,115 @@
+"""Instant-NGP training on analytic scenes (the substrate the paper assumes).
+
+The paper accelerates *inference* of a trained Instant-NGP; training is the
+substrate we must build ourselves (task spec: "build every substrate the
+paper depends on").  We train on procedural analytic scenes (scene.py) by
+photometric MSE against analytically-rendered reference rays, with AdamW
+(optim/) and stratified ray-batch sampling from a pool of camera views.
+
+``train_ngp`` is what benchmarks/ and examples/ call to obtain the model
+that the ASDR pipeline then renders.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .. import optim
+from . import model as model_lib
+from . import scene as scene_lib
+
+
+@dataclasses.dataclass(frozen=True)
+class NGPTrainConfig:
+    scene: str = "lego"
+    steps: int = 300
+    batch_rays: int = 1024
+    n_samples: int = 48
+    lr: float = 5e-3
+    n_views: int = 12
+    view_hw: Tuple[int, int] = (96, 96)
+    seed: int = 0
+    log_every: int = 50
+
+
+def _make_view_rays(cfg: NGPTrainConfig, field):
+    """Pre-render reference colors for rays from a ring of training views."""
+    all_o, all_d, all_c = [], [], []
+    rng = np.random.default_rng(cfg.seed)
+    for v in range(cfg.n_views):
+        theta = 2.0 * np.pi * v / cfg.n_views + rng.uniform(0, 0.1)
+        phi = rng.uniform(0.35, 0.8)
+        cam = scene_lib.look_at_camera(*cfg.view_hw, theta=theta, phi=phi)
+        o, d = scene_lib.camera_rays(cam)
+        ref, _ = scene_lib.render_reference(field, o, d)
+        all_o.append(np.asarray(o))
+        all_d.append(np.asarray(d))
+        all_c.append(np.asarray(ref))
+    return (
+        jnp.asarray(np.concatenate(all_o)),
+        jnp.asarray(np.concatenate(all_d)),
+        jnp.asarray(np.concatenate(all_c)),
+    )
+
+
+def make_train_step(cfg: NGPTrainConfig, model_cfg: model_lib.NGPConfig,
+                    opt_cfg: optim.AdamWConfig):
+    def loss_fn(params, o, d, ref, key):
+        rgb, _ = model_lib.render_fixed(
+            params, model_cfg, o, d, cfg.n_samples, key
+        )
+        return jnp.mean((rgb - ref) ** 2)
+
+    @jax.jit
+    def step(params, opt_state, o, d, ref, key, lr):
+        loss, grads = jax.value_and_grad(loss_fn)(params, o, d, ref, key)
+        grads, _ = optim.clip_by_global_norm(grads, 1.0)
+        params, opt_state = optim.adamw_update(
+            grads, opt_state, params, opt_cfg, lr
+        )
+        return params, opt_state, loss
+
+    return step
+
+
+def train_ngp(cfg: NGPTrainConfig = NGPTrainConfig(),
+              model_cfg: model_lib.NGPConfig | None = None,
+              verbose: bool = True):
+    """Train and return (params, model_cfg, field, history)."""
+    model_cfg = model_cfg or model_lib.NGPConfig.small()
+    field = scene_lib.make_scene(cfg.scene)
+    key = jax.random.PRNGKey(cfg.seed)
+    key, init_key = jax.random.split(key)
+    params = model_lib.init_ngp(init_key, model_cfg)
+
+    opt_cfg = optim.AdamWConfig(lr=cfg.lr, b2=0.99, eps=1e-15)
+    opt_state = optim.adamw_init(params, opt_cfg)
+    sched = optim.cosine_schedule(cfg.lr, cfg.steps)
+
+    o, d, ref = _make_view_rays(cfg, field)
+    n_rays = o.shape[0]
+    step = make_train_step(cfg, model_cfg, opt_cfg)
+
+    history = []
+    t0 = time.time()
+    for i in range(cfg.steps):
+        key, bkey, skey = jax.random.split(key, 3)
+        idx = jax.random.randint(bkey, (cfg.batch_rays,), 0, n_rays)
+        params, opt_state, loss = step(
+            params, opt_state, o[idx], d[idx], ref[idx],
+            skey, sched(jnp.asarray(i)),
+        )
+        if i % cfg.log_every == 0 or i == cfg.steps - 1:
+            history.append((i, float(loss)))
+            if verbose:
+                print(
+                    f"[train_ngp {cfg.scene}] step {i:4d} "
+                    f"loss {float(loss):.5f} ({time.time()-t0:.1f}s)"
+                )
+    return params, model_cfg, field, history

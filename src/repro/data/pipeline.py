@@ -1,0 +1,89 @@
+"""Deterministic-by-step data pipelines.
+
+Restart/straggler posture: every batch is a pure function of
+(seed, step) — a restarted or rescheduled worker replays the exact same
+stream with no data loss or duplication, and there is no shared queue to
+drain (see DESIGN.md §5 fault tolerance).  This is the standard recipe for
+reproducible large-scale training (deterministic index shuffling keyed by
+step) realized with JAX PRNG folding.
+
+TokenPipeline synthesizes language-model token batches with realistic
+statistics: Zipfian unigram draws mixed with short repeated "phrases"
+(so models can actually reduce loss by learning bigram structure —
+pure-uniform tokens would pin CE at ln(V)).
+
+RayPipeline yields (origin, direction, reference color) ray batches from
+the analytic scenes for Instant-NGP training (the paper's substrate).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class TokenPipeline:
+    vocab: int
+    batch: int
+    seq_len: int
+    seed: int = 0
+    zipf_exponent: float = 1.1
+    phrase_len: int = 8
+
+    def batch_at(self, step: int) -> jnp.ndarray:
+        """(batch, seq_len) int32 — pure function of (seed, step)."""
+        key = jax.random.fold_in(jax.random.PRNGKey(self.seed), step)
+        k1, k2, k3 = jax.random.split(key, 3)
+        # zipf via inverse-CDF on uniform (ranks 1..V)
+        u = jax.random.uniform(k1, (self.batch, self.seq_len),
+                               minval=1e-6, maxval=1.0)
+        ranks = jnp.floor(
+            (self.vocab ** (1.0 - self.zipf_exponent) * u
+             + (1 - u)) ** (1.0 / (1.0 - self.zipf_exponent))
+        )
+        tokens = jnp.clip(ranks.astype(jnp.int32) - 1, 0, self.vocab - 1)
+        # inject learnable structure: every phrase repeats its first half
+        P = self.phrase_len
+        S = self.seq_len // P * P
+        t = tokens[:, :S].reshape(self.batch, -1, P)
+        t = jnp.concatenate([t[:, :, : P // 2], t[:, :, : P - P // 2]], axis=-1)
+        tokens = tokens.at[:, :S].set(t.reshape(self.batch, S))
+        return tokens
+
+    def __iter__(self) -> Iterator[jnp.ndarray]:
+        step = 0
+        while True:
+            yield self.batch_at(step)
+            step += 1
+
+
+@dataclasses.dataclass(frozen=True)
+class RayPipeline:
+    """Ray batches for NGP training, deterministic by step."""
+    scene: str = "lego"
+    batch: int = 1024
+    n_views: int = 12
+    view_hw: Tuple[int, int] = (96, 96)
+    seed: int = 0
+
+    def materialize(self):
+        """Precompute the ray pool (host-side, done once)."""
+        from ..core import scene as scene_lib
+        from ..core.train import NGPTrainConfig, _make_view_rays
+
+        cfg = NGPTrainConfig(
+            scene=self.scene, n_views=self.n_views,
+            view_hw=self.view_hw, seed=self.seed,
+        )
+        field = scene_lib.make_scene(self.scene)
+        return _make_view_rays(cfg, field)
+
+    def batch_at(self, step: int, pool) -> Tuple[jnp.ndarray, ...]:
+        o, d, c = pool
+        key = jax.random.fold_in(jax.random.PRNGKey(self.seed), step)
+        idx = jax.random.randint(key, (self.batch,), 0, o.shape[0])
+        return o[idx], d[idx], c[idx]

@@ -1,0 +1,216 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Each wrapper owns the padding/layout contract documented in the kernel
+modules and exposes the *logical* shapes used by core/:
+
+  hash_encode(points, tables, cfg)        -> (N, L*F)
+  density_mlp(enc, params, cfg)           -> (sigma (N,), geo (N, G))
+  color_mlp(geo, dirs, params, cfg)       -> rgb (N, 3)
+  fused_field(points|enc, ...)            -> (sigma, rgb)
+  volume_render(sigmas, anchors, deltas, group) -> (rgb, acc)
+
+``field_fns(params, cfg)`` returns a kernels-backed FieldFns so the whole
+ASDR pipeline (core/pipeline.py) can run on the kernel path; tests assert
+it matches the pure-jnp model path.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import mlp as mlp_lib
+from ..core.fields import FieldFns
+from . import fused_mlp as FM
+from . import hash_encode as HE
+from . import volume_render as VR
+
+# interpret=True everywhere in this container (CPU validation); flip on TPU.
+INTERPRET = True
+
+
+def _pad_rows(x, mult):
+    pad = (-x.shape[0]) % mult
+    if pad:
+        x = jnp.concatenate(
+            [x, jnp.zeros((pad,) + x.shape[1:], x.dtype)], axis=0
+        )
+    return x, pad
+
+
+def _pad_cols(x, width):
+    if x.shape[-1] < width:
+        x = jnp.concatenate(
+            [x, jnp.zeros(x.shape[:-1] + (width - x.shape[-1],), x.dtype)],
+            axis=-1,
+        )
+    return x
+
+
+# ---------------------------------------------------------------- hash encode
+def grid_meta(cfg) -> jnp.ndarray:
+    """(L, 8) int32 metadata rows: [res, is_dense, table_rows, 0, ...]."""
+    rows = []
+    for l in range(cfg.n_levels):
+        res = cfg.level_resolution(l)
+        rows.append([res, int(cfg.level_is_dense(l)), cfg.table_size,
+                     0, 0, 0, 0, 0])
+    return jnp.asarray(rows, jnp.int32)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def _hash_encode_padded(points_padded, meta, tables, interpret=INTERPRET):
+    return HE.hash_encode_call(points_padded, meta, tables, interpret)
+
+
+def hash_encode(points, tables, cfg, interpret: bool = INTERPRET):
+    """points (N,3) in [0,1] -> encoding (N, L*F), matching hashgrid.encode."""
+    n = points.shape[0]
+    pts = _pad_cols(points.astype(jnp.float32), HE.PPAD)
+    pts, _ = _pad_rows(pts, HE.TILE)
+    feats = _hash_encode_padded(pts, grid_meta(cfg), tables,
+                                interpret=interpret)     # (L, Np, F)
+    feats = feats[:, :n]                                  # strip row pad
+    L, _, F = feats.shape
+    return jnp.transpose(feats, (1, 0, 2)).reshape(n, L * F)
+
+
+# ------------------------------------------------------------------ fused MLP
+def pack_density_weights(params: Dict, cfg: mlp_lib.MLPConfig) -> jnp.ndarray:
+    """Pad density weights to (nd, P, P); permute the last layer's output
+    columns to [geo(0..G-1), sigma(G)] so no lane shift is needed in-kernel."""
+    G = cfg.geo_feature_dim
+    ws = []
+    for i, w in enumerate(params["density"]):
+        w = w.astype(jnp.float32)
+        if i == len(params["density"]) - 1:
+            # original cols: [sigma, geo...] -> new: [geo..., sigma]
+            w = jnp.concatenate([w[:, 1 : 1 + G], w[:, :1]], axis=1)
+        wp = jnp.zeros((FM.P, FM.P), jnp.float32)
+        wp = wp.at[: w.shape[0], : w.shape[1]].set(w)
+        ws.append(wp)
+    return jnp.stack(ws)
+
+
+def pack_color_weights(params: Dict) -> jnp.ndarray:
+    """Pad color weights to (nc, P, P) — input layout [geo, sh] is already
+    contiguous so only zero-padding is needed."""
+    ws = []
+    for w in params["color"]:
+        w = w.astype(jnp.float32)
+        wp = jnp.zeros((FM.P, FM.P), jnp.float32)
+        wp = wp.at[: w.shape[0], : w.shape[1]].set(w)
+        ws.append(wp)
+    return jnp.stack(ws)
+
+
+def _sh_padded(dirs, cfg: mlp_lib.MLPConfig):
+    """SH(dirs) placed at cols [G, G+sh_dim) of a (N, P) buffer."""
+    sh = mlp_lib.sh_encode(dirs, cfg.sh_degree).astype(jnp.float32)
+    n = sh.shape[0]
+    buf = jnp.zeros((n, FM.P), jnp.float32)
+    return buf.at[:, cfg.geo_feature_dim : cfg.geo_feature_dim + sh.shape[1]].set(sh)
+
+
+@partial(jax.jit, static_argnames=("geo_dim", "interpret"))
+def _fused_field_padded(enc, sh, wd, wc, geo_dim, interpret=INTERPRET):
+    return FM.fused_field_call(enc, sh, wd, wc, geo_dim, interpret)
+
+
+def fused_field(enc, dirs, params: Dict, cfg: mlp_lib.MLPConfig,
+                interpret: bool = INTERPRET):
+    """(enc (N,D), dirs (N,3)) -> (sigma (N,), rgb (N,3), geo (N,G))."""
+    n = enc.shape[0]
+    G = cfg.geo_feature_dim
+    encp = _pad_cols(enc.astype(jnp.float32), FM.P)
+    encp, _ = _pad_rows(encp, FM.TILE)
+    shp, _ = _pad_rows(_sh_padded(dirs, cfg), FM.TILE)
+    wd = pack_density_weights(params, cfg)
+    wc = pack_color_weights(params)
+    out = _fused_field_padded(encp, shp, wd, wc, G, interpret=interpret)[:n]
+    return out[:, 0], out[:, 1:4], out[:, 4 : 4 + G]
+
+
+@partial(jax.jit, static_argnames=("geo_dim", "interpret"))
+def _density_padded(enc, wd, geo_dim, interpret=INTERPRET):
+    return FM.density_call(enc, wd, geo_dim, interpret)
+
+
+def density_mlp(enc, params: Dict, cfg: mlp_lib.MLPConfig,
+                interpret: bool = INTERPRET):
+    """enc (N, D) -> (sigma (N,), geo (N, G))."""
+    n = enc.shape[0]
+    G = cfg.geo_feature_dim
+    encp = _pad_cols(enc.astype(jnp.float32), FM.P)
+    encp, _ = _pad_rows(encp, FM.TILE)
+    wd = pack_density_weights(params, cfg)
+    out = _density_padded(encp, wd, G, interpret=interpret)[:n]
+    return out[:, 0], out[:, 1 : 1 + G]
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def _color_padded(cin, wc, interpret=INTERPRET):
+    return FM.color_call(cin, wc, interpret)
+
+
+def color_mlp(geo, dirs, params: Dict, cfg: mlp_lib.MLPConfig,
+              interpret: bool = INTERPRET):
+    """(geo (N,G), dirs (N,3)) -> rgb (N,3)."""
+    n = geo.shape[0]
+    G = cfg.geo_feature_dim
+    cin = _sh_padded(dirs, cfg).at[:, :G].set(geo.astype(jnp.float32))
+    cin, _ = _pad_rows(cin, FM.TILE)
+    wc = pack_color_weights(params)
+    out = _color_padded(cin, wc, interpret=interpret)[:n]
+    return out[:, :3]
+
+
+# -------------------------------------------------------------- volume render
+def volume_render(sigmas, anchor_colors, deltas, group: int,
+                  valid=None, white_background: bool = True,
+                  interpret: bool = INTERPRET):
+    """Decoupled compositing. sigmas/deltas (R,S), anchors (R,A,3) with
+    A = ceil(S/group) -> (rgb (R,3), acc (R,))."""
+    R, S = sigmas.shape
+    A = anchor_colors.shape[1]
+    s_pad = -(-S // 128) * 128
+    a_pad = -(-A // 128) * 128
+
+    sig = sigmas.astype(jnp.float32)
+    if valid is not None:
+        sig = jnp.where(valid, sig, 0.0)
+    sig = _pad_cols(sig, s_pad)
+    dlt = _pad_cols(deltas.astype(jnp.float32), s_pad)
+    anch = jnp.transpose(anchor_colors.astype(jnp.float32), (0, 2, 1))  # (R,3,A)
+    anch = _pad_cols(anch, a_pad).reshape(R, 3 * a_pad)
+
+    sig, _ = _pad_rows(sig, VR.RTILE)
+    dlt, _ = _pad_rows(dlt, VR.RTILE)
+    anch, _ = _pad_rows(anch, VR.RTILE)
+    E = VR.expansion_matrix(S, s_pad, A, a_pad, group)
+
+    out = VR.volume_render_call(sig, dlt, anch, E, a_pad, interpret)[:R]
+    acc = out[:, 0]
+    rgb = out[:, 1:4]
+    if white_background:
+        rgb = rgb + (1.0 - acc[:, None])
+    return rgb, acc
+
+
+# ------------------------------------------------------------------- FieldFns
+def field_fns(params: Dict, cfg) -> FieldFns:
+    """Kernel-backed FieldFns (cfg is core.model.NGPConfig)."""
+
+    def density(points):
+        enc = hash_encode(points, params["grid"], cfg.grid)
+        sigma, geo = density_mlp(enc, params["mlps"], cfg.net)
+        inside = jnp.all((points >= 0.0) & (points <= 1.0), axis=-1)
+        return jnp.where(inside, sigma, 0.0), geo
+
+    def color(geo, dirs):
+        return color_mlp(geo, dirs, params["mlps"], cfg.net)
+
+    return FieldFns(density=density, color=color)

@@ -1,0 +1,134 @@
+"""Production-mesh steps for the paper's own model (ingp-asdr, 11th config).
+
+The ASDR renderer and NGP trainer run through the same launcher/dry-run
+path as the LM zoo — the paper's technique as a first-class feature:
+
+  * ``asdr_render``: Phase II of an 800x800 frame — rays + per-pixel
+    counts (Phase I output) sharded over (pod, data); difficulty-sorted
+    blocks march in a chunked while_loop with early termination; the
+    color MLP runs on every ``group``-th sample only (§4.3).
+  * ``asdr_train``: photometric training step over 2^18 rays — grid
+    tables sharded over ``model`` rows (the Mem-Xbar distribution
+    analogue: each model shard owns a slice of every level's table and
+    GSPMD turns lookups into partial-gather + psum), ray batch over
+    (pod, data), AdamW update.
+
+Both lower with ShapeDtypeStructs only (no allocation), like every LM cell.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from .. import optim
+from ..core import model as model_lib
+from ..core import pipeline, scene
+from ..core.model import NGPConfig
+
+
+RENDER_HW = (800, 800)          # paper's Synthetic-NeRF resolution
+RENDER_BLOCK = 4096
+TRAIN_RAYS = 1 << 18
+TRAIN_SAMPLES = 128
+
+
+def _batch_spec(mesh):
+    axes = [a for a in ("pod", "data") if a in mesh.axis_names]
+    return tuple(axes) if len(axes) > 1 else axes[0]
+
+
+def param_shardings(cfg: NGPConfig, mesh, shard_tables: bool):
+    table_spec = P(None, "model", None) if shard_tables else P()
+    return {
+        "grid": NamedSharding(mesh, table_spec),
+        "mlps": {
+            "density": [NamedSharding(mesh, P()) for _ in range(2)],
+            "color": [NamedSharding(mesh, P()) for _ in range(
+                4 if cfg.net.color_layers == 3 else 3)],
+        },
+    }
+
+
+def abstract_params(cfg: NGPConfig):
+    return jax.eval_shape(
+        lambda k: model_lib.init_ngp(k, cfg), jax.random.PRNGKey(0)
+    )
+
+
+def build_render_cell(bundle, mesh, variant: str = "baseline"):
+    """baseline: grid tables sharded over `model` rows (the literal Mem-Xbar
+    distribution — every voxel-corner lookup crosses shards).
+    opt (§Perf): the paper's OWN §5.2.1 insight re-targeted at TPU — the
+    tables are small enough (67 MB) to REPLICATE per chip, exactly like the
+    paper replicates de-hashed low-res tables into spare crossbar rows:
+    lookups become chip-local and the gather collectives disappear."""
+    cfg = bundle.model
+    acfg = bundle.asdr
+    H, W = RENDER_HW
+    R = -(-H * W // RENDER_BLOCK) * RENDER_BLOCK  # pad to block multiple
+
+    def render(params, origins, dirs, counts):
+        fns = model_lib.field_fns(params, cfg)
+        import dataclasses
+
+        a = dataclasses.replace(acfg, block_size=RENDER_BLOCK)
+        rgb, acc, stats = pipeline.render_adaptive(fns, a, origins, dirs,
+                                                   counts)
+        return rgb
+
+    b = _batch_spec(mesh)
+    p_sh = param_shardings(cfg, mesh, shard_tables=(variant != "opt"))
+    ray_sh = NamedSharding(mesh, P(b, None))
+    cnt_sh = NamedSharding(mesh, P(b))
+    jitted = jax.jit(render, in_shardings=(p_sh, ray_sh, ray_sh, cnt_sh))
+    args = (
+        abstract_params(cfg),
+        jax.ShapeDtypeStruct((R, 3), jnp.float32),
+        jax.ShapeDtypeStruct((R, 3), jnp.float32),
+        jax.ShapeDtypeStruct((R,), jnp.int32),
+    )
+    return jitted, args, {"scan_multiplier": R // RENDER_BLOCK,
+                          "rays": R, "block": RENDER_BLOCK}
+
+
+def build_train_cell_ngp(bundle, mesh):
+    cfg = bundle.model
+    opt_cfg = optim.AdamWConfig(lr=5e-3, b2=0.99, eps=1e-15)
+
+    def step(params, opt_state, origins, dirs, ref, lr):
+        def loss_fn(p):
+            rgb, _ = model_lib.render_fixed(
+                p, cfg, origins, dirs, TRAIN_SAMPLES
+            )
+            return jnp.mean((rgb - ref) ** 2)
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        grads, _ = optim.clip_by_global_norm(grads, 1.0)
+        params, opt_state = optim.adamw_update(
+            grads, opt_state, params, opt_cfg, lr
+        )
+        return params, opt_state, loss
+
+    b = _batch_spec(mesh)
+    p_sh = param_shardings(cfg, mesh, shard_tables=True)
+    o_sh = {"m": p_sh, "v": p_sh,
+            "count": NamedSharding(mesh, P())}
+    ray_sh = NamedSharding(mesh, P(b, None))
+    scalar = NamedSharding(mesh, P())
+    jitted = jax.jit(
+        step,
+        in_shardings=(p_sh, o_sh, ray_sh, ray_sh, ray_sh, scalar),
+        out_shardings=(p_sh, o_sh, None),
+    )
+    params_abs = abstract_params(cfg)
+    opt_abs = jax.eval_shape(lambda p: optim.adamw_init(p, opt_cfg),
+                             params_abs)
+    args = (
+        params_abs, opt_abs,
+        jax.ShapeDtypeStruct((TRAIN_RAYS, 3), jnp.float32),
+        jax.ShapeDtypeStruct((TRAIN_RAYS, 3), jnp.float32),
+        jax.ShapeDtypeStruct((TRAIN_RAYS, 3), jnp.float32),
+        jax.ShapeDtypeStruct((), jnp.float32),
+    )
+    return jitted, args, {"scan_multiplier": 1, "rays": TRAIN_RAYS}

@@ -1,0 +1,44 @@
+"""Production mesh builders.
+
+``make_production_mesh`` is a FUNCTION (never a module-level constant) so
+importing this module never touches jax device state — the dry-run sets
+XLA_FLAGS before any jax import and only then calls it.
+
+Mesh shapes:
+  single-pod : (16, 16)        axes (data, model)   = 256 chips (one v5e pod)
+  multi-pod  : (2, 16, 16)     axes (pod, data, model) = 512 chips
+
+Axis roles: ``data`` = DP + ZeRO/FSDP (+ sequence parallelism for the
+long-context serve cells); ``model`` = TP/EP; ``pod`` = cross-pod DP over
+the slower inter-pod links (the axis gradient compression targets).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = 1
+    for s in shape:
+        n *= s
+    devices = jax.devices()[:n]
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, found {len(devices)} — "
+            "set XLA_FLAGS=--xla_force_host_platform_device_count=512 "
+            "before importing jax (launch/dryrun.py does this)"
+        )
+    import numpy as np
+
+    dev_array = np.asarray(devices).reshape(shape)
+    return jax.sharding.Mesh(dev_array, axes)
+
+
+def make_test_mesh(shape=(2, 2), axes=("data", "model")):
+    """Small mesh for CI tests (requires >=4 host devices)."""
+    import numpy as np
+
+    n = int(np.prod(shape))
+    return jax.sharding.Mesh(np.asarray(jax.devices()[:n]).reshape(shape), axes)

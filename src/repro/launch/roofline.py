@@ -1,0 +1,142 @@
+"""Roofline-term derivation from compiled dry-run artifacts.
+
+Three terms per (arch, shape, mesh), all in seconds:
+
+  compute    = HLO_FLOPs / (chips * peak_FLOPs)
+  memory     = HLO_bytes / (chips * HBM_bw)
+  collective = collective_bytes / (chips * link_bw)
+
+HLO_FLOPs / HLO_bytes come from ``compiled.cost_analysis()`` (whole-program
+totals, already per-partition under SPMD — see note below). collective
+bytes are NOT in cost_analysis: we parse the post-optimization HLO text and
+sum the *output* operand sizes of every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute.
+
+SPMD accounting note: XLA lowers to a single per-device program, so
+cost_analysis() reports per-device FLOPs/bytes; the roofline denominator is
+then per-chip peak (not multiplied by chips).  Collective bytes parsed from
+the HLO are likewise per-device payloads.
+
+Hardware constants (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1,
+    "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """'f32[16,128]' -> byte size; tuples handled by caller."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dtype, dims = m.group(1), m.group(2)
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str, body_multiplier: int = 1) -> Dict[str, int]:
+    """Sum output-shape bytes of every collective op in the HLO text.
+
+    XLA's HLO lists a while-loop (scan) body computation ONCE regardless of
+    trip count, so collectives inside scan bodies (the per-layer FSDP
+    all-gathers / TP all-reduces) are undercounted by the trip count.  We
+    therefore track which computation each collective appears in: ops in
+    the ENTRY computation count once; ops in any sub-computation are
+    multiplied by ``body_multiplier`` (the caller passes the structurally
+    known scan trip product, e.g. n_layers * microbatches for a train
+    step).  This slightly overcounts collectives in non-loop
+    sub-computations (rare) — documented in EXPERIMENTS.md.
+
+    Returns {op_kind: bytes, ..., "entry": b, "body_raw": b,
+             "total": corrected bytes, "count": n}.
+    """
+    out: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    entry_b = 0
+    body_b = 0
+    count = 0
+    in_entry = False
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if s.startswith("ENTRY "):
+            in_entry = True
+            continue
+        if s.startswith("}"):
+            in_entry = False
+            continue
+        m = re.match(r"[%\w.\-]+\s*=\s*(.+?)\s+([\w\-]+)\(", s)
+        if not m:
+            continue
+        shape_str, op = m.group(1), m.group(2)
+        kind = None
+        for c in _COLLECTIVES:
+            if op == c or op.startswith(c + "-"):  # e.g. all-reduce-start
+                kind = c
+                break
+        if kind is None:
+            continue
+        if op.endswith("-done"):
+            continue  # counted at -start
+        b = _shape_bytes(shape_str)
+        mult = 1 if in_entry else body_multiplier
+        out[kind] += b * mult
+        if in_entry:
+            entry_b += b
+        else:
+            body_b += b
+        count += 1
+    out["entry"] = entry_b
+    out["body_raw"] = body_b
+    out["total"] = entry_b + body_b * body_multiplier
+    out["count"] = count
+    return out
+
+
+def roofline_terms(flops: float, bytes_accessed: float,
+                   coll_bytes: float) -> Dict[str, float]:
+    compute = flops / PEAK_FLOPS
+    memory = bytes_accessed / HBM_BW
+    collective = coll_bytes / ICI_BW
+    terms = {
+        "compute_s": compute,
+        "memory_s": memory,
+        "collective_s": collective,
+    }
+    dom = max(terms, key=terms.get)
+    terms["bottleneck"] = dom.replace("_s", "")
+    total = max(compute, memory, collective)
+    terms["roofline_fraction_compute"] = compute / total if total else 0.0
+    return terms
+
+
+def model_flops(cfg, tokens: int, kind: str) -> float:
+    """MODEL_FLOPS = 6*N*D (train) or 2*N*D (inference fwd), N = active."""
+    n = cfg.active_param_count() if hasattr(cfg, "active_param_count") else 0
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * n * tokens

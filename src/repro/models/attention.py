@@ -1,0 +1,212 @@
+"""GQA attention: RoPE, qk-norm, logit softcap, sliding windows, KV caches.
+
+Three execution paths, all numerically equivalent (tests assert it):
+  * ``attend_full``    — reference O(S^2) masked attention (small S only).
+  * ``attend_chunked`` — flash-style online-softmax scan over KV chunks;
+    memory O(S * chunk) instead of O(S^2).  Used for train and prefill.
+  * ``decode_attend``  — one query token against a (possibly ring-buffer)
+    KV cache.
+
+Sliding windows: a per-layer ``window`` (0 = global) arrives as a traced
+scalar so the same compiled layer body serves gemma2's alternating and
+gemma3's 5:1 local:global patterns under ``lax.scan`` over layers.
+
+Caches: global layers use a linear cache (B, S_max, KV, Dh); local layers
+use a ring buffer of ``window`` slots — decode writes slot ``pos % window``
+and reconstructs absolute positions from slot ages, so a 500k-context
+stream holds only O(window) state for local layers (the sub-quadratic
+requirement of the ``long_500k`` cell).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+# ------------------------------------------------------------------- RoPE
+def rope_freqs(head_dim: int, theta: float):
+    return theta ** (-jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+
+
+def apply_rope(x, positions, theta: float = 10000.0):
+    """x (..., S, H, Dh), positions (..., S) int32."""
+    freqs = rope_freqs(x.shape[-1], theta)                    # (Dh/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs    # (..., S, Dh/2)
+    cos = jnp.cos(ang)[..., None, :]                          # (..., S, 1, Dh/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def _mask(q_pos, k_pos, window):
+    """Causal + optional sliding-window mask. window is a traced scalar
+    (0 = global).  q_pos (Q,), k_pos (K,) -> bool (Q, K)."""
+    causal = q_pos[:, None] >= k_pos[None, :]
+    in_window = jnp.where(
+        window > 0, q_pos[:, None] - k_pos[None, :] < window, True
+    )
+    return causal & in_window
+
+
+def _qk_scores(q, k, scale, softcap_val):
+    """q (B,Q,H,Dh), k (B,K,KV,Dh) -> scores (B,H,Q,K) with GQA broadcast."""
+    B, Q, H, Dh = q.shape
+    KV = k.shape[2]
+    rep = H // KV
+    qg = q.reshape(B, Q, KV, rep, Dh)
+    s = jnp.einsum("bqgrd,bkgd->bgrqk", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if softcap_val:
+        s = softcap_val * jnp.tanh(s / softcap_val)
+    return s  # (B, KV, rep, Q, K)
+
+
+def _weighted_v(p, v):
+    """p (B,KV,rep,Q,K), v (B,K,KV,Dh) -> (B,Q,H,Dh)."""
+    B, KV, rep, Q, K = p.shape
+    out = jnp.einsum("bgrqk,bkgd->bqgrd", p, v.astype(jnp.float32))
+    return out.reshape(B, Q, KV * rep, -1)
+
+
+def attend_full(q, k, v, q_pos, k_pos, window=0, softcap_val: float = 0.0,
+                extra_mask=None):
+    """Reference masked attention (materializes S^2 scores)."""
+    scale = q.shape[-1] ** -0.5
+    s = _qk_scores(q, k, scale, softcap_val)
+    m = _mask(q_pos, k_pos, jnp.asarray(window))
+    if extra_mask is not None:
+        m = m | extra_mask
+    s = jnp.where(m[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return _weighted_v(p, v).astype(q.dtype)
+
+
+def attend_chunked(q, k, v, q_pos, k_pos, window=0, softcap_val: float = 0.0,
+                   chunk: int = 1024, extra_mask=None):
+    """Flash-style online-softmax over KV chunks (memory O(S*chunk)).
+
+    q (B,Q,H,Dh); k/v (B,K,KV,Dh); q_pos (Q,), k_pos (K,).
+    extra_mask: optional bool (Q, K) OR'd into the causal/window mask
+    (used for the prefix-LM bidirectional block of paligemma).
+    """
+    B, Q, H, Dh = q.shape
+    K = k.shape[1]
+    KV = k.shape[2]
+    rep = H // KV
+    scale = Dh ** -0.5
+    nchunks = -(-K // chunk)
+    pad = nchunks * chunk - K
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, (0, pad), constant_values=jnp.iinfo(jnp.int32).max)
+        if extra_mask is not None:
+            extra_mask = jnp.pad(extra_mask, ((0, 0), (0, pad)))
+    kc = k.reshape(B, nchunks, chunk, KV, Dh).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, nchunks, chunk, KV, Dh).transpose(1, 0, 2, 3, 4)
+    pc = k_pos.reshape(nchunks, chunk)
+    mc = (extra_mask.reshape(Q, nchunks, chunk).transpose(1, 0, 2)
+          if extra_mask is not None else None)
+
+    qg = q.reshape(B, Q, KV, rep, Dh).astype(jnp.float32)
+    window = jnp.asarray(window)
+
+    def body(carry, xs):
+        m_run, d_run, acc = carry
+        if mc is None:
+            kb, vb, pb = xs
+            em = None
+        else:
+            kb, vb, pb, em = xs
+        s = jnp.einsum("bqgrd,bkgd->bgrqk", qg, kb.astype(jnp.float32)) * scale
+        if softcap_val:
+            s = softcap_val * jnp.tanh(s / softcap_val)
+        msk = _mask(q_pos, pb, window)
+        if em is not None:
+            msk = msk | em
+        s = jnp.where(msk[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m_run, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m_run - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        d_run = d_run * alpha + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bgrqk,bkgd->bgrqd", p, vb.astype(jnp.float32))
+        acc = acc * alpha[..., None] + pv
+        return (m_new, d_run, acc), None
+
+    init = (
+        jnp.full((B, KV, rep, Q), NEG_INF, jnp.float32),
+        jnp.zeros((B, KV, rep, Q), jnp.float32),
+        jnp.zeros((B, KV, rep, Q, Dh), jnp.float32),
+    )
+    xs = (kc, vc, pc) if mc is None else (kc, vc, pc, mc)
+    (m_run, d_run, acc), _ = jax.lax.scan(body, init, xs)
+    out = acc / jnp.maximum(d_run[..., None], 1e-30)
+    out = out.transpose(0, 3, 1, 2, 4).reshape(B, Q, H, Dh)
+    return out.astype(q.dtype)
+
+
+# ------------------------------------------------------------------ caches
+class KVCache(NamedTuple):
+    """Storage is FLAT (B, S_slots, KV*Dh): the combined trailing axis
+    always divides the model mesh axis even when KV alone doesn't (qwen3
+    kv=8 on a 16-way TP axis).  Ring-ness is NOT stored (pytree purity for
+    jit/ShapeDtypeStruct): a cache is a ring buffer iff its layer has
+    window > 0 and exactly ``window`` slots — callers derive ``ring`` from
+    (window, k.shape[1]) via ``is_ring``."""
+    k: jax.Array        # (B, S_slots, KV*Dh)
+    v: jax.Array
+
+
+def is_ring(window: int, slots: int) -> bool:
+    return bool(window) and slots <= window
+
+
+def init_cache(batch, slots, kv_heads, head_dim, dtype) -> KVCache:
+    shape = (batch, slots, kv_heads * head_dim)
+    return KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+
+
+def cache_slot_positions(cache: KVCache, pos, ring: bool):
+    """Absolute position of each cache slot given current stream pos.
+
+    Linear cache: slot s holds position s (valid while s < pos).
+    Ring cache:   slot s holds the most recent position p < pos with
+                  p % window == s  ->  p = pos - 1 - ((pos - 1 - s) % W).
+    """
+    S = cache.k.shape[1]
+    s = jnp.arange(S, dtype=jnp.int32)
+    if not ring:
+        return jnp.where(s < pos, s, jnp.iinfo(jnp.int32).max)
+    age = jnp.mod(pos - 1 - s, S)
+    p = pos - 1 - age
+    return jnp.where(p >= 0, p, jnp.iinfo(jnp.int32).max)
+
+
+def cache_update(cache: KVCache, k_new, v_new, pos, ring: bool) -> KVCache:
+    """Insert one step (B, 1, KV, Dh) at stream position pos (scalar)."""
+    S = cache.k.shape[1]
+    B = k_new.shape[0]
+    k_new = k_new.reshape(B, 1, -1)
+    v_new = v_new.reshape(B, 1, -1)
+    slot = jnp.mod(pos, S) if ring else pos
+    k = jax.lax.dynamic_update_slice_in_dim(cache.k, k_new.astype(cache.k.dtype), slot, 1)
+    v = jax.lax.dynamic_update_slice_in_dim(cache.v, v_new.astype(cache.v.dtype), slot, 1)
+    return KVCache(k, v)
+
+
+def decode_attend(q, cache: KVCache, pos, ring: bool, kv_heads: int,
+                  window=0, softcap_val: float = 0.0):
+    """q (B,1,H,Dh) against the (flat-stored) cache; pos = current token's
+    position."""
+    k_pos = cache_slot_positions(cache, pos + 1, ring)   # cache already updated
+    q_pos = jnp.full((1,), pos, jnp.int32)
+    B, S = cache.k.shape[:2]
+    k4 = cache.k.reshape(B, S, kv_heads, -1)
+    v4 = cache.v.reshape(B, S, kv_heads, -1)
+    return attend_full(q, k4, v4, q_pos, k_pos,
+                       window=window, softcap_val=softcap_val)

@@ -1,0 +1,265 @@
+"""Whisper-style encoder-decoder backbone.
+
+Per the task spec the conv audio frontend is a STUB: ``input_specs`` feeds
+precomputed frame embeddings (B, encoder_seq, d_model) directly (30 s of
+audio -> 1500 frames at 50 Hz post-conv).  The transformer backbone is
+complete: bidirectional encoder, causal decoder with cross-attention,
+learned positional embeddings (whisper uses absolute positions, not RoPE),
+plain-GELU (non-gated) MLPs.
+
+Serving: cross-attention K/V are computed once from the encoder output at
+prefill and are static thereafter — the decode cache carries [self-KV ring
+or linear] + [cross-KV static], the standard enc-dec serving layout.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding.activation import constrain
+from . import attention as attn
+from . import ffn as ffn_lib
+from . import params as pp
+from .config import ModelConfig
+from .params import P
+
+
+def _attn_init(key, cfg: ModelConfig):
+    d, H, KV, Dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": pp.dense_init(ks[0], (d, H, Dh), ("d_model", "heads", "head_dim")),
+        "wk": pp.dense_init(ks[1], (d, KV, Dh), ("d_model", "kv_heads", "head_dim")),
+        "wv": pp.dense_init(ks[2], (d, KV, Dh), ("d_model", "kv_heads", "head_dim")),
+        "wo": pp.dense_init(ks[3], (H, Dh, d), ("heads", "head_dim", "d_model")),
+    }
+
+
+def _enc_layer_init(key, cfg):
+    ks = jax.random.split(key, 2)
+    return {
+        "pre_attn_norm": pp.zeros_init((cfg.d_model,), ("d_model",)),
+        "attn": _attn_init(ks[0], cfg),
+        "pre_ffn_norm": pp.zeros_init((cfg.d_model,), ("d_model",)),
+        "ffn": ffn_lib.ffn_init(ks[1], cfg.d_model, cfg.d_ff, gated=False),
+    }
+
+
+def _dec_layer_init(key, cfg):
+    ks = jax.random.split(key, 3)
+    return {
+        "pre_attn_norm": pp.zeros_init((cfg.d_model,), ("d_model",)),
+        "attn": _attn_init(ks[0], cfg),
+        "pre_cross_norm": pp.zeros_init((cfg.d_model,), ("d_model",)),
+        "cross": _attn_init(ks[1], cfg),
+        "pre_ffn_norm": pp.zeros_init((cfg.d_model,), ("d_model",)),
+        "ffn": ffn_lib.ffn_init(ks[2], cfg.d_model, cfg.d_ff, gated=False),
+    }
+
+
+def model_init(key, cfg: ModelConfig):
+    ks = jax.random.split(key, cfg.encoder_layers + cfg.n_layers + 4)
+    tree = {
+        "embed": pp.embed_init(ks[0], cfg.padded_vocab, cfg.d_model),
+        "enc_pos": P(
+            0.02 * jax.random.normal(ks[1], (cfg.encoder_seq, cfg.d_model)),
+            (None, "d_model"),
+        ),
+        # sized for the largest decoder context in the assigned shape grid
+        # (prefill_32k / decode_32k); real whisper caps at 448 — DESIGN.md
+        "dec_pos": P(
+            0.02 * jax.random.normal(ks[2], (32768, cfg.d_model)),
+            (None, "d_model"),
+        ),
+        "enc_final_norm": pp.zeros_init((cfg.d_model,), ("d_model",)),
+        "final_norm": pp.zeros_init((cfg.d_model,), ("d_model",)),
+    }
+    top_vals, top_axes = pp.split(tree)
+
+    def stack_layers(init_fn, keys):
+        vals_list, axes = [], None
+        for k in keys:
+            v, axes = pp.split(init_fn(k, cfg))
+            vals_list.append(v)
+        stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *vals_list)
+        axes = jax.tree.map(lambda a: ("layers",) + a, axes,
+                            is_leaf=lambda x: isinstance(x, tuple))
+        return stacked, axes
+
+    enc_v, enc_a = stack_layers(_enc_layer_init, ks[4 : 4 + cfg.encoder_layers])
+    dec_v, dec_a = stack_layers(
+        _dec_layer_init, ks[4 + cfg.encoder_layers :]
+    )
+    values = {**top_vals, "encoder": enc_v, "decoder": dec_v}
+    axes = {**top_axes, "encoder": enc_a, "decoder": dec_a}
+    return values, axes
+
+
+def abstract_params(cfg: ModelConfig):
+    box = {}
+
+    def f(k):
+        vals, axes = model_init(k, cfg)
+        box["axes"] = axes
+        return vals
+
+    shapes = jax.eval_shape(f, jax.random.PRNGKey(0))
+    return shapes, box["axes"]
+
+
+def _mha(p, xq, k, v, q_pos, k_pos, causal: bool, cfg, chunk=1024):
+    q = jnp.einsum("bsd,dhk->bshk", xq, p["wq"].astype(xq.dtype))
+    q = constrain(q, ("batch", "seq", "heads_act", None))
+    if causal:
+        out = attn.attend_chunked(q, k, v, q_pos, k_pos,
+                                  chunk=min(chunk, k.shape[1]))
+    else:
+        # bidirectional: extra_mask=all-True overrides causality
+        S, K = q_pos.shape[0], k_pos.shape[0]
+        out = attn.attend_chunked(
+            q, k, v, q_pos, k_pos, chunk=min(chunk, k.shape[1]),
+            extra_mask=jnp.ones((S, K), bool),
+        )
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(xq.dtype))
+
+
+def _kv(p, x):
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(x.dtype))
+    return k, v
+
+
+def encode(values, cfg: ModelConfig, frames):
+    """frames (B, S_enc, D) stub embeddings -> encoder output (B, S_enc, D)."""
+    x = frames.astype(jnp.dtype(cfg.dtype)) + values["enc_pos"][None].astype(
+        jnp.dtype(cfg.dtype)
+    )
+    S = x.shape[1]
+    pos = jnp.arange(S, dtype=jnp.int32)
+
+    def body(x, layer_p):
+        h = pp.rms_norm(x, layer_p["pre_attn_norm"], cfg.norm_eps)
+        k, v = _kv(layer_p["attn"], h)
+        x = x + _mha(layer_p["attn"], h, k, v, pos, pos, causal=False, cfg=cfg)
+        h2 = pp.rms_norm(x, layer_p["pre_ffn_norm"], cfg.norm_eps)
+        x = x + ffn_lib.ffn_apply(layer_p["ffn"], h2, "gelu")
+        x = constrain(x, ("batch", "seq", "embed_act"))
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, values["encoder"])
+    return pp.rms_norm(x, values["enc_final_norm"], cfg.norm_eps)
+
+
+def decode_train(values, cfg: ModelConfig, tokens, enc_out,
+                 remat_policy: Optional[str] = None):
+    """Teacher-forced decoder pass. Returns logits (B, S, V)."""
+    B, S = tokens.shape
+    x = values["embed"][tokens].astype(jnp.dtype(cfg.dtype))
+    x = x + values["dec_pos"][:S][None].astype(x.dtype)
+    pos = jnp.arange(S, dtype=jnp.int32)
+    enc_pos = jnp.arange(enc_out.shape[1], dtype=jnp.int32)
+
+    def body(x, layer_p):
+        h = pp.rms_norm(x, layer_p["pre_attn_norm"], cfg.norm_eps)
+        k, v = _kv(layer_p["attn"], h)
+        x = x + _mha(layer_p["attn"], h, k, v, pos, pos, causal=True, cfg=cfg)
+        hc = pp.rms_norm(x, layer_p["pre_cross_norm"], cfg.norm_eps)
+        ck, cv = _kv(layer_p["cross"], enc_out)
+        x = x + _mha(layer_p["cross"], hc, ck, cv, pos, enc_pos,
+                     causal=False, cfg=cfg)
+        h2 = pp.rms_norm(x, layer_p["pre_ffn_norm"], cfg.norm_eps)
+        x = x + ffn_lib.ffn_apply(layer_p["ffn"], h2, "gelu")
+        x = constrain(x, ("batch", "seq", "embed_act"))
+        return x, None
+
+    if remat_policy == "full":
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, values["decoder"])
+    x = pp.rms_norm(x, values["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, values["embed"].T.astype(x.dtype))
+    logits = logits.astype(jnp.float32)
+    if cfg.padded_vocab != cfg.vocab:
+        lane = jnp.arange(logits.shape[-1])
+        logits = jnp.where(lane < cfg.vocab, logits, -1e30)
+    return constrain(logits, ("batch", "seq", "vocab_act"))
+
+
+class EncDecCache(NamedTuple):
+    """Flat head storage (KV*Dh trailing axis) — see attention.KVCache."""
+    self_k: jax.Array    # (L, B, S_max, KV*Dh)
+    self_v: jax.Array
+    cross_k: jax.Array   # (L, B, S_enc, KV*Dh)
+    cross_v: jax.Array
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
+               dtype=jnp.bfloat16) -> EncDecCache:
+    KV, Dh = cfg.n_kv_heads, cfg.resolved_head_dim
+    L = cfg.n_layers
+    return EncDecCache(
+        self_k=jnp.zeros((L, batch, max_seq, KV * Dh), dtype),
+        self_v=jnp.zeros((L, batch, max_seq, KV * Dh), dtype),
+        cross_k=jnp.zeros((L, batch, cfg.encoder_seq, KV * Dh), dtype),
+        cross_v=jnp.zeros((L, batch, cfg.encoder_seq, KV * Dh), dtype),
+    )
+
+
+def decode_step(values, cfg: ModelConfig, cache: EncDecCache, token, pos):
+    """One decoder step against self+cross caches."""
+    B = token.shape[0]
+    x = values["embed"][token].astype(jnp.dtype(cfg.dtype))
+    x = x + jax.lax.dynamic_slice_in_dim(
+        values["dec_pos"], pos, 1, axis=0
+    )[None].astype(x.dtype)
+    enc_pos = jnp.arange(cache.cross_k.shape[2], dtype=jnp.int32)
+    new_sk, new_sv = cache.self_k, cache.self_v
+    B = token.shape[0]
+    KV, Dh = cfg.n_kv_heads, cfg.resolved_head_dim
+    for l in range(cfg.n_layers):
+        layer_p = jax.tree.map(lambda v: v[l], values["decoder"])
+        h = pp.rms_norm(x, layer_p["pre_attn_norm"], cfg.norm_eps)
+        k, v = _kv(layer_p["attn"], h)
+        k_flat = k.reshape(B, 1, KV * Dh).astype(new_sk.dtype)
+        v_flat = v.reshape(B, 1, KV * Dh).astype(new_sv.dtype)
+        new_sk = jax.lax.dynamic_update_slice(
+            new_sk, k_flat[None], (l, 0, pos, 0)
+        )
+        new_sv = jax.lax.dynamic_update_slice(
+            new_sv, v_flat[None], (l, 0, pos, 0)
+        )
+        kv_cache = attn.KVCache(new_sk[l], new_sv[l])
+        q = jnp.einsum("bsd,dhk->bshk", h, layer_p["attn"]["wq"].astype(h.dtype))
+        a = attn.decode_attend(q, kv_cache, pos, ring=False, kv_heads=KV)
+        x = x + jnp.einsum("bshk,hkd->bsd", a,
+                           layer_p["attn"]["wo"].astype(h.dtype))
+        hc = pp.rms_norm(x, layer_p["pre_cross_norm"], cfg.norm_eps)
+        ck4 = cache.cross_k[l].reshape(B, -1, KV, Dh).astype(h.dtype)
+        cv4 = cache.cross_v[l].reshape(B, -1, KV, Dh).astype(h.dtype)
+        x = x + _mha(
+            layer_p["cross"], hc, ck4, cv4,
+            jnp.full((1,), pos, jnp.int32), enc_pos, causal=False, cfg=cfg,
+        )
+        h2 = pp.rms_norm(x, layer_p["pre_ffn_norm"], cfg.norm_eps)
+        x = x + ffn_lib.ffn_apply(layer_p["ffn"], h2, "gelu")
+    x = pp.rms_norm(x, values["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, values["embed"].T.astype(x.dtype))
+    logits = logits.astype(jnp.float32)
+    if cfg.padded_vocab != cfg.vocab:
+        lane = jnp.arange(logits.shape[-1])
+        logits = jnp.where(lane < cfg.vocab, logits, -1e30)
+    cache = EncDecCache(new_sk, new_sv, cache.cross_k, cache.cross_v)
+    return logits, cache
+
+
+def prefill_cross(values, cfg: ModelConfig, enc_out):
+    """Static cross-attention K/V for all decoder layers (flat storage)."""
+    cks, cvs = [], []
+    B, S_enc, _ = enc_out.shape
+    for l in range(cfg.n_layers):
+        layer_p = jax.tree.map(lambda v: v[l], values["decoder"])
+        ck, cv = _kv(layer_p["cross"], enc_out)
+        cks.append(ck.reshape(B, S_enc, -1))
+        cvs.append(cv.reshape(B, S_enc, -1))
+    return jnp.stack(cks), jnp.stack(cvs)

@@ -1,0 +1,138 @@
+"""Feed-forward layers: gated dense FFN and GShard-style capacity-routed MoE.
+
+MoE design (EP over the ``model`` mesh axis):
+  * tokens are routed in groups of ``moe_group_size`` (capacity is computed
+    per group, keeping the dispatch/combine masks small enough to live in
+    HBM at 32k sequence lengths);
+  * dispatch/combine are einsums against a (G, S_g, E, C) mask — activations
+    are replicated over ``model``, expert weights and the dispatched buffer
+    are sharded on E, so each model shard builds its own experts' inputs
+    locally and the combine ends in the same all-reduce TP already pays;
+  * over-capacity tokens are dropped (their combine weight is zero), the
+    standard trade for static shapes at scale;
+  * top-k ranks are dispatched in priority order (rank 0 claims capacity
+    first), matching GShard/Switch semantics.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from . import params as pp
+from .params import P
+
+
+# ------------------------------------------------------------------ dense FFN
+def ffn_init(key, d_model, d_ff, gated: bool = True):
+    k1, k2, k3 = jax.random.split(key, 3)
+    out = {
+        "wi_gate": pp.dense_init(k1, (d_model, d_ff), ("d_model", "d_ff")),
+        "wo": pp.dense_init(k3, (d_ff, d_model), ("d_ff", "d_model")),
+    }
+    if gated:
+        out["wi_up"] = pp.dense_init(k2, (d_model, d_ff), ("d_model", "d_ff"))
+    return out
+
+
+def _act(x, kind: str):
+    if kind == "silu":
+        return jax.nn.silu(x)
+    if kind == "geglu":
+        return jax.nn.gelu(x, approximate=True)
+    if kind == "gelu":
+        return jax.nn.gelu(x, approximate=True)
+    raise ValueError(kind)
+
+
+def ffn_apply(p: Dict, x, act: str = "silu"):
+    from ..sharding.activation import constrain
+
+    p = pp.cast_tree(p, x.dtype)
+    h = _act(x @ p["wi_gate"], act)
+    h = constrain(h, ("batch", "seq", "d_ff_act"))
+    if "wi_up" in p:  # gated variant
+        h = h * (x @ p["wi_up"])
+    return h @ p["wo"]
+
+
+# ------------------------------------------------------------------------ MoE
+def moe_init(key, cfg):
+    """Router + stacked expert weights (+ optional shared experts)."""
+    E, d, f = cfg.n_experts, cfg.d_model, cfg.moe_d_ff
+    ks = jax.random.split(key, 5)
+    out = {
+        "router": pp.dense_init(ks[0], (d, E), ("d_model", None)),
+        "wi_gate": pp.dense_init(ks[1], (E, d, f), ("experts", "d_model", "d_ff")),
+        "wi_up": pp.dense_init(ks[2], (E, d, f), ("experts", "d_model", "d_ff")),
+        "wo": pp.dense_init(ks[3], (E, f, d), ("experts", "d_ff", "d_model")),
+    }
+    if cfg.n_shared_experts:
+        out["shared"] = ffn_init(ks[4], d, cfg.n_shared_experts * f)
+    return out
+
+
+def _route(logits, k, capacity):
+    """logits (G, S, E) -> dispatch (G,S,E,C) f32, combine (G,S,E,C) f32.
+
+    Priority dispatch: rank-0 choices claim capacity slots before rank-1,
+    etc.  Over-capacity (slot >= C) choices are dropped.
+    """
+    G, S, E = logits.shape
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)           # (G, S, k)
+
+    counts = jnp.zeros((G, E), jnp.int32)
+    dispatch = jnp.zeros((G, S, E, capacity), jnp.float32)
+    combine = jnp.zeros((G, S, E, capacity), jnp.float32)
+    for r in range(k):
+        e_r = gate_idx[:, :, r]                              # (G, S)
+        onehot = jax.nn.one_hot(e_r, E, dtype=jnp.int32)     # (G, S, E)
+        # position among this rank's tokens + already-claimed slots
+        pos = jnp.cumsum(onehot, axis=1) - onehot + counts[:, None, :]
+        counts = counts + jnp.sum(onehot, axis=1)
+        slot = jnp.sum(pos * onehot, axis=-1)                # (G, S)
+        keep = (slot < capacity).astype(jnp.float32)
+        oh_slot = jax.nn.one_hot(slot, capacity, dtype=jnp.float32)
+        mask = (onehot.astype(jnp.float32)[..., None] * oh_slot[:, :, None, :])
+        dispatch = dispatch + keep[..., None, None] * mask
+        combine = combine + (keep * gate_vals[:, :, r])[..., None, None] * mask
+    return dispatch, combine
+
+
+def moe_apply(p: Dict, x, cfg, act: str = "silu"):
+    """x (B, S, D) -> (B, S, D).  Capacity-routed top-k experts + shared."""
+    p = pp.cast_tree(p, x.dtype)
+    B, S, D = x.shape
+    gs = min(cfg.moe_group_size, S)
+    assert (B * S) % gs == 0
+    G = B * S // gs
+    xg = x.reshape(G, gs, D)
+    k = cfg.top_k
+    capacity = max(1, int(gs * k / cfg.n_experts * cfg.capacity_factor))
+
+    logits = xg @ p["router"]                                # (G, gs, E)
+    dispatch, combine = _route(logits, k, capacity)
+
+    # dispatch: (G,gs,E,C) x (G,gs,D) -> (G,E,C,D)
+    buf = jnp.einsum("gsec,gsd->gecd", dispatch.astype(x.dtype), xg)
+    h = _act(jnp.einsum("gecd,edf->gecf", buf, p["wi_gate"]), act)
+    h = h * jnp.einsum("gecd,edf->gecf", buf, p["wi_up"])
+    eo = jnp.einsum("gecf,efd->gecd", h, p["wo"])
+    out = jnp.einsum("gsec,gecd->gsd", combine.astype(x.dtype), eo)
+    out = out.reshape(B, S, D)
+
+    if "shared" in p:
+        out = out + ffn_apply(p["shared"], x, act)
+    return out
+
+
+def moe_aux_loss(logits, k):
+    """Load-balancing auxiliary loss (Switch-style): E * sum(f_e * p_e)."""
+    E = logits.shape[-1]
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    _, idx = jax.lax.top_k(probs, k)
+    f = jnp.mean(jax.nn.one_hot(idx, E, dtype=jnp.float32), axis=(0, 1, 2))
+    pbar = jnp.mean(probs, axis=tuple(range(probs.ndim - 1)))
+    return E * jnp.sum(f * pbar)

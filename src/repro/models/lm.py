@@ -1,0 +1,192 @@
+"""Model-zoo dispatch: one uniform interface over every assigned arch.
+
+``build(cfg)`` returns a ``ModelAPI`` with
+  init(key) -> values                    (concrete params)
+  abstract() -> (shapes, axes)           (dry-run: no allocation)
+  loss_fn(values, batch, key) -> scalar  (next-token CE + aux)
+  prefill_fn(values, batch) -> (logits, caches)
+  decode_fn(values, caches, token, pos) -> (logits, caches)
+  decode_cache_specs(batch, seq) -> pytree of ShapeDtypeStruct
+  input_specs(shape) -> batch pytree of ShapeDtypeStruct
+
+Batch layouts per family:
+  dense/moe/ssm/hybrid : {"tokens": (B, S)}
+  vlm                  : + {"img_embeds": (B, prefix, D)}   (SigLIP stub)
+  encdec               : {"frames": (B, S_enc, D), "tokens": (B, S)}
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig, ShapeCell
+from . import encdec as encdec_lib
+from . import transformer as tfm
+
+
+def cross_entropy(logits, labels, z_loss: float = 1e-4):
+    """Mean next-token CE over (B, S, V) logits vs (B, S) labels, with a
+    small z-loss to keep the softmax normalizer bounded (stability at
+    scale)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    loss = jnp.mean(lse - ll)
+    if z_loss:
+        loss = loss + z_loss * jnp.mean(jnp.square(lse))
+    return loss
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelAPI:
+    cfg: ModelConfig
+    init: Callable
+    abstract: Callable
+    loss_fn: Callable
+    prefill_fn: Callable
+    decode_fn: Callable
+    decode_cache_specs: Callable
+    decode_cache_axes: Callable
+    input_specs: Callable
+    input_axes: Callable
+
+
+from ..sharding.rules import Axes
+
+KV_AXES = Axes(("batch", "kv_seq", "heads_act"))
+SSM_H_AXES = Axes(("batch", "heads_act", None))
+SSM_CONV_AXES = Axes(("batch", None, "d_ff_act"))
+
+
+def _batch_axes(cfg: ModelConfig) -> Dict[str, Any]:
+    axes: Dict[str, Any] = {"tokens": ("batch", None)}
+    if cfg.family == "vlm":
+        axes["img_embeds"] = ("batch", None, None)
+    if cfg.family == "encdec":
+        axes["frames"] = ("batch", None, None)
+    return axes
+
+
+def _token_specs(cfg: ModelConfig, shape: ShapeCell) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    sd = jax.ShapeDtypeStruct
+    specs: Dict[str, Any] = {"tokens": sd((B, S), jnp.int32)}
+    if cfg.family == "vlm":
+        specs["img_embeds"] = sd(
+            (B, cfg.prefix_tokens, cfg.d_model), jnp.bfloat16
+        )
+    if cfg.family == "encdec":
+        specs["frames"] = sd(
+            (B, cfg.encoder_seq, cfg.d_model), jnp.bfloat16
+        )
+    return specs
+
+
+def build(cfg: ModelConfig, remat_policy: Optional[str] = "full") -> ModelAPI:
+    if cfg.family == "encdec":
+        return _build_encdec(cfg, remat_policy)
+
+    def init(key):
+        return tfm.model_init(key, cfg)[0]
+
+    def abstract():
+        return tfm.abstract_params(cfg)
+
+    def loss_fn(values, batch, key=None):
+        tokens = batch["tokens"]
+        logits, _ = forward_logits(values, batch, remat_policy)
+        # predict token t+1 from prefix..t; VLM prefix positions excluded
+        pred = logits[:, cfg.prefix_tokens :][:, :-1]
+        return cross_entropy(pred, tokens[:, 1:])
+
+    def forward_logits(values, batch, remat=None):
+        return tfm.forward(
+            values, cfg, batch["tokens"],
+            img_embeds=batch.get("img_embeds"), remat_policy=remat,
+        )
+
+    def prefill_fn(values, batch, max_seq=None):
+        return tfm.prefill(
+            values, cfg, batch["tokens"], img_embeds=batch.get("img_embeds"),
+            max_seq=max_seq,
+        )
+
+    def decode_fn(values, caches, token, pos):
+        return tfm.decode_step(values, cfg, caches, token, pos)
+
+    def decode_cache_specs(batch: int, seq: int, dtype=jnp.bfloat16):
+        caches = jax.eval_shape(
+            lambda: tfm.init_layer_caches(cfg, batch, seq, dtype)
+        )
+        return caches
+
+    def decode_cache_axes(batch: int, seq: int):
+        from . import attention as A
+        from . import ssm as S
+
+        out = []
+        for window in cfg.layer_kinds():
+            kv = None
+            if cfg.family != "ssm":
+                kv = A.KVCache(KV_AXES, KV_AXES)
+            ssm = None
+            if cfg.family in ("ssm", "hybrid"):
+                ssm = S.SSMState(SSM_H_AXES, SSM_CONV_AXES)
+            out.append(tfm.LayerCache(kv=kv, ssm=ssm))
+        return out
+
+    def input_specs(shape: ShapeCell):
+        return _token_specs(cfg, shape)
+
+    def input_axes():
+        return _batch_axes(cfg)
+
+    return ModelAPI(cfg, init, abstract, loss_fn, prefill_fn, decode_fn,
+                    decode_cache_specs, decode_cache_axes, input_specs,
+                    input_axes)
+
+
+def _build_encdec(cfg: ModelConfig, remat_policy) -> ModelAPI:
+    def init(key):
+        return encdec_lib.model_init(key, cfg)[0]
+
+    def abstract():
+        return encdec_lib.abstract_params(cfg)
+
+    def loss_fn(values, batch, key=None):
+        enc_out = encdec_lib.encode(values, cfg, batch["frames"])
+        logits = encdec_lib.decode_train(
+            values, cfg, batch["tokens"], enc_out, remat_policy
+        )
+        return cross_entropy(logits[:, :-1], batch["tokens"][:, 1:])
+
+    def prefill_fn(values, batch):
+        enc_out = encdec_lib.encode(values, cfg, batch["frames"])
+        logits = encdec_lib.decode_train(values, cfg, batch["tokens"], enc_out)
+        ck, cv = encdec_lib.prefill_cross(values, cfg, enc_out)
+        return logits, (enc_out, ck, cv)
+
+    def decode_fn(values, cache, token, pos):
+        return encdec_lib.decode_step(values, cfg, cache, token, pos)
+
+    def decode_cache_specs(batch: int, seq: int, dtype=jnp.bfloat16):
+        return jax.eval_shape(
+            lambda: encdec_lib.init_cache(cfg, batch, seq, dtype)
+        )
+
+    def decode_cache_axes(batch: int, seq: int):
+        ax = Axes((None,) + tuple(KV_AXES))  # + stacked-layer dim
+        return encdec_lib.EncDecCache(ax, ax, ax, ax)
+
+    def input_specs(shape: ShapeCell):
+        return _token_specs(cfg, shape)
+
+    def input_axes():
+        return _batch_axes(cfg)
+
+    return ModelAPI(cfg, init, abstract, loss_fn, prefill_fn, decode_fn,
+                    decode_cache_specs, decode_cache_axes, input_specs,
+                    input_axes)

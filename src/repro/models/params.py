@@ -1,0 +1,77 @@
+"""Annotated parameters: every leaf carries its logical sharding axes.
+
+Init functions build trees whose leaves are ``P(value, axes)``; ``split``
+separates them into a value tree and an axes tree that stay structurally
+in sync by construction (no hand-maintained parallel spec trees).
+
+Logical axis names (resolved to mesh axes by sharding/rules.py):
+  "vocab" "d_model" "d_ff" "heads" "kv_heads" "head_dim" "experts"
+  "ssm_inner" "ssm_state" "layers" None
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class P(NamedTuple):
+    value: Any
+    axes: Tuple[Optional[str], ...]
+
+
+def is_p(x) -> bool:
+    return isinstance(x, P)
+
+
+def split(tree):
+    values = jax.tree.map(lambda p: p.value, tree, is_leaf=is_p)
+    axes = jax.tree.map(lambda p: p.axes, tree, is_leaf=is_p)
+    return values, axes
+
+
+def dense_init(key, shape, axes, scale: float = 1.0, dtype=jnp.float32) -> P:
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    std = scale / np.sqrt(fan_in)
+    return P(jax.random.normal(key, shape, dtype) * std, axes)
+
+
+def embed_init(key, vocab, d_model, dtype=jnp.float32) -> P:
+    v = jax.random.normal(key, (vocab, d_model), dtype) * 0.02
+    return P(v, ("vocab", "d_model"))
+
+
+def zeros_init(shape, axes, dtype=jnp.float32) -> P:
+    return P(jnp.zeros(shape, dtype), axes)
+
+
+def ones_init(shape, axes, dtype=jnp.float32) -> P:
+    return P(jnp.ones(shape, dtype), axes)
+
+
+def rms_norm(x, weight, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + weight.astype(jnp.float32))).astype(dt)
+
+
+def cast_tree(tree, dtype):
+    """Cast float params to the compute dtype (mixed-precision entry point:
+    f32 master params, bf16 compute — XLA fuses the casts into consumers)."""
+    def cast(w):
+        if jnp.issubdtype(w.dtype, jnp.floating):
+            return w.astype(dtype)
+        return w
+
+    return jax.tree.map(cast, tree)
+
+
+def softcap(x, cap: float):
+    """Gemma-2 style logit soft-capping: cap * tanh(x / cap)."""
+    if not cap:
+        return x
+    return cap * jnp.tanh(x / cap)

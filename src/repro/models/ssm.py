@@ -1,0 +1,257 @@
+"""Mamba-2 SSD (state-space duality) block — chunked scan + O(1) decode.
+
+Recurrence (per head h, state (P, N)):
+    h_t = a_t * h_{t-1} + dt_t * (B_t ⊗ x_t),   a_t = exp(dt_t * A)
+    y_t = C_t · h_t + D * x_t
+
+Chunked algorithm (Dao & Gu 2024, §6): the sequence is split into chunks of
+``ssm_chunk``; within a chunk the contribution is a masked quadratic form
+(MXU-friendly), across chunks a short ``lax.scan`` carries the (H, P, N)
+state.  ``ssd_scan`` (chunked) == ``ssd_reference`` (naive recurrence) is a
+property test.
+
+Projections are kept separate (z/x/B/C/dt) instead of one fused in_proj so
+each gets a clean sharding rule: d_inner shards over the model axis (head
+parallel), B/C/dt are small and replicated.
+
+Decode: ``ssm_step`` advances one token in O(H*P*N) with a conv ring buffer
+— this is what makes the ``long_500k`` cell O(1)-state for SSM archs.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import params as pp
+from .params import P
+
+
+class SSMState(NamedTuple):
+    h: jax.Array       # (B, H*P, N) running state (flat heads: H alone may
+                       # not divide the TP axis — hymba has 50 — but H*P does)
+    conv: jax.Array    # (B, conv_w, C_in) conv ring (C_in = di + 2*G*N)
+
+
+def ssm_init(key, cfg):
+    d = cfg.d_model
+    di = cfg.ssm_d_inner
+    H = cfg.ssm_heads
+    N = cfg.ssm_state
+    G = 1  # n_groups
+    ks = jax.random.split(key, 8)
+    return {
+        "z_proj": pp.dense_init(ks[0], (d, di), ("d_model", "ssm_inner")),
+        "x_proj": pp.dense_init(ks[1], (d, di), ("d_model", "ssm_inner")),
+        "b_proj": pp.dense_init(ks[2], (d, G * N), ("d_model", None)),
+        "c_proj": pp.dense_init(ks[3], (d, G * N), ("d_model", None)),
+        "dt_proj": pp.dense_init(ks[4], (d, H), ("d_model", None)),
+        "conv_w": P(
+            0.1 * jax.random.normal(ks[5], (cfg.ssm_conv, di + 2 * G * N)),
+            (None, "ssm_inner"),
+        ),
+        "A_log": P(jnp.log(jnp.linspace(1.0, 16.0, H)), (None,)),
+        "D": pp.ones_init((H,), (None,)),
+        "dt_bias": pp.zeros_init((H,), (None,)),
+        "norm": pp.zeros_init((di,), ("ssm_inner",)),
+        "out_proj": pp.dense_init(ks[6], (di, d), ("ssm_inner", "d_model")),
+    }
+
+
+def _causal_conv(u, w):
+    """Depthwise causal conv: u (B, S, C), w (K, C) -> (B, S, C)."""
+    K = w.shape[0]
+    out = jnp.zeros_like(u)
+    for i in range(K):
+        shifted = jnp.pad(u, ((0, 0), (K - 1 - i, 0), (0, 0)))[:, : u.shape[1]]
+        out = out + shifted * w[i]
+    return out
+
+
+def _split_bcx(p: Dict, x, cfg, return_raw: bool = False, valid_len=None):
+    """Project + conv. x (B,S,D) -> xs (B,S,H,P), Bm/Cm (B,S,G,N),
+    dt (B,S,H), z (B,S,di).  dt is zeroed beyond valid_len (padded
+    positions then neither decay nor update the state)."""
+    B_, S, _ = x.shape
+    di = cfg.ssm_d_inner
+    H, Pd, N, G = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state, 1
+    z = x @ p["z_proj"]
+    xc = x @ p["x_proj"]
+    bc = jnp.concatenate([x @ p["b_proj"], x @ p["c_proj"]], axis=-1)
+    u_raw = jnp.concatenate([xc, bc], axis=-1)        # (B,S,di+2GN)
+    u = jax.nn.silu(_causal_conv(u_raw, p["conv_w"]))
+    xc, bm, cm = jnp.split(u, [di, di + G * N], axis=-1)
+    dt = jax.nn.softplus(x @ p["dt_proj"] + p["dt_bias"])  # (B,S,H)
+    if valid_len is not None and valid_len < S:
+        mask = (jnp.arange(S) < valid_len).astype(dt.dtype)
+        dt = dt * mask[None, :, None]
+    xs = xc.reshape(B_, S, H, Pd)
+    bm = bm.reshape(B_, S, G, N)
+    cm = cm.reshape(B_, S, G, N)
+    if return_raw:
+        return xs, bm, cm, dt, z, u_raw
+    return xs, bm, cm, dt, z
+
+
+def ssd_reference(xs, bm, cm, dt, A, D):
+    """Naive O(S) recurrence oracle. xs (B,S,H,P), bm/cm (B,S,G,N),
+    dt (B,S,H), A (H,) negative, D (H,).  Returns y (B,S,H,P)."""
+    B_, S, H, Pd = xs.shape
+    N = bm.shape[-1]
+
+    def step(h, inp):
+        x_t, b_t, c_t, dt_t = inp
+        a_t = jnp.exp(dt_t * A)                        # (B,H)
+        u = dt_t[..., None, None] * jnp.einsum(
+            "bgn,bhp->bhpn", b_t, x_t
+        )
+        h = a_t[..., None, None] * h + u
+        y = jnp.einsum("bhpn,bgn->bhp", h, c_t)
+        return h, y
+
+    h0 = jnp.zeros((B_, H, Pd, N), jnp.float32)
+    xs_t = jnp.moveaxis(xs.astype(jnp.float32), 1, 0)
+    bm_t = jnp.moveaxis(bm.astype(jnp.float32), 1, 0)
+    cm_t = jnp.moveaxis(cm.astype(jnp.float32), 1, 0)
+    dt_t = jnp.moveaxis(dt.astype(jnp.float32), 1, 0)
+    _, ys = jax.lax.scan(step, h0, (xs_t, bm_t, cm_t, dt_t))
+    y = jnp.moveaxis(ys, 0, 1)
+    return y + xs.astype(jnp.float32) * D[:, None]
+
+
+def ssd_scan(xs, bm, cm, dt, A, D, chunk: int):
+    """Chunked SSD. Same contract as ssd_reference; O(S*chunk) intra work
+    plus an O(S/chunk) state scan."""
+    B_, S, H, Pd = xs.shape
+    N = bm.shape[-1]
+    assert S % chunk == 0, "pad sequence to a chunk multiple"
+    C_ = S // chunk
+    f32 = jnp.float32
+
+    xs_c = xs.astype(f32).reshape(B_, C_, chunk, H, Pd)
+    bm_c = bm.astype(f32).reshape(B_, C_, chunk, 1, N)
+    cm_c = cm.astype(f32).reshape(B_, C_, chunk, 1, N)
+    dt_c = dt.astype(f32).reshape(B_, C_, chunk, H)
+
+    loga = dt_c * A                                   # (B,C,Q,H) log decay
+    cum = jnp.cumsum(loga, axis=2)                    # inclusive
+    # intra-chunk quadratic term
+    # M[t,s] = exp(cum[t]-cum[s]) for s<=t
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]    # (B,C,t,s,H)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    # mask BEFORE exp: exp of masked (+large) entries would be inf and the
+    # where() would leak NaN into the backward pass
+    diff = jnp.where(tri[None, None, :, :, None], diff, -1e30)
+    M = jnp.exp(diff)
+    cb = jnp.einsum("bctgn,bcsgn->bcts", cm_c, bm_c)        # (B,C,t,s)
+    G_ = cb[..., None] * M * dt_c[:, :, None, :, :]          # (B,C,t,s,H)
+    y_intra = jnp.einsum("bctsh,bcshp->bcthp", G_, xs_c)
+
+    # chunk-local end states and total decays
+    dec_to_end = jnp.exp(cum[:, :, -1:, :] - cum)           # (B,C,Q,H)
+    u = dt_c[..., None, None] * jnp.einsum(
+        "bcsgn,bcshp->bcshpn", bm_c, xs_c
+    )
+    h_local = jnp.einsum("bcsh,bcshpn->bchpn", dec_to_end, u)
+    A_chunk = jnp.exp(cum[:, :, -1, :])                     # (B,C,H)
+
+    # inter-chunk state scan
+    def step(h, inp):
+        a_c, hl = inp
+        h_in = h
+        h = a_c[..., None, None] * h + hl
+        return h, h_in
+
+    h0 = jnp.zeros((B_, H, Pd, N), f32)
+    a_t = jnp.moveaxis(A_chunk, 1, 0)
+    hl_t = jnp.moveaxis(h_local, 1, 0)
+    h_final, h_prevs = jax.lax.scan(step, h0, (a_t, hl_t))
+    h_prev = jnp.moveaxis(h_prevs, 0, 1)                    # (B,C,H,P,N)
+
+    # inter-chunk contribution: C_t · (exp(cum[t]) * h_prev)
+    y_inter = jnp.einsum("bctgn,bchpn->bcthp", cm_c, h_prev) \
+        * jnp.exp(cum)[..., None]
+    y = (y_intra + y_inter).reshape(B_, S, H, Pd)
+    return y + xs.astype(f32) * D[:, None], h_final
+
+
+def ssm_apply_with_state(p: Dict, x, cfg):
+    """Full block: x (B,S,D) -> ((B,S,D), SSMState) via chunked SSD.
+
+    The returned state (final h + conv tail) hands off to ``ssm_step`` for
+    decode — prefill->decode equivalence is a property test.
+    """
+    p = pp.cast_tree(p, x.dtype)
+    S = x.shape[1]
+    chunk = min(cfg.ssm_chunk, S)
+    pad = (-S) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+    xs, bm, cm, dt, z, u_raw = _split_bcx(
+        p, x, cfg, return_raw=True, valid_len=S
+    )
+    A = -jnp.exp(p["A_log"])
+    y, h_final = ssd_scan(xs, bm, cm, dt, A, p["D"], chunk)
+    y = y.reshape(y.shape[0], y.shape[1], -1)               # (B,S,di)
+    y = pp.rms_norm(y * jax.nn.silu(z.astype(jnp.float32)), p["norm"])
+    out = y.astype(x.dtype) @ p["out_proj"]
+    # conv ring tail: last (conv) raw inputs, zero-padded on the left
+    K = cfg.ssm_conv
+    tail = u_raw[:, max(0, S - K) : S]
+    if tail.shape[1] < K:
+        tail = jnp.pad(tail, ((0, 0), (K - tail.shape[1], 0), (0, 0)))
+    state = SSMState(
+        h=h_final.reshape(h_final.shape[0], -1, h_final.shape[-1]),
+        conv=tail,
+    )
+    return (out[:, :S] if pad else out), state
+
+
+def ssm_apply(p: Dict, x, cfg):
+    """x (B,S,D) -> (B,S,D); state discarded (train path)."""
+    return ssm_apply_with_state(p, x, cfg)[0]
+
+
+def ssm_init_state(cfg, batch, dtype=jnp.float32) -> SSMState:
+    G = 1
+    return SSMState(
+        h=jnp.zeros((batch, cfg.ssm_heads * cfg.ssm_head_dim, cfg.ssm_state),
+                    jnp.float32),
+        conv=jnp.zeros((batch, cfg.ssm_conv, cfg.ssm_d_inner + 2 * G * cfg.ssm_state),
+                       dtype),
+    )
+
+
+def ssm_step(p: Dict, x, state: SSMState, cfg) -> Tuple[jax.Array, SSMState]:
+    """Single-token decode. x (B, 1, D) -> (y (B, 1, D), new state)."""
+    p = pp.cast_tree(p, x.dtype)
+    B_, _, D = x.shape
+    di = cfg.ssm_d_inner
+    H, Pd, N, G = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state, 1
+    xt = x[:, 0]
+    z = xt @ p["z_proj"]
+    u_new = jnp.concatenate(
+        [xt @ p["x_proj"], xt @ p["b_proj"], xt @ p["c_proj"]], axis=-1
+    )
+    conv = jnp.concatenate([state.conv[:, 1:], u_new[:, None]], axis=1)
+    u = jax.nn.silu(jnp.sum(conv * p["conv_w"][None], axis=1))
+    xc, bm, cm = jnp.split(u, [di, di + G * N], axis=-1)
+    dt = jax.nn.softplus(xt @ p["dt_proj"] + p["dt_bias"])  # (B,H)
+    A = -jnp.exp(p["A_log"])
+
+    xs = xc.reshape(B_, H, Pd).astype(jnp.float32)
+    bmr = bm.reshape(B_, G, N).astype(jnp.float32)
+    cmr = cm.reshape(B_, G, N).astype(jnp.float32)
+    a_t = jnp.exp(dt.astype(jnp.float32) * A)               # (B,H)
+    upd = dt.astype(jnp.float32)[..., None, None] * jnp.einsum(
+        "bgn,bhp->bhpn", bmr, xs
+    )
+    h_prev = state.h.reshape(B_, H, Pd, N)
+    h = a_t[..., None, None] * h_prev + upd
+    y = jnp.einsum("bhpn,bgn->bhp", h, cmr) + xs * p["D"][:, None]
+    y = y.reshape(B_, di)
+    y = pp.rms_norm(y * jax.nn.silu(z.astype(jnp.float32)), p["norm"])
+    out = y.astype(x.dtype) @ p["out_proj"]
+    return out[:, None], SSMState(h=h.reshape(B_, H * Pd, N),
+                                  conv=conv.astype(state.conv.dtype))

@@ -1,0 +1,385 @@
+"""Decoder-only transformer zoo: dense / MoE / SSM / hybrid / prefix-VLM.
+
+One layer body covers the whole family; per-layer attention windows arrive
+as a scanned int32 array so gemma2's alternating and gemma3's 5:1 patterns
+run under a single ``lax.scan`` (train/prefill), while serve decode unrolls
+layers in Python so local layers hold O(window) ring caches and global
+layers hold linear caches (heterogeneous shapes — the long_500k enabler).
+
+Params are stacked over layers (leading "layers" dim) for scan; decode
+slices layer ``l`` with a static index.  All leaves carry logical sharding
+axes (models/params.py) resolved by sharding/rules.py.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..sharding.activation import constrain
+from . import attention as attn
+from . import ffn as ffn_lib
+from . import params as pp
+from . import ssm as ssm_lib
+from .config import ModelConfig
+from .params import P
+
+
+# ------------------------------------------------------------------ layer init
+def _attn_init(key, cfg: ModelConfig):
+    """Projections stored 2D with combined (heads*head_dim) axes so the TP
+    dim always divides the mesh (e.g. qwen3's 40 heads don't divide 16 but
+    40*128 does); activations reshape to 4D after the matmul."""
+    d, H, KV, Dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": pp.dense_init(ks[0], (d, H * Dh), ("d_model", "heads")),
+        "wk": pp.dense_init(ks[1], (d, KV * Dh), ("d_model", "kv_heads")),
+        "wv": pp.dense_init(ks[2], (d, KV * Dh), ("d_model", "kv_heads")),
+        "wo": pp.dense_init(ks[3], (H * Dh, d), ("heads", "d_model")),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = pp.zeros_init((Dh,), (None,))
+        p["k_norm"] = pp.zeros_init((Dh,), (None,))
+    return p
+
+
+def layer_init(key, cfg: ModelConfig, moe: bool):
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    p: Dict[str, Any] = {"pre_attn_norm": pp.zeros_init((d,), ("d_model",))}
+    if cfg.family != "ssm":
+        p["attn"] = _attn_init(ks[0], cfg)
+    if cfg.family in ("ssm", "hybrid"):
+        p["ssm"] = ssm_lib.ssm_init(ks[1], cfg)
+        if cfg.parallel_ssm:
+            p["attn_branch_norm"] = pp.zeros_init((d,), ("d_model",))
+            p["ssm_branch_norm"] = pp.zeros_init((d,), ("d_model",))
+    if cfg.post_norms:
+        p["post_attn_norm"] = pp.zeros_init((d,), ("d_model",))
+    if cfg.family != "ssm" and cfg.d_ff > 0:
+        p["pre_ffn_norm"] = pp.zeros_init((d,), ("d_model",))
+        if moe:
+            p["moe"] = ffn_lib.moe_init(ks[2], cfg)
+        else:
+            p["ffn"] = ffn_lib.ffn_init(ks[2], d, cfg.d_ff)
+        if cfg.post_norms:
+            p["post_ffn_norm"] = pp.zeros_init((d,), ("d_model",))
+    return p
+
+
+def model_init(key, cfg: ModelConfig):
+    """Returns (values, axes) — stacked-layer annotated params."""
+    ks = jax.random.split(key, cfg.n_layers + 3)
+    tree: Dict[str, Any] = {
+        "embed": pp.embed_init(ks[0], cfg.padded_vocab, cfg.d_model),
+        "final_norm": pp.zeros_init((cfg.d_model,), ("d_model",)),
+    }
+    if not cfg.tie_embeddings:
+        tree["lm_head"] = pp.dense_init(
+            ks[1], (cfg.d_model, cfg.padded_vocab), ("d_model", "vocab")
+        )
+    layer_vals, layer_axes = [], None
+    for l in range(cfg.n_layers):
+        vals, axes = pp.split(layer_init(ks[3 + l], cfg, moe=cfg.family == "moe"))
+        layer_vals.append(vals)
+        layer_axes = axes
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *layer_vals)
+    stacked_axes = jax.tree.map(
+        lambda a: ("layers",) + a, layer_axes,
+        is_leaf=lambda x: isinstance(x, tuple),
+    )
+    top_vals, top_axes = pp.split(tree)
+    values = {**top_vals, "layers": stacked}
+    axes = {**top_axes, "layers": stacked_axes}
+    return values, axes
+
+
+def abstract_params(cfg: ModelConfig):
+    """(ShapeDtypeStruct values, axes) without allocating anything.
+
+    Axes are static strings built during tracing — stashed via closure
+    because eval_shape outputs must be arrays."""
+    box = {}
+
+    def f(k):
+        vals, axes = model_init(k, cfg)
+        box["axes"] = axes
+        return vals
+
+    shapes = jax.eval_shape(f, jax.random.PRNGKey(0))
+    return shapes, box["axes"]
+
+
+# --------------------------------------------------------------- layer forward
+def _attention_block(p, x, cfg: ModelConfig, window, positions, k_pos=None,
+                     kv_override=None, extra_mask=None, chunk=1024):
+    """x (B,S,D) -> attn output (B,S,D).  kv_override: (k, v) for cross-like
+    reuse; otherwise self-attention."""
+    B, S, _ = x.shape
+    H, Dh = cfg.n_heads, cfg.resolved_head_dim
+    KV = cfg.n_kv_heads
+    q = (x @ p["wq"].astype(x.dtype)).reshape(B, S, H, Dh)
+    if kv_override is None:
+        k = (x @ p["wk"].astype(x.dtype)).reshape(B, S, KV, Dh)
+        v = (x @ p["wv"].astype(x.dtype)).reshape(B, S, KV, Dh)
+    else:
+        k, v = kv_override
+    if cfg.qk_norm:
+        q = pp.rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = pp.rms_norm(k, p["k_norm"], cfg.norm_eps)
+    q = attn.apply_rope(q, positions[None], cfg.rope_theta)
+    if kv_override is None:
+        k = attn.apply_rope(k, positions[None], cfg.rope_theta)
+    q = constrain(q, ("batch", "seq", "heads_act", None))
+    k = constrain(k, ("batch", "seq", "heads_act", None))
+    kp = positions if k_pos is None else k_pos
+    out = attn.attend_chunked(
+        q, k, v, positions, kp, window=window,
+        softcap_val=cfg.attn_softcap, chunk=min(chunk, k.shape[1]),
+        extra_mask=extra_mask,
+    )
+    out = out.reshape(B, S, H * Dh) @ p["wo"].astype(x.dtype)
+    return out, (k, v)
+
+
+def layer_apply(p, x, cfg: ModelConfig, window, positions,
+                extra_mask=None, collect_kv=False):
+    """One transformer layer. Returns (x, (kv or None, ssm_state or None))
+    — cache material is only emitted when collect_kv (prefill)."""
+    kv = None
+    ssm_state = None
+    h = pp.rms_norm(x, p["pre_attn_norm"], cfg.norm_eps)
+    if cfg.family == "ssm":
+        s_out, ssm_state = ssm_lib.ssm_apply_with_state(p["ssm"], h, cfg)
+        x = x + s_out
+    else:
+        a_out, kv = _attention_block(
+            p["attn"], h, cfg, window, positions, extra_mask=extra_mask
+        )
+        if cfg.parallel_ssm:
+            s_out, ssm_state = ssm_lib.ssm_apply_with_state(p["ssm"], h, cfg)
+            a_out = 0.5 * (
+                pp.rms_norm(a_out, p["attn_branch_norm"], cfg.norm_eps)
+                + pp.rms_norm(s_out, p["ssm_branch_norm"], cfg.norm_eps)
+            )
+        if cfg.post_norms:
+            a_out = pp.rms_norm(a_out, p["post_attn_norm"], cfg.norm_eps)
+        x = x + a_out
+        if cfg.d_ff > 0:
+            h2 = pp.rms_norm(x, p["pre_ffn_norm"], cfg.norm_eps)
+            if "moe" in p:
+                f_out = ffn_lib.moe_apply(p["moe"], h2, cfg, cfg.act)
+            else:
+                f_out = ffn_lib.ffn_apply(p["ffn"], h2, cfg.act)
+            if cfg.post_norms:
+                f_out = pp.rms_norm(f_out, p["post_ffn_norm"], cfg.norm_eps)
+            x = x + f_out
+    x = constrain(x, ("batch", "seq", "embed_act"))
+    if not collect_kv:
+        kv, ssm_state = None, None
+    return x, (kv, ssm_state)
+
+
+# -------------------------------------------------------------------- forward
+def embed_tokens(values, cfg: ModelConfig, tokens):
+    x = values["embed"][tokens]
+    if cfg.embed_scale:
+        x = x * jnp.asarray(np.sqrt(cfg.d_model), x.dtype)
+    return x.astype(jnp.dtype(cfg.dtype))
+
+
+def unembed(values, cfg: ModelConfig, x):
+    x = pp.rms_norm(x, values["final_norm"], cfg.norm_eps)
+    head = values.get("lm_head", None)
+    if head is None:
+        head = values["embed"].T
+    logits = jnp.einsum("bsd,dv->bsv", x, head.astype(x.dtype))
+    logits = pp.softcap(logits.astype(jnp.float32), cfg.final_softcap)
+    if cfg.padded_vocab != cfg.vocab:  # mask vocab padding to -inf
+        lane = jnp.arange(logits.shape[-1])
+        logits = jnp.where(lane < cfg.vocab, logits, -1e30)
+    return constrain(logits, ("batch", "seq", "vocab_act"))
+
+
+def _prefix_mask(prefix_len: int, S: int):
+    """Bidirectional over the image prefix (paligemma), causal elsewhere.
+    Returns bool (S, S) OR'd into the causal mask."""
+    if not prefix_len:
+        return None
+    q = jnp.arange(S)[:, None]
+    k = jnp.arange(S)[None, :]
+    return (q < prefix_len) & (k < prefix_len)
+
+
+def forward(values, cfg: ModelConfig, tokens, img_embeds=None,
+            remat_policy: Optional[str] = None, collect_kv: bool = False):
+    """Train/prefill forward. tokens (B, S_text); img_embeds (B, Pfx, D)
+    prepended when cfg.prefix_tokens > 0.  Returns (logits, stacked_kv)."""
+    x = embed_tokens(values, cfg, tokens)
+    if cfg.prefix_tokens:
+        assert img_embeds is not None
+        x = jnp.concatenate([img_embeds.astype(x.dtype), x], axis=1)
+    B, S, _ = x.shape
+    x = constrain(x, ("batch", "seq", "embed_act"))
+    positions = jnp.arange(S, dtype=jnp.int32)
+    extra_mask = _prefix_mask(cfg.prefix_tokens, S)
+    windows = jnp.asarray(cfg.layer_kinds(), jnp.int32)
+
+    def body(x, xs):
+        layer_p, window = xs
+        x, kv = layer_apply(
+            layer_p, x, cfg, window, positions,
+            extra_mask=extra_mask, collect_kv=collect_kv,
+        )
+        return x, kv
+
+    if remat_policy == "full":
+        body = jax.checkpoint(body)
+    elif remat_policy == "dots":
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.checkpoint_dots
+        )
+
+    x, kvs = jax.lax.scan(body, x, (values["layers"], windows))
+    logits = unembed(values, cfg, x)
+    return logits, kvs
+
+
+# ------------------------------------------------------------------- serving
+class LayerCache(NamedTuple):
+    kv: Optional[attn.KVCache]
+    ssm: Optional[ssm_lib.SSMState]
+
+
+def init_layer_caches(cfg: ModelConfig, batch: int, max_seq: int,
+                      dtype=jnp.bfloat16) -> List[LayerCache]:
+    """Per-layer decode caches: ring buffers for local layers, linear for
+    global; SSM states for ssm/hybrid families."""
+    caches = []
+    KV, Dh = cfg.n_kv_heads, cfg.resolved_head_dim
+    for window in cfg.layer_kinds():
+        kv = None
+        if cfg.family != "ssm":
+            if window and window < max_seq:
+                kv = attn.init_cache(batch, window, KV, Dh, dtype)
+            else:
+                kv = attn.init_cache(batch, max_seq, KV, Dh, dtype)
+        ssm_state = None
+        if cfg.family in ("ssm", "hybrid"):
+            ssm_state = ssm_lib.ssm_init_state(cfg, batch, dtype)
+        caches.append(LayerCache(kv=kv, ssm=ssm_state))
+    return caches
+
+
+def _layer_slice(values, l: int):
+    return jax.tree.map(lambda v: v[l], values["layers"])
+
+
+def decode_step(values, cfg: ModelConfig, caches: List[LayerCache],
+                token, pos):
+    """One decode step. token (B, 1) int32; pos scalar int32 (position of
+    this token).  Returns (logits (B,1,V), new caches)."""
+    x = embed_tokens(values, cfg, token)
+    x = constrain(x, ("batch", None, "embed_act"))
+    new_caches = []
+    kinds = cfg.layer_kinds()
+    for l in range(cfg.n_layers):
+        p = _layer_slice(values, l)
+        cache = caches[l]
+        window = kinds[l]
+        h = pp.rms_norm(x, p["pre_attn_norm"], cfg.norm_eps)
+        new_kv, new_ssm = cache.kv, cache.ssm
+        if cfg.family == "ssm":
+            out, new_ssm = ssm_lib.ssm_step(p["ssm"], h, cache.ssm, cfg)
+            x = x + out
+        else:
+            B = h.shape[0]
+            H, Dh, KV = cfg.n_heads, cfg.resolved_head_dim, cfg.n_kv_heads
+            q = (h @ p["attn"]["wq"].astype(h.dtype)).reshape(B, 1, H, Dh)
+            k = (h @ p["attn"]["wk"].astype(h.dtype)).reshape(B, 1, KV, Dh)
+            v = (h @ p["attn"]["wv"].astype(h.dtype)).reshape(B, 1, KV, Dh)
+            if cfg.qk_norm:
+                q = pp.rms_norm(q, p["attn"]["q_norm"], cfg.norm_eps)
+                k = pp.rms_norm(k, p["attn"]["k_norm"], cfg.norm_eps)
+            pos_arr = jnp.full((1, 1), pos, jnp.int32)
+            q = attn.apply_rope(q, pos_arr, cfg.rope_theta)
+            k = attn.apply_rope(k, pos_arr, cfg.rope_theta)
+            ring = attn.is_ring(window, cache.kv.k.shape[1])
+            new_kv = attn.cache_update(cache.kv, k, v, pos, ring)
+            new_kv = LayerCacheConstrain(new_kv)
+            a = attn.decode_attend(
+                q, new_kv, pos, ring, KV, window=window,
+                softcap_val=cfg.attn_softcap,
+            )
+            a_out = a.reshape(B, 1, H * Dh) @ p["attn"]["wo"].astype(h.dtype)
+            if cfg.parallel_ssm:
+                s_out, new_ssm = ssm_lib.ssm_step(p["ssm"], h, cache.ssm, cfg)
+                a_out = 0.5 * (
+                    pp.rms_norm(a_out, p["attn_branch_norm"], cfg.norm_eps)
+                    + pp.rms_norm(s_out, p["ssm_branch_norm"], cfg.norm_eps)
+                )
+            if cfg.post_norms:
+                a_out = pp.rms_norm(a_out, p["post_attn_norm"], cfg.norm_eps)
+            x = x + a_out
+            if cfg.d_ff > 0:
+                h2 = pp.rms_norm(x, p["pre_ffn_norm"], cfg.norm_eps)
+                if "moe" in p:
+                    f = ffn_lib.moe_apply(p["moe"], h2, cfg, cfg.act)
+                else:
+                    f = ffn_lib.ffn_apply(p["ffn"], h2, cfg.act)
+                if cfg.post_norms:
+                    f = pp.rms_norm(f, p["post_ffn_norm"], cfg.norm_eps)
+                x = x + f
+        new_caches.append(LayerCache(kv=new_kv, ssm=new_ssm))
+    logits = unembed(values, cfg, x)
+    return logits, new_caches
+
+
+def LayerCacheConstrain(kv: attn.KVCache) -> attn.KVCache:
+    k = constrain(kv.k, ("batch", "kv_seq", "heads_act"))
+    v = constrain(kv.v, ("batch", "kv_seq", "heads_act"))
+    return attn.KVCache(k, v)
+
+
+def prefill(values, cfg: ModelConfig, tokens, img_embeds=None,
+            max_seq: Optional[int] = None):
+    """Prefill forward: returns (logits, per-layer caches ready for decode).
+
+    Local (windowed) layers convert the full-sequence K/V into the ring
+    layout (slot s = latest position with pos % W == s); global layers are
+    zero-padded out to ``max_seq`` slots so decode has room to append; SSM
+    layers hand off their final (h, conv) state.
+    """
+    logits, (kvs, ssm_states) = forward(
+        values, cfg, tokens, img_embeds=img_embeds, collect_kv=True
+    )
+    caches: List[LayerCache] = []
+    kinds = cfg.layer_kinds()
+    S = logits.shape[1]
+    max_seq = max_seq or S
+    for l, window in enumerate(kinds):
+        kv = None
+        if cfg.family != "ssm" and kvs is not None:
+            k_l, v_l = kvs[0][l], kvs[1][l]
+            k_l = k_l.reshape(k_l.shape[0], k_l.shape[1], -1)  # flat storage
+            v_l = v_l.reshape(v_l.shape[0], v_l.shape[1], -1)
+            if window and window < S:
+                start = S - window
+                rolled_k = jnp.roll(k_l[:, start:], shift=start % window, axis=1)
+                rolled_v = jnp.roll(v_l[:, start:], shift=start % window, axis=1)
+                kv = attn.KVCache(rolled_k, rolled_v)
+            else:
+                if max_seq > S:
+                    pad = ((0, 0), (0, max_seq - S), (0, 0))
+                    k_l = jnp.pad(k_l, pad)
+                    v_l = jnp.pad(v_l, pad)
+                kv = attn.KVCache(k_l, v_l)
+        ssm_state = None
+        if ssm_states is not None and cfg.family in ("ssm", "hybrid"):
+            ssm_state = jax.tree.map(lambda s: s[l], ssm_states)
+        caches.append(LayerCache(kv=kv, ssm=ssm_state))
+    return logits, caches

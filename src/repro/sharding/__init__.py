@@ -1,0 +1,5 @@
+from .rules import (
+    TRAIN_RULES, SERVE_RULES, LONG_CONTEXT_SERVE_RULES,
+    resolve_spec, param_specs, Rules,
+)
+from .activation import activation_sharding, constrain

@@ -1,0 +1,47 @@
+"""Activation sharding constraints, decoupled from model code.
+
+Model forward passes call ``constrain(x, ("batch", "seq", "embed_act"))``
+at the canonical cut points.  Outside any context this is a no-op (pure
+single-device semantics, e.g. smoke tests); inside
+``activation_sharding(rules, mesh)`` it applies
+``jax.lax.with_sharding_constraint`` with the resolved PartitionSpec —
+this is how the launcher steers GSPMD without models knowing about meshes.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import NamedSharding
+
+from . import rules as rules_lib
+
+_state = threading.local()
+
+
+def _top():
+    stack = getattr(_state, "stack", None)
+    return stack[-1] if stack else None
+
+
+@contextlib.contextmanager
+def activation_sharding(rules: rules_lib.Rules, mesh):
+    stack = getattr(_state, "stack", None)
+    if stack is None:
+        stack = _state.stack = []
+    stack.append((rules, mesh))
+    try:
+        yield
+    finally:
+        stack.pop()
+
+
+def constrain(x, axes: Tuple[Optional[str], ...]):
+    ctx = _top()
+    if ctx is None:
+        return x
+    rules, mesh = ctx
+    spec = rules_lib.resolve_spec(axes, rules, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,131 @@
+"""Logical-axis -> mesh-axis sharding rules (MaxText-style).
+
+Params carry logical axis names (models/params.py); activations are
+constrained through sharding/activation.py.  A ``Rules`` table maps each
+logical name to a mesh axis (or tuple of axes, or None = replicated).
+
+Mesh axes: ("pod", "data", "model") multi-pod, ("data", "model") single-pod.
+
+TRAIN_RULES — ZeRO-3-style: every param's d_model dim shards over ``data``
+(FSDP; XLA all-gathers per layer and reduce-scatters grads) while TP dims
+(vocab/heads/d_ff/experts) shard over ``model``.  Optimizer state inherits
+param sharding, so Adam moments are fully sharded (ZeRO-1 comes free).
+
+SERVE_RULES — params replicated over ``data`` (no optimizer, latency wins),
+TP dims over ``model``; batch shards over (pod, data).
+
+LONG_CONTEXT_SERVE_RULES — for global_batch < |data| (the long_500k cell):
+the KV cache's *sequence* dim shards over (pod, data) (sequence
+parallelism); attention against the sharded cache ends in a psum that XLA
+derives automatically.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+Assignment = Union[None, str, Tuple[str, ...]]
+Rules = Dict[str, Assignment]
+
+
+class Axes(tuple):
+    """Logical-axes leaf marker.  Needed wherever an axes tuple lives
+    inside a NamedTuple container (KVCache, SSMState, ...): a plain tuple
+    leaf is indistinguishable from the container itself under
+    ``is_leaf=isinstance(x, tuple)`` — which silently replicated every
+    decode cache until this type existed (see EXPERIMENTS.md §Perf)."""
+
+
+def is_axes_leaf(x) -> bool:
+    return isinstance(x, Axes) or (
+        isinstance(x, tuple) and not hasattr(x, "_fields")
+        and all(isinstance(a, (str, type(None))) for a in x)
+    )
+
+TRAIN_RULES: Rules = {
+    # params
+    "vocab": "model",
+    "d_model": "data",          # FSDP / ZeRO-3
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "d_ff": "model",
+    "experts": "model",
+    "ssm_inner": "model",
+    "layers": None,
+    # activations
+    "batch": ("pod", "data"),
+    "seq": None,
+    "kv_seq": None,
+    "embed_act": None,
+    "heads_act": "model",
+    "d_ff_act": "model",
+    "vocab_act": "model",
+    "experts_act": "model",
+    "groups_act": ("pod", "data"),
+}
+
+SERVE_RULES: Rules = {
+    **TRAIN_RULES,
+    "d_model": None,            # replicate params over data for latency
+    # d_ff falls back to `data` when `model` is already claimed by the
+    # experts dim: dbrx-132b's 250 GB of expert weights then shard
+    # (E/model x d_ff/data) = /256 instead of /16 — without this the
+    # serve params alone (16.5 GB bf16/chip) overflow HBM.
+    "d_ff": ("model", "data"),
+}
+
+LONG_CONTEXT_SERVE_RULES: Rules = {
+    **SERVE_RULES,
+    "batch": None,              # global_batch < |data|: don't shard batch
+    "kv_seq": ("pod", "data"),  # sequence parallelism over the cache
+    "groups_act": None,
+}
+
+# §Perf hillclimb (decode cells): shard the KV cache's SEQUENCE dim over
+# the model axis instead of its heads dim.  Decode attention then runs
+# fully local per seq-shard (partial softmax + tiny psums) and GSPMD never
+# has to reshard the (B, S, KV*Dh) cache between heads/batch layouts —
+# which is what blew decode peak memory up at baseline.
+DECODE_SP_RULES: Rules = {
+    **SERVE_RULES,
+    "kv_seq": "model",
+    "heads_act": None,
+}
+
+
+def resolve_spec(axes: Tuple[Optional[str], ...], rules: Rules,
+                 mesh: Mesh) -> PartitionSpec:
+    """Map logical axes to a PartitionSpec, dropping mesh axes that don't
+    exist (single-pod mesh has no 'pod') and de-duplicating axes that would
+    be assigned twice (first dim wins)."""
+    mesh_axes = set(mesh.axis_names)
+    used = set()
+    out = []
+    for ax in axes:
+        assign = rules.get(ax) if ax is not None else None
+        if assign is None:
+            out.append(None)
+            continue
+        if isinstance(assign, str):
+            assign = (assign,)
+        picked = tuple(a for a in assign if a in mesh_axes and a not in used)
+        used.update(picked)
+        if not picked:
+            out.append(None)
+        elif len(picked) == 1:
+            out.append(picked[0])
+        else:
+            out.append(picked)
+    return PartitionSpec(*out)
+
+
+def param_specs(axes_tree, rules: Rules, mesh: Mesh):
+    """Axes tree (from models.params.split) -> tree of NamedShardings."""
+    return jax.tree.map(
+        lambda axes: NamedSharding(mesh, resolve_spec(axes, rules, mesh)),
+        axes_tree,
+        is_leaf=lambda x: isinstance(x, tuple),
+    )

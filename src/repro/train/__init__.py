@@ -1,0 +1,1 @@
+from .step import TrainConfig, make_train_step, make_loss_and_grads

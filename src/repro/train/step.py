@@ -1,0 +1,176 @@
+"""Train-step factory: microbatched grad accumulation, remat, ZeRO sharding,
+clipping, AdamW, schedules, optional cross-pod int8 gradient compression.
+
+The returned ``train_step(values, opt_state, batch, step)`` is a pure
+function suitable for ``jax.jit`` with in/out shardings from
+sharding/rules.py.  Activation sharding constraints fire inside the traced
+body via the ``activation_sharding`` context (no-op when rules is None).
+
+Memory posture at scale (the reason for each knob):
+  * params f32, compute bf16 (models cast at block entry);
+  * grads accumulate in f32, sharded like params (data x model) —
+    reduce-scatter semantics fall out of GSPMD;
+  * microbatching bounds logits/activation peaks: per-microbatch
+    batch_per_device rows instead of the full per-device batch;
+  * remat="full" re-computes each layer in backward, so the live set is
+    one layer + the scan carry.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .. import optim
+from ..sharding import activation as act_lib
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    microbatches: int = 1
+    max_grad_norm: float = 1.0
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    weight_decay: float = 0.01
+    b1: float = 0.9
+    b2: float = 0.95
+    compress_pod_grads: bool = False   # int8+EF all-reduce over "pod"
+    # Cast the whole param tree to bf16 BEFORE the layer scan: the cast is
+    # elementwise on the sharded (local) leaves, so every FSDP all-gather
+    # inside the scan moves bf16 instead of f32 — 2x less collective bytes.
+    # f32 master params stay in the optimizer path (grads flow through the
+    # cast and come out f32).  §Perf hillclimb C1 for train cells.
+    cast_params_bf16: bool = False
+
+
+def _tree_add(a, b):
+    return jax.tree.map(jnp.add, a, b)
+
+
+def _tree_zeros_f32(tree):
+    return jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), tree)
+
+
+def make_loss_and_grads(loss_fn, microbatches: int, constrain_grads=None):
+    """Returns grads_fn(values, batch) -> (mean loss, mean grads) with
+    ``lax.scan`` gradient accumulation over microbatches.
+
+    constrain_grads: optional fn(tree)->tree applying the PARAM sharding to
+    gradients.  Without it GSPMD can leave the grad accumulator (a scan
+    carry) replicated — every per-microbatch gradient then moves through a
+    full-shape all-reduce instead of a reduce-scatter (measured 16x more
+    collective bytes on gemma2-27b train; see EXPERIMENTS.md §Perf)."""
+
+    def single(values, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(values, batch)
+        if constrain_grads is not None:
+            grads = constrain_grads(grads)
+        return loss, grads
+
+    if microbatches <= 1:
+        return single
+
+    def accumulated(values, batch):
+        def to_mb(x):
+            return x.reshape((microbatches, x.shape[0] // microbatches)
+                             + x.shape[1:])
+
+        mbs = jax.tree.map(to_mb, batch)
+
+        def body(carry, mb):
+            loss_acc, grads_acc = carry
+            loss, grads = jax.value_and_grad(loss_fn)(values, mb)
+            if constrain_grads is not None:
+                grads = constrain_grads(grads)
+            return (loss_acc + loss, _tree_add(grads_acc, grads)), None
+
+        acc0 = _tree_zeros_f32(values)
+        if constrain_grads is not None:
+            acc0 = constrain_grads(acc0)
+        init = (jnp.zeros((), jnp.float32), acc0)
+        (loss_sum, grads_sum), _ = jax.lax.scan(body, init, mbs)
+        inv = 1.0 / microbatches
+        return loss_sum * inv, jax.tree.map(lambda g: g * inv, grads_sum)
+
+    return accumulated
+
+
+def make_train_step(loss_fn, tcfg: TrainConfig, rules=None, mesh=None,
+                    param_axes=None):
+    """loss_fn(values, batch) -> scalar.  Returns (train_step, opt_init).
+
+    param_axes: logical-axes tree matching the param tree — used to pin
+    gradient shardings to the param shardings (reduce-scatter instead of
+    replicated all-reduce; see make_loss_and_grads)."""
+    opt_cfg = optim.AdamWConfig(
+        lr=tcfg.lr, b1=tcfg.b1, b2=tcfg.b2,
+        weight_decay=tcfg.weight_decay,
+    )
+    sched = optim.linear_warmup_cosine(
+        tcfg.lr, tcfg.warmup_steps, tcfg.total_steps
+    )
+
+    constrain_grads = None
+    if param_axes is not None and rules is not None and mesh is not None:
+        from jax.sharding import NamedSharding
+
+        from ..sharding import rules as rules_lib
+
+        shardings = jax.tree.map(
+            lambda a: NamedSharding(
+                mesh, rules_lib.resolve_spec(a, rules, mesh)),
+            param_axes, is_leaf=rules_lib.is_axes_leaf,
+        )
+
+        def constrain_grads(grads):  # noqa: F811
+            return jax.tree.map(jax.lax.with_sharding_constraint,
+                                grads, shardings)
+
+    eff_loss = loss_fn
+    if tcfg.cast_params_bf16:
+        from ..models import params as pp
+
+        def eff_loss(v, b):  # noqa: F811
+            cast = pp.cast_tree(v, jnp.bfloat16)
+            if constrain_grads is not None:
+                # pin the bf16 copies to the SHARDED spec: otherwise GSPMD
+                # may place the FSDP all-gather BEFORE the convert and move
+                # f32 over the wire (observed on gemma2-27b; §Perf H1 It.3)
+                cast = jax.tree.map(jax.lax.with_sharding_constraint,
+                                    cast, shardings)
+            return loss_fn(cast, b)
+
+    grads_fn = make_loss_and_grads(eff_loss, tcfg.microbatches,
+                                   constrain_grads)
+
+    def opt_init(values):
+        return optim.adamw_init(values, opt_cfg)
+
+    def train_step(values, opt_state, batch, step):
+        ctx = (act_lib.activation_sharding(rules, mesh)
+               if rules is not None else _null_ctx())
+        with ctx:
+            loss, grads = grads_fn(values, batch)
+            grads, grad_norm = optim.clip_by_global_norm(
+                grads, tcfg.max_grad_norm
+            )
+            lr = sched(step)
+            new_values, new_opt = optim.adamw_update(
+                grads, opt_state, values, opt_cfg, lr
+            )
+        metrics = {"loss": loss, "grad_norm": grad_norm, "lr": lr}
+        return new_values, new_opt, metrics
+
+    return train_step, opt_init
+
+
+import contextlib
+
+
+@contextlib.contextmanager
+def _null_ctx():
+    yield

@@ -1,0 +1,7 @@
+"""Pytest config — deliberately does NOT set XLA_FLAGS: smoke tests and
+benches must see 1 device; multi-device tests spawn subprocesses."""
+import pytest
+
+
+def pytest_configure(config):
+    config.addinivalue_line("markers", "slow: long-running test")

@@ -1,0 +1,76 @@
+"""§4.2 adaptive sampling: Eq.(3) metric, count selection, interpolation."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import adaptive, fields, pipeline, scene
+
+
+def _probe_data(n_rays=64, ns=64):
+    field = scene.make_scene("mic")
+    fns = fields.analytic_field_fns(field)
+    cam = scene.look_at_camera(8, 8, theta=0.3, phi=0.5)
+    o, d = scene.camera_rays(cam)
+    rgb, aux = pipeline.render_fixed_fns(fns, o, d, ns)
+    return rgb, aux
+
+
+def test_rendering_difficulty_eq3():
+    a = jnp.asarray([[0.1, 0.5, 0.9]])
+    b = jnp.asarray([[0.2, 0.2, 0.85]])
+    rd = adaptive.rendering_difficulty(a, b)
+    np.testing.assert_allclose(float(rd[0]), 0.3, rtol=1e-6)
+
+
+def test_probe_counts_monotone_in_delta():
+    rgb, aux = _probe_data()
+    cands = (8, 16, 32)
+    loose = adaptive.probe_counts(aux["sigmas"], aux["colors"], rgb, 64,
+                                  cands, delta=0.1)
+    tight = adaptive.probe_counts(aux["sigmas"], aux["colors"], rgb, 64,
+                                  cands, delta=1e-5)
+    assert float(jnp.mean(loose)) <= float(jnp.mean(tight))
+    ladder = set(cands) | {64}
+    assert set(np.asarray(loose).tolist()) <= ladder
+
+
+def test_delta_zero_is_lossless_selection():
+    """rd_i = 0 required -> chosen count must reproduce the full render."""
+    rgb, aux = _probe_data()
+    counts = adaptive.probe_counts(aux["sigmas"], aux["colors"], rgb, 64,
+                                   (8, 16, 32), delta=0.0)
+    for r in range(rgb.shape[0]):
+        c = int(counts[r])
+        if c < 64:
+            sub = adaptive.subsampled_composite(
+                aux["sigmas"][r:r+1], aux["colors"][r:r+1], 64, c)
+            rd = adaptive.rendering_difficulty(rgb[r:r+1], sub)
+            assert float(rd[0]) <= 1e-6
+
+
+def test_interpolate_counts_snaps_up_to_ladder():
+    probe = jnp.asarray([8, 8, 64, 64], jnp.int32)
+    full = adaptive.interpolate_counts(probe, (2, 2), (8, 8),
+                                       candidates=(8, 16, 32), ns_full=64)
+    vals = set(np.asarray(full).tolist())
+    assert vals <= {8, 16, 32, 64}
+    # corners keep their probe values
+    grid = np.asarray(full).reshape(8, 8)
+    assert grid[0, 0] == 8 and grid[-1, -1] == 64
+
+
+def test_sort_rays_into_blocks():
+    counts = jnp.asarray([64, 8, 32, 8, 64, 8, 16, 8], jnp.int32)
+    order, budgets = adaptive.sort_rays_into_blocks(counts, 4)
+    sorted_counts = np.asarray(counts)[np.asarray(order)]
+    assert (np.diff(sorted_counts) >= 0).all()
+    assert budgets.shape == (2,)
+    # block budget = max in block (conservative)
+    assert int(budgets[0]) == sorted_counts[:4].max()
+    assert int(budgets[1]) == sorted_counts[4:].max()
+
+
+def test_compute_savings_matches_paper_shape():
+    counts = jnp.full((100,), 120, jnp.int32)
+    s = adaptive.compute_savings(counts, 192)
+    np.testing.assert_allclose(s["sample_reduction"], 1.6, rtol=1e-6)

@@ -1,0 +1,109 @@
+"""Checkpointing: atomicity, keep-k, restart, elastic reshard."""
+import json
+import shutil
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt import CheckpointManager, restore_checkpoint, save_checkpoint
+from repro.ckpt.manager import available_steps
+
+
+def _tree(key=0):
+    k = jax.random.PRNGKey(key)
+    return {"w": jax.random.normal(k, (4, 8)),
+            "b": {"x": jnp.arange(6, dtype=jnp.float32)}}
+
+
+def test_save_restore_roundtrip(tmp_path):
+    t = _tree()
+    save_checkpoint(tmp_path, 3, t)
+    got, step = restore_checkpoint(tmp_path, t)
+    assert step == 3
+    for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(t)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_incomplete_tmp_ignored(tmp_path):
+    """A crashed writer leaves .tmp — restore must skip it."""
+    t = _tree()
+    save_checkpoint(tmp_path, 1, t)
+    # simulate crash: tmp dir with partial payload, no manifest
+    bad = tmp_path / "step_000000002.tmp"
+    bad.mkdir()
+    (bad / "leaf_00000.npy").write_bytes(b"garbage")
+    got, step = restore_checkpoint(tmp_path, t)
+    assert step == 1
+    assert available_steps(tmp_path) == [1]
+
+
+def test_manifest_written_last_guards_partial_rename(tmp_path):
+    """A dir without manifest.json is not a valid checkpoint."""
+    d = tmp_path / "step_000000005"
+    d.mkdir()
+    np.save(d / "leaf_00000.npy", np.zeros(3))
+    assert available_steps(tmp_path) == []
+
+
+def test_keep_k_gc(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=2, async_save=False)
+    t = _tree()
+    for s in range(5):
+        mgr.save(s, t)
+    assert available_steps(tmp_path) == [3, 4]
+
+
+def test_async_save_and_wait(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=3, async_save=True)
+    t = _tree()
+    mgr.save(7, t)
+    mgr.wait()
+    assert mgr.latest_step() == 7
+    got, _ = mgr.restore(t)
+    np.testing.assert_array_equal(np.asarray(got["w"]), np.asarray(t["w"]))
+
+
+def test_leaf_count_mismatch_fails_loudly(tmp_path):
+    save_checkpoint(tmp_path, 0, _tree())
+    with pytest.raises(ValueError):
+        restore_checkpoint(tmp_path, {"only": jnp.zeros(3)})
+
+
+def test_elastic_reshard_subprocess(tmp_path):
+    """Save on a 4-device mesh sharding, restore re-sharded to 2 devices
+    (the elastic resume path: checkpoint written at N chips, resumed at
+    N/2)."""
+    import os
+    import subprocess
+    import sys
+
+    code = f"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from repro.ckpt import save_checkpoint, restore_checkpoint
+
+root = {str(tmp_path)!r}
+mesh4 = Mesh(np.asarray(jax.devices()[:4]).reshape(4), ("data",))
+sh4 = NamedSharding(mesh4, P("data"))
+x = jax.device_put(jnp.arange(32, dtype=jnp.float32).reshape(8, 4), sh4)
+save_checkpoint(root, 11, {{"x": x}})
+
+mesh2 = Mesh(np.asarray(jax.devices()[:2]).reshape(2), ("data",))
+sh2 = NamedSharding(mesh2, P("data"))
+got, step = restore_checkpoint(root, {{"x": x}}, shardings={{"x": sh2}})
+assert step == 11
+assert got["x"].sharding == sh2, got["x"].sharding
+np.testing.assert_array_equal(np.asarray(got["x"]), np.asarray(x))
+print("OK")
+"""
+    env = dict(os.environ, PYTHONPATH="src")
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, env=env,
+                       cwd=Path(__file__).resolve().parent.parent)
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "OK" in r.stdout

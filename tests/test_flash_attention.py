@@ -1,0 +1,42 @@
+"""Flash-attention Pallas kernel vs the attend_full oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import flash_attention
+from repro.models import attention as A
+
+
+@pytest.mark.parametrize("B,S,H,KV,Dh", [
+    (2, 256, 4, 2, 64),    # GQA
+    (1, 128, 4, 4, 32),    # MHA
+    (1, 512, 8, 1, 64),    # MQA
+])
+@pytest.mark.parametrize("window,cap", [(0, 0.0), (128, 0.0), (0, 50.0)])
+def test_flash_matches_reference(B, S, H, KV, Dh, window, cap):
+    key = jax.random.PRNGKey(S + H + window)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, S, H, Dh))
+    k = jax.random.normal(ks[1], (B, S, KV, Dh))
+    v = jax.random.normal(ks[2], (B, S, KV, Dh))
+    pos = jnp.arange(S, dtype=jnp.int32)
+    want = A.attend_full(q, k, v, pos, pos, window=window, softcap_val=cap)
+    got = flash_attention(q, k, v, window=window, softcap=cap)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_flash_bf16_io():
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (1, 128, 2, 32), jnp.bfloat16)
+    k = jax.random.normal(ks[1], (1, 128, 2, 32), jnp.bfloat16)
+    v = jax.random.normal(ks[2], (1, 128, 2, 32), jnp.bfloat16)
+    pos = jnp.arange(128, dtype=jnp.int32)
+    want = A.attend_full(q, k, v, pos, pos)
+    got = flash_attention(q, k, v)
+    assert got.dtype == jnp.bfloat16
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=3e-2, atol=3e-2)

@@ -1,0 +1,18 @@
+"""Instant-NGP training substrate: converges on the analytic scene."""
+import jax.numpy as jnp
+import pytest
+
+from repro.core import train as T
+from repro.core.model import NGPConfig
+
+
+@pytest.mark.slow
+def test_ngp_training_reduces_loss():
+    cfg = T.NGPTrainConfig(steps=60, batch_rays=512, n_samples=32,
+                           n_views=4, view_hw=(48, 48), log_every=30)
+    params, mcfg, field, hist = T.train_ngp(cfg, verbose=False)
+    first, last = hist[0][1], hist[-1][1]
+    assert last < first * 0.4, hist
+    leaves = jnp.concatenate([x.reshape(-1) for x in
+                              [params["grid"].reshape(-1)]])
+    assert bool(jnp.all(jnp.isfinite(leaves)))

@@ -1,0 +1,81 @@
+"""Locality profiling (paper Figs. 4/8/15/22) behaves as the paper found."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fields, pipeline, reuse, scene
+from repro.core.hashgrid import HashGridConfig
+
+
+CFG = HashGridConfig(n_levels=8, log2_table_size=14, max_resolution=256)
+
+
+def _two_neighbor_rays(S=96):
+    # fine camera so adjacent pixels are adjacent rays (paper: 800x800)
+    cam = scene.look_at_camera(128, 128, theta=0.5, phi=0.5)
+    o, d = scene.camera_rays(cam)
+    mid = 64 * 128 + 64
+    pts_a, _, _ = scene.sample_points(o[mid:mid+1], d[mid:mid+1], S)
+    pts_b, _, _ = scene.sample_points(o[mid+1:mid+2], d[mid+1:mid+2], S)
+    return pts_a[0], pts_b[0]
+
+
+def test_inter_ray_repetition_high_at_low_res():
+    """Paper Fig. 15a: neighboring rays share >90% of voxels at low res,
+    decreasing with resolution."""
+    a, b = _two_neighbor_rays()
+    rates = reuse.inter_ray_repetition(a, b, CFG)
+    assert rates[0] > 0.85
+    assert rates[0] >= rates[-1]
+
+
+def test_intra_ray_concentration():
+    """Paper Fig. 15b: many samples of one ray land in the same voxel at
+    low res; fewer at high res."""
+    a, _ = _two_neighbor_rays()
+    counts = reuse.intra_ray_max_voxel_count(a, CFG)
+    assert counts[0] > counts[-1]
+    assert counts[0] >= 6
+
+
+def test_color_cosine_similarity_near_one():
+    """Paper Fig. 8: >95% of adjacent-sample color cosines ~ 1."""
+    field = scene.make_scene("lego")
+    fns = fields.analytic_field_fns(field)
+    cam = scene.look_at_camera(12, 12, theta=0.9, phi=0.5)
+    o, d = scene.camera_rays(cam)
+    _, aux = pipeline.render_fixed_fns(fns, o, d, 64)
+    cos = reuse.adjacent_color_cosine(aux["colors"])
+    assert (cos > 0.95).mean() > 0.9
+
+
+def test_lru_cache_hit_rate_monotone_in_size():
+    """Paper Fig. 22 shape: bigger register cache -> higher hit rate, with
+    diminishing returns; level-0 traces hit hard even at 8 entries."""
+    a, _ = _two_neighbor_rays()
+    sweep = reuse.cache_sweep(a, CFG, sizes=(0, 2, 8, 32))
+    assert (sweep[0] == 0).all()
+    assert (sweep[8] >= sweep[2] - 1e-9).all()
+    assert (sweep[32] >= sweep[8] - 1e-9).all()
+    assert sweep[8][0] > 0.5
+
+
+def test_dedup_window_rate_and_gather_bytes():
+    a, _ = _two_neighbor_rays()
+    r0 = reuse.dedup_window_rate(a, CFG, window=32, level=0)
+    r_hi = reuse.dedup_window_rate(a, CFG, window=32, level=CFG.n_levels - 1)
+    assert r0 > r_hi            # low-res tiles dedup far more
+    assert 0.0 <= r_hi <= 1.0
+    full = reuse.gather_bytes(1000, CFG)
+    deduped = reuse.gather_bytes(1000, CFG, dedup_rate=r0)
+    assert deduped < full
+
+
+def test_hash_trace_irregularity():
+    """Paper Fig. 4: hashed addresses jump; dense addresses are local."""
+    a, _ = _two_neighbor_rays()
+    tr_dense = reuse.hash_address_trace(a, CFG, 0)
+    tr_hash = reuse.hash_address_trace(a, CFG, CFG.n_levels - 1)
+    jump_d = np.abs(np.diff(tr_dense[:, 0])).mean()
+    jump_h = np.abs(np.diff(tr_hash[:, 0])).mean()
+    assert jump_h > 10 * jump_d

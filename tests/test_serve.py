@@ -1,0 +1,50 @@
+"""Serving engine: batched generation, greedy rollout correctness."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as configs
+from repro.models import lm, transformer as tfm
+from repro.serve.engine import Request, ServeConfig, ServingEngine
+
+
+@pytest.fixture(scope="module")
+def engine():
+    cfg = dataclasses.replace(configs.get_smoke("minitron-8b"),
+                              dtype="float32")
+    api = lm.build(cfg, remat_policy=None)
+    values = api.init(jax.random.PRNGKey(0))
+    eng = ServingEngine(api, values, ServeConfig(max_seq=64, slots=2))
+    return cfg, api, values, eng
+
+
+def test_batched_generation_completes(engine):
+    cfg, api, values, eng = engine
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i, prompt=rng.integers(0, cfg.vocab, size=8),
+                    max_new=6) for i in range(5)]
+    done = eng.generate(reqs)
+    assert len(done) == 5
+    for r in done:
+        assert r.out is not None and r.out.shape == (6,)
+        assert (r.out >= 0).all() and (r.out < cfg.vocab).all()
+
+
+def test_greedy_decode_matches_forward_rollout(engine):
+    """Engine's greedy generation must equal argmax rollout through the
+    full forward pass (teacher-forcing the generated tokens)."""
+    cfg, api, values, eng = engine
+    prompt = np.asarray([5, 9, 2, 7], dtype=np.int32)
+    req = Request(rid=0, prompt=prompt, max_new=5)
+    eng.generate([req])
+
+    toks = list(prompt)
+    for _ in range(5):
+        logits, _ = tfm.forward(values, cfg,
+                                jnp.asarray([toks], dtype=jnp.int32))
+        toks.append(int(jnp.argmax(logits[0, -1])))
+    want = np.asarray(toks[len(prompt):])
+    np.testing.assert_array_equal(req.out, want)
