@@ -1,0 +1,19 @@
+# Tier-1 verification targets.  `make test` is the CI entry point: the
+# fast subset (slow train/e2e tests excluded via pytest.ini addopts),
+# bounded well under 120 s on this container.
+PY ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: test test-full bench-serve dryrun-serve
+
+test:
+	$(PY) -m pytest -x -q
+
+test-full:
+	$(PY) -m pytest -m "" -q
+
+bench-serve:
+	$(PY) benchmarks/render_serve.py
+
+dryrun-serve:
+	$(PY) -m repro.launch.render_serve --dryrun

@@ -1,0 +1,94 @@
+"""Multi-user render serving demo: pooled blocks + cross-frame probe reuse.
+
+  PYTHONPATH=src python examples/render_serve.py [--frames 12] [--size 64]
+
+Simulates two users orbiting two different scenes at once.  Their render
+requests interleave in the engine's slots; every scheduling round pools
+the Phase-II blocks of all live frames into budget-sorted batches, and
+each user's smooth trajectory reuses its own Phase-I probe maps (with the
+pose-scaled conservative dilation) instead of re-probing per frame.
+
+Writes out/serve_<scene>_<frame>.ppm plus a per-frame stats table.
+"""
+import argparse
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+import numpy as np
+
+from repro.core import fields, pipeline, rendering, scene
+from repro.serve.render_engine import (RenderRequest, RenderServeConfig,
+                                       RenderServingEngine)
+
+
+def write_ppm(path, img):
+    img8 = np.asarray(np.clip(np.asarray(img) * 255, 0, 255), np.uint8)
+    h, w, _ = img8.shape
+    with open(path, "wb") as f:
+        f.write(f"P6 {w} {h} 255\n".encode())
+        f.write(img8.tobytes())
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--frames", type=int, default=12,
+                    help="frames per user trajectory")
+    ap.add_argument("--size", type=int, default=64)
+    ap.add_argument("--scenes", nargs=2, default=("hotdog", "mic"))
+    args = ap.parse_args()
+
+    acfg = pipeline.ASDRConfig(
+        ns_full=96, probe_stride=4, candidates=(12, 24, 48),
+        block_size=256, chunk=16, sort_by_opacity=False)
+    flds = {s: fields.analytic_field_fns(scene.make_scene(s))
+            for s in args.scenes}
+    eng = RenderServingEngine(flds, acfg, RenderServeConfig(
+        slots=4, blocks_per_batch=16,
+        reuse=pipeline.ProbeReuseConfig(max_angle_deg=3.0,
+                                        max_translation=0.05,
+                                        refresh_every=6)))
+
+    # two users, interleaved frame requests along their own orbits
+    reqs = []
+    for f in range(args.frames):
+        for u, sc in enumerate(args.scenes):
+            reqs.append(RenderRequest(
+                rid=len(reqs), scene=sc,
+                cam=scene.look_at_camera(
+                    args.size, args.size,
+                    theta=0.6 + 0.008 * f + 0.3 * u, phi=0.5)))
+
+    t0 = time.time()
+    done = eng.render(reqs)
+    dt = time.time() - t0
+
+    out = Path("out")
+    out.mkdir(exist_ok=True)
+    print(f"{'frame':>5} {'scene':>8} {'probe':>7} {'samples':>9} "
+          f"{'vs fixed':>8}")
+    per_scene = {s: 0 for s in args.scenes}
+    for r in sorted(done, key=lambda r: r.rid):
+        tag = "reused" if r.stats["probe_reused"] else "probed"
+        frac = r.stats["samples_processed"] / r.stats["baseline_samples"]
+        print(f"{r.rid:>5} {r.scene:>8} {tag:>7} "
+              f"{r.stats['samples_processed']:>9} {100 * frac:>7.1f}%")
+        write_ppm(out / f"serve_{r.scene}_{per_scene[r.scene]:03d}.ppm",
+                  r.image)
+        per_scene[r.scene] += 1
+
+    st = eng.engine_stats()
+    print(f"\n[engine] {st['frames']} frames in {dt:.2f}s = "
+          f"{st['frames']/dt:.2f} fps aggregate")
+    print(f"  reused-probe fraction {st['reused_probe_fraction']:.2f} "
+          f"({st['probe_hits']} hits, {st['probe_misses']} probes, "
+          f"{st['probe_refreshes']} refreshes)")
+    print(f"  {st['batches']} pooled batches, pad fraction "
+          f"{st['pad_block_fraction']:.2f}")
+    print(f"  wrote {sum(per_scene.values())} frames to {out}/")
+
+
+if __name__ == "__main__":
+    main()

@@ -126,6 +126,88 @@ def sort_rays_into_blocks(
     return order.astype(jnp.int32), budgets
 
 
+def pose_distance(cam_a, cam_b) -> Tuple[float, float]:
+    """(relative-rotation angle [rad], origin translation) between cameras.
+
+    The cross-frame probe-reuse criterion (serve/render_engine.py): Phase-I
+    maps transfer between poses whose rays nearly coincide, which is exactly
+    when both the relative rotation and the eye translation are small.  The
+    angle is the FULL relative-rotation angle (geodesic metric on SO(3)),
+    not just the optical-axis angle — an in-plane roll permutes every
+    pixel's ray and must count as distance even though the view direction
+    is unchanged.  Host-side numpy — runs per request, never traced.
+    """
+    ra = np.asarray(cam_a.c2w_rot, np.float64)
+    rb = np.asarray(cam_b.c2w_rot, np.float64)
+    # rotation angle of ra^T rb: cos = (trace - 1) / 2
+    cos = float(np.clip((np.trace(ra.T @ rb) - 1.0) * 0.5, -1.0, 1.0))
+    angle = float(np.arccos(cos))
+    trans = float(np.linalg.norm(
+        np.asarray(cam_a.origin) - np.asarray(cam_b.origin)))
+    return angle, trans
+
+
+def dilate_count_map(counts: jnp.ndarray, hw: Tuple[int, int],
+                     radius: int, border_fill: int | None = None) -> jnp.ndarray:
+    """Pixelwise max-filter of a count map — the conservative margin for
+    cross-frame reuse.
+
+    A count map probed at pose A, used at nearby pose B, can under-sample
+    pixels whose content shifted between the poses.  Dilating by the
+    worst-case optical flow of the pose delta (see ``reuse_dilation_radius``)
+    guarantees every pixel sees at least the count its content was assigned
+    at probe time, without warping.  Separable max over rows then columns.
+
+    The guarantee cannot hold for content entering the frame from
+    OFF-SCREEN at the borders (the probe never saw it): with
+    ``border_fill`` (typically ns_full), the radius-wide border band is
+    raised to at least that count, closing the gap conservatively.
+    """
+    if radius <= 0:
+        return counts
+    H, W = hw
+    g = counts.reshape(H, W)
+    k = 2 * radius + 1
+    gp = jnp.pad(g, ((radius, radius), (0, 0)), mode="edge")
+    g = jnp.max(jnp.stack([gp[i:i + H] for i in range(k)]), axis=0)
+    gp = jnp.pad(g, ((0, 0), (radius, radius)), mode="edge")
+    g = jnp.max(jnp.stack([gp[:, i:i + W] for i in range(k)]), axis=0)
+    if border_fill is not None:
+        yy, xx = jnp.meshgrid(jnp.arange(H), jnp.arange(W), indexing="ij")
+        border = ((yy < radius) | (yy >= H - radius)
+                  | (xx < radius) | (xx >= W - radius))
+        g = jnp.where(border, jnp.maximum(g, border_fill), g)
+    return g.reshape(H * W)
+
+
+def reuse_dilation_radius(cam, angle: float, trans: float,
+                          near: float, margin: float = 1.5) -> int:
+    """Worst-case pixel shift between two poses, as a dilation radius.
+
+    A small rotation by ``angle`` displaces the projection of a pixel at
+    image radius r by at most ``angle * (focal^2 + r^2) / focal`` (the
+    derivative of the pinhole projection; at the principal point this is
+    ``angle * focal``, growing by sec^2 toward the edges and covering
+    in-plane roll at the corners).  We take r at the image corner, so the
+    bound holds for EVERY pixel at any FOV.  Translation moves content at
+    depth z by ``trans / z * focal`` (worst case z = near).
+
+    Shifts under half a pixel cannot move content across a pixel boundary
+    and round to radius 0 — this also absorbs the ~1e-4 rad noise float32
+    ``arccos`` produces for identical poses, so zero-distance reuse is
+    exactly re-probing (tests/test_render_serve.py relies on this).
+
+    Unclamped: the caller (pipeline.probe_phase_cached) treats a radius
+    above its configured cap as a cache MISS rather than silently
+    dilating less than the conservative bound requires.
+    """
+    focal = cam.focal
+    r_corner2 = (cam.width * 0.5) ** 2 + (cam.height * 0.5) ** 2
+    rot_px = angle * (focal * focal + r_corner2) / max(focal, 1e-6)
+    px = rot_px + (trans / max(near, 1e-6)) * focal
+    return max(int(np.ceil(margin * px - 0.5)), 0)
+
+
 def compute_savings(counts: jnp.ndarray, ns_full: int) -> dict:
     """Analytic work-reduction stats (paper: avg 120 vs 192 on Lego)."""
     avg = float(jnp.mean(counts))

@@ -23,6 +23,7 @@ from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from . import adaptive, decouple, rendering, scene
 from .fields import FieldFns
@@ -52,7 +53,13 @@ def render_fixed_fns(
     fns: FieldFns, origins, dirs, n_samples: int, key=None,
     white_background: bool = True,
 ):
-    """Baseline fixed-count renderer over a FieldFns (paper's "original")."""
+    """Baseline fixed-count renderer over a FieldFns (paper's "original").
+
+    Deliberately NOT jitted here: fns closures may capture model params,
+    and a static-fns jit would bake those arrays into the executable and
+    recompile per FieldFns construction.  Callers with stable fns (the
+    serving engine, launch cells) jit at their own boundary.
+    """
     pts, deltas, ts = scene.sample_points(origins, dirs, n_samples, key)
     R, S = pts.shape[:2]
     flat = pts.reshape(-1, 3)
@@ -129,6 +136,49 @@ def _march_block(fns: FieldFns, acfg: ASDRConfig, origins, dirs, budget):
     return rgb, acc, ci
 
 
+def block_sort(acfg: ASDRConfig, counts, opacity=None):
+    """Sort rays into difficulty-homogeneous blocks: (order, budgets).
+
+    Shared by render_adaptive and the render serving engine so that pooled
+    serving blocks are built with exactly the single-image semantics.
+    counts: (R,) int32 with R % block_size == 0.
+    """
+    R = counts.shape[0]
+    B = acfg.block_size
+    if acfg.sort_by_opacity and opacity is not None:
+        # composite key: count (primary), quantized opacity (secondary)
+        key = counts.astype(jnp.int32) * 1024 + jnp.clip(
+            (opacity * 1023).astype(jnp.int32), 0, 1023)
+        order = jnp.argsort(key).astype(jnp.int32)
+        sorted_counts = counts[order]
+        budgets = sorted_counts.reshape(R // B, B).max(axis=1)
+        return order, budgets
+    return adaptive.sort_rays_into_blocks(counts, B)
+
+
+def pad_rays_to_blocks(acfg: ASDRConfig, origins, dirs, counts, opacity=None):
+    """Pad rays to a block_size multiple with minimum-count dummy rays.
+
+    Pad rays point +z from the origin corner, get the cheapest budget, and
+    never reach the image: callers crop to the first R rows after unsort.
+    Returns (origins, dirs, counts, opacity, pad).
+    """
+    R = origins.shape[0]
+    pad = (-R) % acfg.block_size
+    if pad:
+        origins = jnp.concatenate([origins, jnp.zeros((pad, 3))], axis=0)
+        dirs = jnp.concatenate(
+            [dirs, jnp.tile(jnp.asarray([[0.0, 0.0, 1.0]]), (pad, 1))], axis=0
+        )
+        counts = jnp.concatenate(
+            [counts, jnp.full((pad,), min(acfg.candidates), jnp.int32)],
+            axis=0,
+        )
+        if opacity is not None:
+            opacity = jnp.concatenate([opacity, jnp.zeros((pad,))], axis=0)
+    return origins, dirs, counts, opacity, pad
+
+
 def render_adaptive(fns: FieldFns, acfg: ASDRConfig, origins, dirs, counts,
                     opacity=None):
     """Phase II: sorted-block adaptive render.
@@ -140,15 +190,7 @@ def render_adaptive(fns: FieldFns, acfg: ASDRConfig, origins, dirs, counts,
     """
     R = origins.shape[0]
     B = acfg.block_size
-    if acfg.sort_by_opacity and opacity is not None:
-        # composite key: count (primary), quantized opacity (secondary)
-        key = counts.astype(jnp.int32) * 1024 + jnp.clip(
-            (opacity * 1023).astype(jnp.int32), 0, 1023)
-        order = jnp.argsort(key).astype(jnp.int32)
-        sorted_counts = counts[order]
-        budgets = sorted_counts.reshape(R // B, B).max(axis=1)
-    else:
-        order, budgets = adaptive.sort_rays_into_blocks(counts, B)
+    order, budgets = block_sort(acfg, counts, opacity)
     o_s = origins[order].reshape(-1, B, 3)
     d_s = dirs[order].reshape(-1, B, 3)
 
@@ -224,17 +266,8 @@ def render_asdr_image(fns: FieldFns, acfg: ASDRConfig, cam, probe_key=None):
 
     # ---- Phase II ----
     R = H * W
-    pad = (-R) % acfg.block_size
-    if pad:
-        o = jnp.concatenate([o, jnp.zeros((pad, 3))], axis=0)
-        d = jnp.concatenate(
-            [d, jnp.tile(jnp.asarray([[0.0, 0.0, 1.0]]), (pad, 1))], axis=0
-        )
-        counts = jnp.concatenate(
-            [counts, jnp.full((pad,), min(acfg.candidates), jnp.int32)], axis=0
-        )
-        if opacity is not None:
-            opacity = jnp.concatenate([opacity, jnp.zeros((pad,))], axis=0)
+    o, d, counts, opacity, _pad = pad_rays_to_blocks(
+        acfg, o, d, counts, opacity)
     rgb, acc, stats = render_adaptive(fns, acfg, o, d, counts, opacity)
     img = rgb[:R].reshape(H, W, 3)
 
@@ -245,3 +278,154 @@ def render_asdr_image(fns: FieldFns, acfg: ASDRConfig, cam, probe_key=None):
         stats["samples_processed"] / stats["baseline_samples"]
     )
     return img, stats
+
+
+# --------------------------------------------------------------------------
+# Cross-frame probe reuse — the paper's §5.2.2 data reuse extended to the
+# temporal axis: Phase-I count/opacity maps transfer between nearby camera
+# poses, so most frames of a smooth trajectory skip the probe entirely.
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class ProbeReuseConfig:
+    """When may a frame reuse another pose's Phase-I maps?
+
+    A cached entry matches when BOTH the FULL relative-rotation angle
+    (geodesic on SO(3) — an in-plane roll counts, since it permutes every
+    pixel's ray) and the eye translation to the requesting pose are under
+    the thresholds, and the image geometry (HxW, focal) is identical.
+    ``refresh_every = k`` forces a fresh probe after an entry has been
+    reused k times, bounding count-map staleness on long trajectories;
+    0 disables refreshing.
+    """
+    max_angle_deg: float = 4.0
+    max_translation: float = 0.08
+    refresh_every: int = 8
+    max_entries: int = 64
+    # conservative count-map dilation: scaled to the worst-case pixel shift
+    # of the pose delta (adaptive.reuse_dilation_radius) so reused maps
+    # never under-sample shifted content; 0 margin disables.  A pose delta
+    # whose conservative radius exceeds dilate_cap is treated as a MISS
+    # (re-probe) — never as a smaller-than-safe dilation.
+    dilate_margin: float = 1.5
+    dilate_cap: int = 8
+
+
+@dataclasses.dataclass
+class _ProbeEntry:
+    cam: "scene.Camera"
+    acfg: ASDRConfig          # config the maps were probed under
+    counts: jnp.ndarray
+    opacity: jnp.ndarray
+    reuses_since_probe: int = 0
+    last_used: int = 0
+
+
+class ProbeCache:
+    """Pose-keyed cache of Phase-I (counts, opacity) maps.
+
+    Host-side bookkeeping (pure-python, one lookup per request); the maps
+    themselves stay on device.  One cache per scene — poses from different
+    fields must never share count maps.
+    """
+
+    def __init__(self, rcfg: ProbeReuseConfig | None = None):
+        self.rcfg = rcfg or ProbeReuseConfig()
+        self._entries: list[_ProbeEntry] = []
+        self._clock = 0
+        self.hits = 0
+        self.misses = 0
+        self.refreshes = 0
+
+    def __len__(self):
+        return len(self._entries)
+
+    @property
+    def reused_fraction(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+    def _match(self, cam, acfg):
+        """Nearest usable entry: (entry, angle, translation) or None."""
+        max_ang = np.deg2rad(self.rcfg.max_angle_deg)
+        max_tr = self.rcfg.max_translation
+        best, best_score = None, np.inf
+        for e in self._entries:
+            # image geometry and probe config must match exactly: the count
+            # map is per-pixel and acfg-specific; a different focal (zoom)
+            # changes every ray even at an identical pose.  Filtering here
+            # (not post-hoc) lets entries for different configs coexist
+            # instead of shadowing each other.
+            if e.acfg != acfg:
+                continue
+            if (e.cam.height, e.cam.width) != (cam.height, cam.width):
+                continue
+            if abs(e.cam.focal - cam.focal) > 1e-6 * max(cam.focal, 1.0):
+                continue
+            ang, tr = adaptive.pose_distance(cam, e.cam)
+            if ang > max_ang or tr > max_tr:
+                continue
+            score = ang / max(max_ang, 1e-9) + tr / max(max_tr, 1e-9)
+            if score < best_score:
+                best, best_score = (e, ang, tr), score
+        return best
+
+    def _store(self, cam, acfg, counts, opacity, replacing=None):
+        self._clock += 1
+        if replacing is not None:
+            replacing.cam = cam
+            replacing.acfg = acfg
+            replacing.counts = counts
+            replacing.opacity = opacity
+            replacing.reuses_since_probe = 0
+            replacing.last_used = self._clock
+            return
+        if len(self._entries) >= self.rcfg.max_entries:
+            self._entries.remove(min(self._entries, key=lambda e: e.last_used))
+        self._entries.append(_ProbeEntry(cam, acfg, counts, opacity,
+                                         last_used=self._clock))
+
+
+def probe_phase_cached(fns: FieldFns, acfg: ASDRConfig, cam,
+                       cache: ProbeCache | None, probe_key=None):
+    """Phase I with cross-frame reuse.
+
+    Returns (counts (H*W,), probe_cost, opacity (H*W,), reused: bool).
+    probe_cost is 0 on a cache hit — the whole point: a reused frame pays
+    only Phase II.  Opacity is always produced so the serving engine can
+    sort pooled blocks by the composite (count, opacity) key.
+    """
+    if cache is not None:
+        match = cache._match(cam, acfg)
+        if match is not None:
+            entry, ang, tr = match
+            radius = adaptive.reuse_dilation_radius(
+                cam, ang, tr, scene.NEAR,
+                margin=cache.rcfg.dilate_margin,
+            ) if cache.rcfg.dilate_margin > 0 else 0
+            k = cache.rcfg.refresh_every
+            usable = (radius <= cache.rcfg.dilate_cap
+                      and (k <= 0 or entry.reuses_since_probe < k))
+            if usable:
+                cache.hits += 1
+                cache._clock += 1
+                entry.reuses_since_probe += 1
+                entry.last_used = cache._clock
+                counts = adaptive.dilate_count_map(
+                    entry.counts, (cam.height, cam.width), radius,
+                    border_fill=acfg.ns_full)
+                return counts, 0, entry.opacity, True
+            # re-probe at the CURRENT pose and rebase the entry: either a
+            # scheduled refresh (k-th reuse) or a pose delta whose
+            # conservative dilation radius overflows dilate_cap
+            counts, cost, opacity = probe_phase(
+                fns, acfg, cam, probe_key, return_opacity=True)
+            cache.refreshes += 1
+            cache.misses += 1
+            cache._store(cam, acfg, counts, opacity, replacing=entry)
+            return counts, cost, opacity, False
+    counts, cost, opacity = probe_phase(
+        fns, acfg, cam, probe_key, return_opacity=True)
+    if cache is not None:
+        cache.misses += 1
+        cache._store(cam, acfg, counts, opacity)
+    return counts, cost, opacity, False

@@ -1,1 +1,3 @@
 from .engine import ServeConfig, ServingEngine
+from .render_engine import (RenderRequest, RenderServeConfig,
+                            RenderServingEngine)

@@ -1,0 +1,254 @@
+"""Batched multi-view render serving engine with cross-frame probe reuse.
+
+The render analogue of serve/engine.py's slot-based LM engine: render
+requests (camera pose + scene) occupy ``slots``; every scheduling round the
+Phase-II blocks of ALL live requests are pooled, sorted by sample budget,
+and marched through a single jitted batched ``_march_block`` — so MXU/VPU
+utilization depends only on the pooled block stream, not on which request
+each block belongs to (continuous batching for rays).
+
+Phase I goes through ``core.pipeline.ProbeCache``: a request whose pose is
+within the configured angular/translation distance of a previously probed
+pose reuses that pose's count/opacity maps (refreshing every k-th frame),
+extending the paper's intra-frame data reuse to the temporal axis — most
+frames of a smooth trajectory pay zero probe cost.
+
+Batches have a fixed block count (``blocks_per_batch``); the trailing
+partial batch is padded with unit-budget dummy blocks, so each scene
+compiles exactly one batched march.  Budget-descending order keeps batches
+budget-homogeneous — the property launch/render_serve.py relies on to
+shard a batch's blocks over the ``data`` mesh axis without stragglers.
+
+Single-device in this container; launch/render_serve.py lowers the same
+pooled march sharded over the production mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import OrderedDict
+from functools import partial
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import pipeline, scene
+from ..core.fields import FieldFns
+from ..core.pipeline import ASDRConfig, ProbeCache, ProbeReuseConfig
+
+
+# jitted batched marches shared across engine instances: keyed by the
+# (FieldFns, ASDRConfig) pair (both hashable), so an engine restart or a
+# parallel engine over the same scene reuses the compiled executable.
+# LRU-bounded: a reloaded/retrained scene makes fresh FieldFns closures,
+# and without eviction the stale executables (and the params their
+# closures capture) would pile up for the process lifetime.
+# NOTE: the march closes over fns — fine for analytic fields (no arrays);
+# an NGP-backed production path should pass params as jit ARGS instead,
+# which is exactly what launch/render_serve.build_pooled_march_cell does.
+_MARCH_CACHE: OrderedDict = OrderedDict()
+_MARCH_CACHE_MAX = 32
+
+
+@dataclasses.dataclass(frozen=True)
+class RenderServeConfig:
+    slots: int = 4
+    blocks_per_batch: int = 16
+    reuse: Optional[ProbeReuseConfig] = ProbeReuseConfig()
+    probe_seed: Optional[int] = None   # None = deterministic midpoint probe
+
+
+@dataclasses.dataclass
+class RenderRequest:
+    rid: int
+    scene: str                         # key into the engine's field table
+    cam: scene.Camera
+    image: Optional[np.ndarray] = None   # (H, W, 3) on completion
+    stats: Dict = dataclasses.field(default_factory=dict)
+    latency_s: float = 0.0
+
+
+class _Slot:
+    """A live request: its sorted-block layout and result buffers."""
+
+    def __init__(self, req: RenderRequest, rays, order, budgets, pad: int,
+                 probe_cost: int, reused: bool, block_size: int):
+        self.req = req
+        self.rays = rays                 # padded (origins, dirs)
+        self.order = order
+        self.budgets = budgets
+        self.pad = pad
+        self.probe_cost = probe_cost
+        self.reused = reused
+        self.block_size = block_size
+        n_blocks = budgets.shape[0]
+        self.rgb = np.zeros((n_blocks, block_size, 3), np.float32)
+        self.chunks = np.zeros((n_blocks,), np.int64)
+        self.pending = n_blocks
+        self.t0 = time.time()
+
+    def emit_blocks(self, origins, dirs):
+        """(slot, block_index, o (B,3), d (B,3), budget) work items."""
+        B = self.block_size
+        o_s = origins[self.order].reshape(-1, B, 3)
+        d_s = dirs[self.order].reshape(-1, B, 3)
+        for bi in range(self.budgets.shape[0]):
+            yield (self, bi, o_s[bi], d_s[bi], int(self.budgets[bi]))
+
+    def deliver(self, bi: int, rgb, chunks):
+        self.rgb[bi] = rgb
+        self.chunks[bi] = chunks
+        self.pending -= 1
+
+    def finalize(self, acfg: ASDRConfig) -> RenderRequest:
+        req = self.req
+        H, W = req.cam.height, req.cam.width
+        R = H * W
+        Rp = self.order.shape[0]
+        inv = np.zeros((Rp,), np.int64)
+        inv[np.asarray(self.order)] = np.arange(Rp)
+        flat = self.rgb.reshape(Rp, 3)[inv]
+        req.image = flat[:R].reshape(H, W, 3)
+        req.latency_s = time.time() - self.t0
+        req.stats = {
+            "probe_samples": self.probe_cost,
+            "probe_reused": self.reused,
+            "samples_processed": int(self.chunks.sum())
+            * self.block_size * acfg.chunk,
+            # padded ray count, matching render_adaptive's stats — the
+            # numerator includes the pad rays' chunks, so the denominator
+            # must too or the fraction inflates (and can exceed 1.0)
+            "baseline_samples": Rp * acfg.ns_full,
+        }
+        return req
+
+
+class RenderServingEngine:
+    def __init__(self, fields: Dict[str, FieldFns], acfg: ASDRConfig,
+                 rcfg: RenderServeConfig = RenderServeConfig()):
+        self.fields = fields
+        self.acfg = acfg
+        self.rcfg = rcfg
+        self.probe_caches: Dict[str, ProbeCache] = {
+            name: ProbeCache(rcfg.reuse) for name in fields
+        } if rcfg.reuse is not None else {}
+        # engine counters (across render() calls)
+        self.frames = 0
+        self.batches = 0
+        self.blocks_marched = 0
+        self.pad_blocks = 0
+
+    # ---------------------------------------------------------------- march
+    def _batched_march(self, scene_id: str):
+        """One jitted (N, B)-block march per scene — N = blocks_per_batch."""
+        fns = self.fields[scene_id]
+        key = (fns, self.acfg)
+        if key not in _MARCH_CACHE:
+            march = partial(pipeline._march_block, fns, self.acfg)
+            _MARCH_CACHE[key] = jax.jit(
+                lambda o, d, b: jax.lax.map(lambda a: march(*a), (o, d, b))
+            )
+            while len(_MARCH_CACHE) > _MARCH_CACHE_MAX:
+                _MARCH_CACHE.popitem(last=False)
+        _MARCH_CACHE.move_to_end(key)
+        return _MARCH_CACHE[key]
+
+    # ---------------------------------------------------------------- admit
+    def _admit(self, req: RenderRequest) -> _Slot:
+        acfg = self.acfg
+        fns = self.fields[req.scene]
+        cache = self.probe_caches.get(req.scene)
+        key = (None if self.rcfg.probe_seed is None
+               else jax.random.PRNGKey(self.rcfg.probe_seed + req.rid))
+        counts, cost, opacity, reused = pipeline.probe_phase_cached(
+            fns, acfg, req.cam, cache, key)
+        o, d = scene.camera_rays(req.cam)
+        o, d, counts, opacity, pad = pipeline.pad_rays_to_blocks(
+            acfg, o, d, counts, opacity)
+        order, budgets = pipeline.block_sort(acfg, counts, opacity)
+        return _Slot(req, (o, d), np.asarray(order), np.asarray(budgets),
+                     pad, cost, reused, acfg.block_size)
+
+    # ---------------------------------------------------------------- serve
+    def render(self, requests: List[RenderRequest]) -> List[RenderRequest]:
+        """Serve all requests; returns them completed, in finish order.
+
+        Continuous batching: undispatched blocks from every live request
+        sit in one budget-sorted pool; each round marches ONE fixed-size
+        batch drawn from the pool's largest-budget scene group, then
+        finalizes any request whose blocks all returned and admits queued
+        requests into freed slots — so new requests enter while older
+        ones are still mid-flight, and a batch freely mixes blocks from
+        different requests of the same scene.
+        """
+        rcfg = self.rcfg
+        B = self.acfg.block_size
+        queue = list(requests)
+        live: List[_Slot] = []
+        pool: List[tuple] = []   # undispatched (slot, bi, o, d, budget)
+        done: List[RenderRequest] = []
+
+        while queue or live:
+            while queue and len(live) < rcfg.slots:
+                slot = self._admit(queue.pop(0))
+                live.append(slot)
+                pool.extend(slot.emit_blocks(*slot.rays))
+
+            # one batch per round: the largest-budget scene group first,
+            # so batches stay budget-homogeneous across requests
+            pool.sort(key=lambda it: -it[4])
+            scene_id = pool[0][0].req.scene
+            batch = [it for it in pool
+                     if it[0].req.scene == scene_id][:rcfg.blocks_per_batch]
+            taken = set(map(id, batch))
+            pool = [it for it in pool if id(it) not in taken]
+
+            march = self._batched_march(scene_id)
+            N = rcfg.blocks_per_batch
+            n_pad = N - len(batch)
+            o_b = jnp.stack([it[2] for it in batch]
+                            + [jnp.zeros((B, 3))] * n_pad)
+            d_b = jnp.stack([it[3] for it in batch]
+                            + [jnp.tile(jnp.asarray([[0., 0., 1.]]),
+                                        (B, 1))] * n_pad)
+            budgets = jnp.asarray(
+                [it[4] for it in batch] + [1] * n_pad, jnp.int32)
+            rgb, _acc, chunks = march(o_b, d_b, budgets)
+            rgb = np.asarray(rgb)
+            chunks = np.asarray(chunks)
+            for i, (slot, bi, *_rest) in enumerate(batch):
+                slot.deliver(bi, rgb[i], chunks[i])
+            self.batches += 1
+            self.blocks_marched += len(batch)
+            self.pad_blocks += n_pad
+
+            still = []
+            for slot in live:
+                if slot.pending == 0:
+                    done.append(slot.finalize(self.acfg))
+                    self.frames += 1
+                else:
+                    still.append(slot)
+            live = still
+        return done
+
+    # ---------------------------------------------------------------- stats
+    def engine_stats(self) -> Dict:
+        out = {
+            "frames": self.frames,
+            "batches": self.batches,
+            "blocks_marched": self.blocks_marched,
+            "pad_block_fraction": (
+                self.pad_blocks / max(self.blocks_marched + self.pad_blocks, 1)
+            ),
+        }
+        hits = sum(c.hits for c in self.probe_caches.values())
+        misses = sum(c.misses for c in self.probe_caches.values())
+        out["probe_hits"] = hits
+        out["probe_misses"] = misses
+        out["reused_probe_fraction"] = hits / max(hits + misses, 1)
+        out["probe_refreshes"] = sum(
+            c.refreshes for c in self.probe_caches.values())
+        return out

@@ -72,6 +72,7 @@ def test_leaf_count_mismatch_fails_loudly(tmp_path):
         restore_checkpoint(tmp_path, {"only": jnp.zeros(3)})
 
 
+@pytest.mark.slow
 def test_elastic_reshard_subprocess(tmp_path):
     """Save on a 4-device mesh sharding, restore re-sharded to 2 devices
     (the elastic resume path: checkpoint written at N chips, resumed at

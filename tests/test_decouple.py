@@ -31,18 +31,18 @@ def test_interpolation_exact_on_linear_colors():
 def test_decoupled_render_close_to_full():
     field = scene.make_scene("lego")
     fns = fields.analytic_field_fns(field)
-    cam = scene.look_at_camera(12, 12, theta=0.8, phi=0.5)
+    cam = scene.look_at_camera(10, 10, theta=0.8, phi=0.5)
     o, d = scene.camera_rays(cam)
-    full, _ = pipeline.render_fixed_fns(fns, o, d, 64)
-    dec, stats = decouple.render_decoupled(fns, o, d, 64, group=2)
-    naive = decouple.render_naive_reduced(fns, o, d, 64, factor=2)
+    full, _ = pipeline.render_fixed_fns(fns, o, d, 48)
+    dec, stats = decouple.render_decoupled(fns, o, d, 48, group=2)
+    naive = decouple.render_naive_reduced(fns, o, d, 48, factor=2)
     from repro.core.rendering import psnr
     p_dec = float(psnr(dec, full))
     p_naive = float(psnr(naive, full))
     # paper Fig. 9: decoupling beats naive half-sampling
     assert p_dec > p_naive
-    assert stats["color_evals"] == o.shape[0] * 32
-    assert stats["density_evals"] == o.shape[0] * 64
+    assert stats["color_evals"] == o.shape[0] * 24
+    assert stats["density_evals"] == o.shape[0] * 48
 
 
 def test_mlp_flops_saved_matches_paper():

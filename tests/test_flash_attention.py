@@ -7,6 +7,9 @@ import pytest
 from repro.kernels.flash_attention import flash_attention
 from repro.models import attention as A
 
+# interpret-mode Pallas sweeps are compile-heavy; nightly via `pytest -m ""`
+pytestmark = pytest.mark.slow
+
 
 @pytest.mark.parametrize("B,S,H,KV,Dh", [
     (2, 256, 4, 2, 64),    # GQA

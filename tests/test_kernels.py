@@ -16,7 +16,8 @@ def model():
     return cfg, params
 
 
-@pytest.mark.parametrize("n", [1, 7, 256, 533])
+@pytest.mark.parametrize("n", [1, 7, 256,
+                               pytest.param(533, marks=pytest.mark.slow)])
 def test_hash_encode_matches_reference(model, n):
     cfg, params = model
     pts = jax.random.uniform(jax.random.PRNGKey(n), (n, 3))
@@ -24,6 +25,36 @@ def test_hash_encode_matches_reference(model, n):
     want = hashgrid.encode(pts, params["grid"], cfg.grid)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=1e-5, atol=1e-7)
+
+
+def test_hash_encode_matches_reference_at_boundaries(model):
+    """Clamp-at-boundary corners: points at/beyond the cube faces must hit
+    the same clamped voxel rows in the kernel and the reference, on both
+    dense and hashed levels."""
+    cfg, params = model
+    grid = cfg.grid
+    dense_levels = [l for l in range(grid.n_levels) if grid.level_is_dense(l)]
+    hashed = [l for l in range(grid.n_levels) if not grid.level_is_dense(l)]
+    assert dense_levels and hashed, "config must exercise both level kinds"
+    eps = np.float32(1e-6)
+    corners = np.stack(np.meshgrid([0.0, 1.0], [0.0, 1.0], [0.0, 1.0],
+                                   indexing="ij"), -1).reshape(-1, 3)
+    pts = np.concatenate([
+        corners,                                    # exact cube corners
+        corners * (1 - eps) + eps / 2,              # just inside
+        np.asarray([[1.0 - eps, 0.5, 0.5], [0.5, 1.0 - eps, 1.0 - eps],
+                    [0.0, 0.0, 1.0], [1.0, 1.0, 1.0]], np.float32),
+    ]).astype(np.float32)
+    got = ops.hash_encode(jnp.asarray(pts), params["grid"], cfg.grid)
+    want = hashgrid.encode(jnp.asarray(pts), params["grid"], cfg.grid)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-7)
+    # per-level-kind slices agree too (feature layout is [level, feat])
+    F = grid.feature_dim
+    for l in dense_levels[:1] + hashed[-1:]:
+        np.testing.assert_allclose(
+            np.asarray(got[:, l * F:(l + 1) * F]),
+            np.asarray(want[:, l * F:(l + 1) * F]), rtol=1e-5, atol=1e-7)
 
 
 @pytest.mark.parametrize("n", [3, 128, 300])
@@ -64,8 +95,11 @@ def test_density_and_color_kernels_match(model, n):
                                rtol=1e-4, atol=1e-6)
 
 
-@pytest.mark.parametrize("R,S,group", [(4, 32, 2), (37, 48, 4), (130, 192, 2),
-                                       (8, 64, 1)])
+@pytest.mark.parametrize("R,S,group", [
+    (4, 32, 2),
+    pytest.param(37, 48, 4, marks=pytest.mark.slow),
+    pytest.param(130, 192, 2, marks=pytest.mark.slow),
+    (8, 64, 1)])
 def test_volume_render_kernel_matches(R, S, group):
     key = jax.random.PRNGKey(R * S)
     A = -(-S // group)
@@ -92,6 +126,7 @@ def test_volume_render_valid_mask():
                                rtol=1e-4, atol=1e-5)
 
 
+@pytest.mark.slow
 def test_kernel_field_fns_drive_full_pipeline(model):
     """The kernel-backed FieldFns must agree with the model-backed path."""
     cfg, params = model

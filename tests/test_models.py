@@ -28,6 +28,7 @@ def _batch(cfg, key, B=2, S=32):
     return batch
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ARCHS)
 def test_smoke_forward_and_grad(arch):
     cfg = configs.get_smoke(arch)
@@ -44,6 +45,7 @@ def test_smoke_forward_and_grad(arch):
     assert 0.5 * np.log(cfg.vocab) < float(loss) < 2.5 * np.log(cfg.vocab)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", [a for a in ARCHS if a != "whisper-medium"])
 def test_smoke_decode_consistency(arch):
     """prefill(S-1) + decode(1) == full forward's last-position logits.
@@ -74,6 +76,7 @@ def test_smoke_decode_consistency(arch):
     assert float(jnp.max(jnp.abs(lg[:, 0] - full[:, -1]))) < tol
 
 
+@pytest.mark.slow
 def test_whisper_decode_consistency():
     from repro.models import encdec as E
     cfg = dataclasses.replace(configs.get_smoke("whisper-medium"),

@@ -8,6 +8,10 @@ from repro.models import ffn
 from repro.models.config import ModelConfig
 from repro.models.params import split
 
+# LM-zoo routing math — exercised nightly via `pytest -m ""`; the fast
+# ASDR tier keeps the render/serve/kernel surface
+pytestmark = pytest.mark.slow
+
 
 CFG = ModelConfig(
     name="moe-test", family="moe", n_layers=1, d_model=32, n_heads=2,

@@ -56,6 +56,7 @@ def test_int8_compression_roundtrip_error():
     assert rel < 1.0 / 100  # 127-level quantization ~ <1% of max
 
 
+@pytest.mark.slow
 def test_compressed_psum_under_shard_map():
     """int8 psum == f32 psum within quantization error (needs >=2 devices:
     run in a subprocess with forced host device count)."""

@@ -42,6 +42,7 @@ def test_background_gets_fewest_samples(setup):
     assert frac_min > 0.3
 
 
+@pytest.mark.slow
 def test_early_termination_reduces_chunks(setup):
     field, fns, cam, o, d, full = setup
     kw = dict(ns_full=96, probe_stride=4, block_size=96, chunk=16,

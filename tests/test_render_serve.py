@@ -1,0 +1,206 @@
+"""Render serving engine + cross-frame probe reuse invariants."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import adaptive, fields, pipeline, scene
+from repro.serve.render_engine import (RenderRequest, RenderServeConfig,
+                                       RenderServingEngine)
+
+
+ACFG = pipeline.ASDRConfig(ns_full=48, probe_stride=4, candidates=(8, 16, 32),
+                           block_size=64, chunk=16, sort_by_opacity=False)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    flds = {"mic": fields.analytic_field_fns(scene.make_scene("mic")),
+            "hotdog": fields.analytic_field_fns(scene.make_scene("hotdog"))}
+    cam = scene.look_at_camera(16, 16, theta=0.7, phi=0.5)
+    return flds, cam
+
+
+def test_engine_matches_single_image_pipeline(setup):
+    """Pooled multi-request serving must be bit-identical to rendering each
+    view alone through render_asdr_image (fresh probes, stable sort)."""
+    flds, cam = setup
+    eng = RenderServingEngine(flds, ACFG, RenderServeConfig(
+        slots=2, blocks_per_batch=4, reuse=None))
+    reqs = [RenderRequest(rid=0, scene="mic", cam=cam),
+            RenderRequest(rid=1, scene="hotdog", cam=cam)]
+    done = {r.rid: r for r in eng.render(reqs)}
+    for rid, sc in [(0, "mic"), (1, "hotdog")]:
+        ref, _ = pipeline.render_asdr_image(flds[sc], ACFG, cam)
+        np.testing.assert_array_equal(done[rid].image, np.asarray(ref))
+
+
+def test_probe_reuse_zero_distance_is_identical(setup):
+    """At zero pose distance the reuse path must equal re-probing exactly:
+    same count map (dilation radius 0), same rendered image."""
+    flds, cam = setup
+    fns = flds["mic"]
+    cache = pipeline.ProbeCache(pipeline.ProbeReuseConfig())
+    c1, cost1, o1, r1 = pipeline.probe_phase_cached(fns, ACFG, cam, cache)
+    # a newly constructed but identical camera
+    cam_b = scene.look_at_camera(16, 16, theta=0.7, phi=0.5)
+    c2, cost2, o2, r2 = pipeline.probe_phase_cached(fns, ACFG, cam_b, cache)
+    assert (not r1) and r2 and cost1 > 0 and cost2 == 0
+    np.testing.assert_array_equal(np.asarray(c1), np.asarray(c2))
+    np.testing.assert_array_equal(np.asarray(o1), np.asarray(o2))
+    fresh, _, _ = pipeline.probe_phase(fns, ACFG, cam_b, return_opacity=True)
+    np.testing.assert_array_equal(np.asarray(c2), np.asarray(fresh))
+
+
+def test_engine_reuse_frames_identical_on_replay(setup):
+    """Serving the same trajectory twice: lap-2 frames reuse lap-1 probes
+    and must render bit-identically to an always-probe engine."""
+    flds, _ = setup
+    def traj():
+        return [RenderRequest(rid=i, scene="mic",
+                              cam=scene.look_at_camera(
+                                  16, 16, theta=0.7 + 0.1 * (i % 2), phi=0.5))
+                for i in range(4)]
+    reuse = RenderServingEngine(flds, ACFG, RenderServeConfig(
+        slots=2, blocks_per_batch=4,
+        reuse=pipeline.ProbeReuseConfig(max_angle_deg=1.0,
+                                        max_translation=0.02)))
+    probe = RenderServingEngine(flds, ACFG, RenderServeConfig(
+        slots=2, blocks_per_batch=4, reuse=None))
+    dr = {r.rid: r for r in reuse.render(traj())}
+    dp = {r.rid: r for r in probe.render(traj())}
+    assert dr[2].stats["probe_reused"] and dr[3].stats["probe_reused"]
+    assert reuse.engine_stats()["reused_probe_fraction"] == 0.5
+    for rid in dr:
+        np.testing.assert_array_equal(dr[rid].image, dp[rid].image)
+
+
+def test_probe_cache_refresh_every_k(setup):
+    flds, cam = setup
+    fns = flds["mic"]
+    cache = pipeline.ProbeCache(pipeline.ProbeReuseConfig(refresh_every=2))
+    pipeline.probe_phase_cached(fns, ACFG, cam, cache)      # miss
+    for i in range(2):                                       # 2 hits
+        *_ , reused = pipeline.probe_phase_cached(fns, ACFG, cam, cache)
+        assert reused
+    *_, reused = pipeline.probe_phase_cached(fns, ACFG, cam, cache)
+    assert not reused                                        # forced refresh
+    assert cache.refreshes == 1 and cache.hits == 2
+
+
+def test_padding_rays_do_not_leak(setup):
+    """Image rows must be independent of the pad rays' content."""
+    flds, cam = setup
+    fns = flds["mic"]
+    o, d = scene.camera_rays(cam)                 # R = 256, block 96 -> pad
+    acfg = pipeline.ASDRConfig(ns_full=48, candidates=(8, 16, 32),
+                               block_size=96, chunk=16)
+    R = o.shape[0]
+    counts = jnp.asarray(np.random.default_rng(0).choice(
+        [8, 16, 32], size=(R,)), jnp.int32)
+    op, dp_, cp, _, pad = pipeline.pad_rays_to_blocks(acfg, o, d, counts)
+    assert pad == (-R) % 96 and pad > 0
+    rgb_a, _, _ = pipeline.render_adaptive(fns, acfg, op, dp_, cp)
+    # replace pad rays with rays that stare straight into the scene
+    op2 = op.at[R:].set(jnp.asarray([0.5, 0.5, -0.5]))
+    dp2 = dp_.at[R:].set(jnp.asarray([0.0, 0.0, 1.0]))
+    rgb_b, _, _ = pipeline.render_adaptive(fns, acfg, op2, dp2, cp)
+    np.testing.assert_array_equal(np.asarray(rgb_a[:R]),
+                                  np.asarray(rgb_b[:R]))
+
+
+@pytest.mark.parametrize("by_opacity", [False, True])
+def test_block_sort_is_permutation_inverse(by_opacity):
+    """block_sort order must be an exact permutation; the unsort used by
+    render_adaptive must be its exact inverse."""
+    rng = np.random.default_rng(1)
+    R = 512
+    acfg = pipeline.ASDRConfig(candidates=(8, 16, 32), block_size=64,
+                               sort_by_opacity=by_opacity)
+    counts = jnp.asarray(rng.choice([8, 16, 32, 96], size=(R,)), jnp.int32)
+    opacity = jnp.asarray(rng.uniform(size=(R,)), jnp.float32)
+    order, budgets = pipeline.block_sort(acfg, counts, opacity)
+    order_np = np.asarray(order)
+    assert sorted(order_np.tolist()) == list(range(R))     # permutation
+    inv = np.zeros(R, np.int64)
+    inv[order_np] = np.arange(R)
+    np.testing.assert_array_equal(order_np[inv], np.arange(R))
+    np.testing.assert_array_equal(inv[order_np], np.arange(R))
+    # budgets conservative: every ray's count <= its block budget
+    sorted_counts = np.asarray(counts)[order_np].reshape(-1, 64)
+    assert (sorted_counts.max(axis=1) == np.asarray(budgets)).all()
+
+
+def test_pose_distance_and_dilation_radius():
+    cam_a = scene.look_at_camera(16, 16, theta=0.7, phi=0.5)
+    cam_b = scene.look_at_camera(16, 16, theta=0.75, phi=0.5)
+    ang, tr = adaptive.pose_distance(cam_a, cam_a)
+    assert ang == 0.0 and tr == 0.0
+    ang_ab, tr_ab = adaptive.pose_distance(cam_a, cam_b)
+    assert ang_ab > 0.0 and tr_ab > 0.0
+    assert adaptive.reuse_dilation_radius(cam_a, 0.0, 0.0, scene.NEAR) == 0
+    r_small = adaptive.reuse_dilation_radius(cam_a, 1e-4, 0.0, scene.NEAR)
+    assert r_small == 0                      # sub-half-pixel noise
+    r_big = adaptive.reuse_dilation_radius(cam_a, ang_ab, tr_ab, scene.NEAR)
+    assert r_big >= 1
+    # wide-FOV camera: the corner term must grow the bound, never shrink it
+    wide = scene.look_at_camera(16, 16, theta=0.7, phi=0.5, fov_deg=90.0)
+    assert (adaptive.reuse_dilation_radius(wide, 0.05, 0.0, scene.NEAR)
+            >= adaptive.reuse_dilation_radius(cam_a, 0.05, 0.0, scene.NEAR))
+    # an in-plane roll keeps the view direction but permutes every pixel:
+    # the full-rotation metric must see it as a large distance
+    rolled = scene.Camera(
+        cam_a.height, cam_a.width, cam_a.focal,
+        np.stack([cam_a.c2w_rot[:, 1], -cam_a.c2w_rot[:, 0],
+                  cam_a.c2w_rot[:, 2]], axis=-1),
+        cam_a.origin)
+    ang_roll, tr_roll = adaptive.pose_distance(cam_a, rolled)
+    assert ang_roll > np.deg2rad(45) and tr_roll == 0.0
+
+
+def test_probe_cache_rejects_different_focal(setup):
+    """Same pose, different zoom: every ray differs — must re-probe."""
+    flds, cam = setup
+    fns = flds["mic"]
+    cache = pipeline.ProbeCache(pipeline.ProbeReuseConfig())
+    pipeline.probe_phase_cached(fns, ACFG, cam, cache)
+    zoomed = scene.Camera(cam.height, cam.width, cam.focal * 1.5,
+                          cam.c2w_rot, cam.origin)
+    *_, reused = pipeline.probe_phase_cached(fns, ACFG, zoomed, cache)
+    assert not reused
+
+
+def test_dilate_count_map_is_conservative():
+    counts = jnp.asarray(np.random.default_rng(2).choice(
+        [8, 16, 32], size=(64,)), jnp.int32)
+    out = adaptive.dilate_count_map(counts, (8, 8), 1)
+    assert (np.asarray(out) >= np.asarray(counts)).all()    # max filter
+    np.testing.assert_array_equal(
+        np.asarray(adaptive.dilate_count_map(counts, (8, 8), 0)),
+        np.asarray(counts))
+    # a uniform map is a fixed point at any radius
+    uni = jnp.full((64,), 16, jnp.int32)
+    np.testing.assert_array_equal(
+        np.asarray(adaptive.dilate_count_map(uni, (8, 8), 2)), np.asarray(uni))
+    # border_fill covers content entering from off-screen: the radius-wide
+    # band rises to at least the fill, the interior is untouched
+    bf = np.asarray(adaptive.dilate_count_map(uni, (8, 8), 1,
+                                              border_fill=96)).reshape(8, 8)
+    assert (bf[0] == 96).all() and (bf[-1] == 96).all()
+    assert (bf[:, 0] == 96).all() and (bf[:, -1] == 96).all()
+    assert (bf[1:-1, 1:-1] == 16).all()
+
+
+def test_probe_cache_rejects_different_acfg(setup):
+    """Count maps are acfg-specific: a changed delta/candidates must not
+    serve the stale maps."""
+    flds, cam = setup
+    fns = flds["mic"]
+    cache = pipeline.ProbeCache(pipeline.ProbeReuseConfig())
+    pipeline.probe_phase_cached(fns, ACFG, cam, cache)
+    import dataclasses
+    loose = dataclasses.replace(ACFG, delta=0.1)
+    *_, reused = pipeline.probe_phase_cached(fns, loose, cam, cache)
+    assert not reused
+    # same acfg still hits
+    *_, reused = pipeline.probe_phase_cached(fns, loose, cam, cache)
+    assert reused

@@ -71,6 +71,36 @@ def test_dedup_window_rate_and_gather_bytes():
     assert deduped < full
 
 
+def test_lru_hit_rate_zero_size_and_monotone_synthetic():
+    """lru_cache_hit_rate == 0 at size 0 and is monotone in cache size on
+    an arbitrary trace (not just camera-ray traces)."""
+    rng = np.random.default_rng(3)
+    trace = rng.integers(0, 50, size=2000)
+    assert reuse.lru_cache_hit_rate(trace, 0) == 0.0
+    assert reuse.lru_cache_hit_rate(trace, -1) == 0.0
+    rates = [reuse.lru_cache_hit_rate(trace, s) for s in (1, 2, 4, 8, 16,
+                                                          32, 64)]
+    assert all(b >= a - 1e-12 for a, b in zip(rates, rates[1:]))
+    # a cache holding every address hits on all but cold misses
+    full = reuse.lru_cache_hit_rate(trace, 50)
+    assert full >= 1.0 - 50 / trace.size - 1e-12
+
+
+def test_dedup_window_rate_bounds_and_window_monotone():
+    """On a straight-ray trace: dedup rate lies in [0, 1) and grows with
+    the window size (bigger tiles can only find more duplicates)."""
+    o = jnp.asarray([[0.05, 0.5, 0.5]])
+    d = jnp.asarray([[1.0, 0.0, 0.0]])            # axis-aligned straight ray
+    pts, _, _ = scene.sample_points(o, d, 192)
+    pts = pts[0]
+    rates = [reuse.dedup_window_rate(pts, CFG, window=w, level=0)
+             for w in (4, 16, 64, 192)]
+    for r in rates:
+        assert 0.0 <= r < 1.0
+    assert all(b >= a - 1e-12 for a, b in zip(rates, rates[1:]))
+    assert rates[-1] > rates[0]                    # strictly more reuse
+
+
 def test_hash_trace_irregularity():
     """Paper Fig. 4: hashed addresses jump; dense addresses are local."""
     a, _ = _two_neighbor_rays()

@@ -10,6 +10,10 @@ import repro.configs as configs
 from repro.models import lm, transformer as tfm
 from repro.serve.engine import Request, ServeConfig, ServingEngine
 
+# Full LM prefill+decode rollouts — heavy compile; the fast tier covers
+# serving via tests/test_render_serve.py (same slot/pool machinery).
+pytestmark = pytest.mark.slow
+
 
 @pytest.fixture(scope="module")
 def engine():

@@ -53,6 +53,7 @@ def test_long_context_rules_shard_kv_seq():
     assert tuple(spec) == (None, ("pod", "data"), "model")
 
 
+@pytest.mark.slow
 def test_small_mesh_end_to_end_subprocess():
     """Tiny config train_step lowers+compiles on a real (2,2) mesh with all
     the production sharding machinery (8 forced host devices)."""

@@ -19,8 +19,8 @@ CFG = ModelConfig(
 )
 
 
-@settings(max_examples=10, deadline=None)
-@given(st.integers(0, 999), st.sampled_from([8, 16, 32]),
+@settings(max_examples=3, deadline=None)
+@given(st.integers(0, 999), st.sampled_from([8, 32]),
        st.sampled_from([4, 8]))
 def test_ssd_scan_equals_reference(seed, s_len, chunk):
     key = jax.random.PRNGKey(seed)
@@ -59,6 +59,7 @@ def test_final_state_matches_reference_recurrence():
     np.testing.assert_allclose(np.asarray(h_final), h, rtol=1e-4, atol=1e-4)
 
 
+@pytest.mark.slow
 def test_block_prefill_decode_equivalence():
     """ssm_apply_with_state -> ssm_step chain == one long ssm_apply."""
     key = jax.random.PRNGKey(0)

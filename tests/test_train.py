@@ -4,6 +4,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow  # full LM train steps — heavy compile
+
 import repro.configs as configs
 from repro.data import TokenPipeline
 from repro.models import lm
