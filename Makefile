@@ -4,7 +4,8 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-full bench-serve dryrun-serve
+.PHONY: test test-full lint bench-serve bench-serve-sweep \
+        bench-serve-latency dryrun-serve
 
 test:
 	$(PY) -m pytest -x -q
@@ -12,8 +13,19 @@ test:
 test-full:
 	$(PY) -m pytest -m "" -q
 
+# ruff > pyflakes > the ast-based fallback in tools/lint.py (this
+# container bakes in neither linter; CI installs ruff)
+lint:
+	$(PY) tools/lint.py src tests benchmarks examples tools
+
 bench-serve:
 	$(PY) benchmarks/render_serve.py
+
+bench-serve-sweep:
+	$(PY) benchmarks/render_serve.py --sweep
+
+bench-serve-latency:
+	$(PY) benchmarks/render_serve.py --latency
 
 dryrun-serve:
 	$(PY) -m repro.launch.render_serve --dryrun

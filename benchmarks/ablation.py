@@ -6,7 +6,6 @@ fused-kernel weight residency.  Software = adaptive sampling + decoupling.
 """
 from __future__ import annotations
 
-import jax.numpy as jnp
 
 from repro.core import pipeline, reuse, scene
 from repro.core.mlp import flops_per_sample

@@ -14,7 +14,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import fields, model as model_lib, pipeline, rendering, scene
+from repro.core import model as model_lib, pipeline, scene
 from repro.core import train as train_lib
 
 CACHE = Path(__file__).resolve().parent / "_cache"

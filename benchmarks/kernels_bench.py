@@ -6,7 +6,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import hashgrid, model as model_lib
-from repro.kernels import ops, ref
+from repro.kernels import ops
 
 from . import common
 

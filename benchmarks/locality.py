@@ -3,7 +3,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core import fields, pipeline, reuse, scene
+from repro.core import pipeline, reuse, scene
 
 from . import common
 

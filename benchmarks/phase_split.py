@@ -6,7 +6,6 @@ units: embedding-gather bytes (encoding) and MLP FLOPs.
 """
 from __future__ import annotations
 
-import jax.numpy as jnp
 
 from repro.core import pipeline, reuse, scene
 from repro.core.mlp import flops_per_sample

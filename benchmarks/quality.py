@@ -7,7 +7,6 @@ Paper claims reproduced (structure, on analytic scenes):
 """
 from __future__ import annotations
 
-import jax.numpy as jnp
 
 from repro.core import decouple, pipeline, rendering, scene
 

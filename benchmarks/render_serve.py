@@ -1,32 +1,40 @@
-"""Render-serve benchmark: trajectory throughput + probe-reuse quality.
+"""Render-serve benchmark: cross-frame reuse throughput + quality gates.
 
-  PYTHONPATH=src python benchmarks/render_serve.py [--poses 12] [--size 48]
+  PYTHONPATH=src python benchmarks/render_serve.py            # replay gate
+  PYTHONPATH=src python benchmarks/render_serve.py --sweep    # radius sweep
+  PYTHONPATH=src python benchmarks/render_serve.py --latency  # p50/p99 vs slots
 
-Serves an orbit trajectory of ``--poses`` unique poses replayed for
-``--laps`` laps (an orbit playback / several users watching the same path —
-the Cicero-style cross-view reuse workload) through the batched render
-serving engine twice — once with cross-frame probe reuse, once always
-probing — and reports:
+Default (replay) mode — the Cicero-style cross-view reuse workload: an
+orbit of ``--poses`` unique poses replayed for ``--laps`` laps through the
+batched serving engine with BOTH framecache tiers on (warped probe maps +
+warped radiance), against an always-probe/no-reuse run.  Gates:
 
-  * frames/sec for each path (reuse removes Phase-I from most frames),
-  * the reused-probe fraction (acceptance: > 0.5),
-  * per-frame PSNR vs the exact analytic reference for both paths and the
-    worst-case delta between them (acceptance: within 0.1 dB).
+  * Phase-II rays-marched fraction < 0.5 of the no-reuse run (laps 2+
+    warp the cached frames and march only disoccluded rays — on an exact
+    replay that is zero rays),
+  * per-frame |PSNR delta| vs the no-reuse run <= 0.1 dB,
+  * reused-probe fraction > 0.5.
 
-Lap 1 probes each pose; later laps hit the cache at zero pose distance,
-where reuse returns the identical count map (dilation radius 0) and the
-stable count sort gives a bit-identical block layout — so reused frames
-match the always-probe baseline exactly, not just within tolerance.
-``--dtheta-jitter`` offsets each lap's poses to exercise the near-pose
-path instead (conservative dilated count maps; PSNR deltas become nonzero
-and are reported, not gated).
+--sweep — reuse-radius sweep (ROADMAP item): per-lap pose jitter steps
+through increasing pose deltas; three probe-transfer modes run the same
+trajectory (warped / dilation-only / always-probe) and each (jitter, mode)
+emits a JSON row with the reused fraction and PSNR delta.  Gate: the
+warped path must sustain reuse (lap-2 reuse >= 0.9 at worst signed delta
+>= -0.1 dB) at a pose radius >= 2x the dilation-only path's — the PR that
+introduced warping exists to beat the ~4-degree dilation cap.
 
-The analytic field makes the PSNR comparison exact-reference (no training
-error in the way), matching the repo's claim structure.
+--latency — multi-client latency distribution (ROADMAP item): interleaved
+two-scene request streams at several slot counts; emits p50/p99/mean
+per-frame latency JSON rows.
+
+All modes append rows to out/bench/render_serve_<mode>.json.  The analytic
+field makes PSNR comparisons exact-reference, matching the repo's claim
+structure.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 from pathlib import Path
@@ -35,9 +43,27 @@ sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 
 import numpy as np
 
-from repro.core import fields, pipeline, rendering, scene
+from repro.core import adaptive, fields, pipeline, rendering, scene
+from repro.framecache import ProbeReuseConfig, RadianceReuseConfig
 from repro.serve.render_engine import (RenderRequest, RenderServeConfig,
                                        RenderServingEngine)
+
+OUT_DIR = Path(__file__).resolve().parent.parent / "out" / "bench"
+
+
+def emit_rows(name: str, rows):
+    """Append rows to the mode's JSON file (a flat list across runs)."""
+    OUT_DIR.mkdir(parents=True, exist_ok=True)
+    path = OUT_DIR / f"render_serve_{name}.json"
+    existing = []
+    if path.exists():
+        try:
+            existing = json.loads(path.read_text())
+        except json.JSONDecodeError:
+            existing = []
+    existing.extend(rows)
+    path.write_text(json.dumps(existing, indent=1))
+    print(f"  [json] {len(rows)} rows -> {path} ({len(existing)} total)")
 
 
 def trajectory_requests(scene_name, poses, laps, size, dtheta, jitter=0.0):
@@ -62,6 +88,223 @@ def run_engine(flds, acfg, rcfg, reqs):
     return done, dt, eng
 
 
+def reference_frames(field, reqs, size):
+    """Exact 512-sample analytic reference per pose — computed ONCE per
+    trajectory and shared across the modes that replay it (the reference
+    march dominates non-engine bench cost)."""
+    refs = {}
+    for rq in reqs:
+        o, d = scene.camera_rays(rq.cam)
+        ref, _ = scene.render_reference(field, o, d)
+        refs[rq.rid] = np.asarray(ref).reshape(size, size, 3)
+    return refs
+
+
+def psnr_per_frame(refs, done, reqs):
+    by_rid = {r.rid: r for r in done}
+    return [float(rendering.psnr(by_rid[rq.rid].image, refs[rq.rid]))
+            for rq in reqs]
+
+
+def make_acfg(size_block=128):
+    # sort_by_opacity off: argsort(counts) is stable, so identical count
+    # maps give bit-identical block layouts — zero-distance reuse frames
+    # then match the always-probe baseline exactly
+    return pipeline.ASDRConfig(
+        ns_full=96, probe_stride=4, candidates=(12, 24, 48),
+        block_size=size_block, chunk=16, sort_by_opacity=False)
+
+
+# ---------------------------------------------------------------- replay
+def run_replay(args):
+    assert args.poses >= 8, "acceptance: trajectory must have >= 8 poses"
+    # with L laps a perfect run marches exactly 1/L of the no-reuse rays
+    # and reuses (L-1)/L of the probes: L=2 sits ON both gate boundaries
+    # (0.5 vs strict < / >), so the gates are only meaningful from 3 laps
+    assert args.laps >= 3, "acceptance gates need --laps >= 3"
+    field = scene.make_scene(args.scene)
+    flds = {args.scene: fields.analytic_field_fns(field)}
+    acfg = make_acfg()
+
+    def traj():
+        return trajectory_requests(args.scene, args.poses, args.laps,
+                                   args.size, args.dtheta)
+
+    reuse_cfg = RenderServeConfig(
+        slots=4, blocks_per_batch=16,
+        reuse=ProbeReuseConfig(max_angle_deg=1.0, max_translation=0.02,
+                               refresh_every=0),
+        radiance=RadianceReuseConfig(max_angle_deg=1.0, max_translation=0.02,
+                                     refresh_every=0))
+    none_cfg = RenderServeConfig(slots=4, blocks_per_batch=16, reuse=None)
+
+    reqs = traj()
+    done_r, dt_r, eng_r = run_engine(flds, acfg, reuse_cfg, reqs)
+    done_p, dt_p, eng_p = run_engine(flds, acfg, none_cfg, traj())
+
+    refs = reference_frames(field, reqs, args.size)
+    psnrs_r = psnr_per_frame(refs, done_r, reqs)
+    psnrs_p = psnr_per_frame(refs, done_p, reqs)
+    deltas = [abs(a - b) for a, b in zip(psnrs_r, psnrs_p)]
+
+    st_r, st_p = eng_r.engine_stats(), eng_p.engine_stats()
+    ray_frac = (st_r["rays_marched_fraction"]
+                / max(st_p["rays_marched_fraction"], 1e-9))
+    probe_frac = st_r["reused_probe_fraction"]
+    max_delta = max(deltas)
+    print(f"== render_serve replay: {args.poses}-pose orbit x {args.laps} "
+          f"laps = {len(reqs)} frames, {args.size}x{args.size}, "
+          f"scene={args.scene} ==")
+    print(f"  fps   reuse    : {len(done_r)/dt_r:6.2f}  ({dt_r:.2f}s)")
+    print(f"  fps   no-reuse : {len(done_p)/dt_p:6.2f}  ({dt_p:.2f}s)")
+    print(f"  reused-probe fraction   : {probe_frac:.3f} "
+          f"({st_r['probe_hits']} hits, {st_r['probe_misses']} probes)")
+    print(f"  reused-radiance fraction: "
+          f"{st_r['reused_radiance_fraction']:.3f} "
+          f"({st_r['radiance_hits']} hits)")
+    print(f"  phase-II rays marched   : {st_r['rays_marched']} vs "
+          f"{st_p['rays_marched']} no-reuse -> fraction {ray_frac:.3f}")
+    print(f"  PSNR (reuse)    : mean {np.mean(psnrs_r):.2f} dB  "
+          f"min {min(psnrs_r):.2f} dB")
+    print(f"  PSNR (no-reuse) : mean {np.mean(psnrs_p):.2f} dB  "
+          f"min {min(psnrs_p):.2f} dB")
+    print(f"  per-frame |PSNR delta|: mean {np.mean(deltas):.4f} dB  "
+          f"max {max_delta:.4f} dB")
+    ok = ray_frac < 0.5 and max_delta <= 0.1 and probe_frac > 0.5
+    print(f"  acceptance (ray fraction<0.5, max delta<=0.1 dB, "
+          f"probe fraction>0.5): {'OK' if ok else 'FAIL'}")
+    emit_rows("replay", [{
+        "bench": "replay", "scene": args.scene, "size": args.size,
+        "poses": args.poses, "laps": args.laps,
+        "fps_reuse": len(done_r) / dt_r, "fps_no_reuse": len(done_p) / dt_p,
+        "reused_probe_fraction": probe_frac,
+        "reused_radiance_fraction": st_r["reused_radiance_fraction"],
+        "rays_marched_fraction_of_no_reuse": ray_frac,
+        "mean_psnr_reuse": float(np.mean(psnrs_r)),
+        "mean_psnr_no_reuse": float(np.mean(psnrs_p)),
+        "max_abs_psnr_delta": max_delta, "ok": ok,
+    }])
+    return ok
+
+
+# ----------------------------------------------------------------- sweep
+SWEEP_JITTERS = (0.01, 0.02, 0.04, 0.06)   # per-lap pose offset, radians
+
+
+def run_sweep(args):
+    field = scene.make_scene(args.scene)
+    flds = {args.scene: fields.analytic_field_fns(field)}
+    acfg = make_acfg()
+    poses, laps = max(args.poses // 2, 4), 2
+    # thresholds sit between the largest sweep jitter and the within-lap
+    # pose spacing, so lap-2 frames can only reuse their own lap-1 pose
+    dtheta = 0.08
+    probe_cfg = dict(max_angle_deg=4.0, max_translation=0.07,
+                     refresh_every=0)
+    modes = {
+        "warped": ProbeReuseConfig(warp=True, **probe_cfg),
+        "dilated": ProbeReuseConfig(warp=False, **probe_cfg),
+        "always": None,
+    }
+
+    rows = []
+    sustained = {"warped": 0.0, "dilated": 0.0}
+    print(f"== reuse-radius sweep: {poses} poses x {laps} laps, "
+          f"{args.size}x{args.size}, modes warped/dilated/always ==")
+    for jitter in SWEEP_JITTERS:
+        # measured pose delta between a lap-1 pose and its lap-2 twin
+        cam_a = scene.look_at_camera(args.size, args.size, theta=0.55,
+                                     phi=0.5)
+        cam_b = scene.look_at_camera(args.size, args.size,
+                                     theta=0.55 + jitter, phi=0.5)
+        ang, tr = adaptive.pose_distance(cam_a, cam_b)
+        ang_deg = float(np.rad2deg(ang))
+
+        reqs = trajectory_requests(args.scene, poses, laps, args.size,
+                                   dtheta, jitter)
+        refs = reference_frames(field, reqs, args.size)
+        results = {}
+        for mode, reuse in modes.items():
+            rcfg = RenderServeConfig(slots=4, blocks_per_batch=16,
+                                     reuse=reuse)
+            done, dt, eng = run_engine(flds, acfg, rcfg,
+                                       trajectory_requests(
+                                           args.scene, poses, laps,
+                                           args.size, dtheta, jitter))
+            psnrs = psnr_per_frame(refs, done, reqs)
+            lap2 = [r for r in done if r.rid >= poses]
+            lap2_reused = (np.mean([r.stats["probe_reused"] for r in lap2])
+                           if lap2 else 0.0)
+            results[mode] = (psnrs, float(lap2_reused), dt, eng)
+        base = results["always"][0]
+        for mode in ("warped", "dilated", "always"):
+            psnrs, lap2_reused, dt, eng = results[mode]
+            worst = min(p - b for p, b in zip(psnrs, base))
+            row = {
+                "bench": "reuse_radius_sweep", "scene": args.scene,
+                "size": args.size, "jitter_rad": jitter,
+                "pose_delta_deg": ang_deg, "pose_delta_translation": tr,
+                "mode": mode,
+                "lap2_reused_fraction": lap2_reused,
+                "reused_probe_fraction":
+                    eng.engine_stats()["reused_probe_fraction"],
+                "mean_psnr": float(np.mean(psnrs)),
+                "worst_signed_delta_db": float(worst),
+                "fps": len(reqs) / dt,
+            }
+            rows.append(row)
+            if mode in sustained and lap2_reused >= 0.9 and worst >= -0.1:
+                sustained[mode] = max(sustained[mode], ang_deg)
+            print(f"  jitter {jitter:.3f} rad ({ang_deg:4.2f} deg) "
+                  f"{mode:>8}: lap2 reuse {lap2_reused:.2f}  "
+                  f"worst delta {worst:+.4f} dB  fps {len(reqs)/dt:5.2f}")
+
+    ok = (sustained["warped"] >= 2.0 * sustained["dilated"]
+          and sustained["dilated"] > 0.0)
+    print(f"  sustained radius: warped {sustained['warped']:.2f} deg vs "
+          f"dilated {sustained['dilated']:.2f} deg "
+          f"(gate: warped >= 2x dilated): {'OK' if ok else 'FAIL'}")
+    rows.append({"bench": "reuse_radius_gate",
+                 "warped_radius_deg": sustained["warped"],
+                 "dilated_radius_deg": sustained["dilated"], "ok": ok})
+    emit_rows("sweep", rows)
+    return ok
+
+
+# --------------------------------------------------------------- latency
+def run_latency(args):
+    flds = {s: fields.analytic_field_fns(scene.make_scene(s))
+            for s in ("mic", "hotdog")}
+    acfg = make_acfg()
+    frames = max(args.poses, 8) * 2
+    rows = []
+    print(f"== multi-client latency: {frames} frames "
+          f"(2 scenes interleaved), {args.size}x{args.size} ==")
+    for slots in (1, 2, 4, 8):
+        rcfg = RenderServeConfig(slots=slots, blocks_per_batch=16,
+                                 reuse=ProbeReuseConfig(refresh_every=0))
+        reqs = [RenderRequest(
+            rid=i, scene=("mic", "hotdog")[i % 2],
+            cam=scene.look_at_camera(args.size, args.size,
+                                     theta=0.6 + 0.01 * (i // 2), phi=0.5))
+            for i in range(frames)]
+        done, dt, eng = run_engine(flds, acfg, rcfg, reqs)
+        lat_ms = np.asarray([r.latency_s for r in done]) * 1e3
+        row = {
+            "bench": "latency_vs_slots", "size": args.size,
+            "frames": frames, "slots": slots,
+            "p50_ms": float(np.percentile(lat_ms, 50)),
+            "p99_ms": float(np.percentile(lat_ms, 99)),
+            "mean_ms": float(lat_ms.mean()),
+            "fps": len(done) / dt,
+        }
+        rows.append(row)
+        print(f"  slots {slots}: p50 {row['p50_ms']:7.1f} ms  "
+              f"p99 {row['p99_ms']:7.1f} ms  fps {row['fps']:5.2f}")
+    emit_rows("latency", rows)
+    return True
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--scene", default="mic")
@@ -71,79 +314,18 @@ def main():
     ap.add_argument("--size", type=int, default=48)
     ap.add_argument("--dtheta", type=float, default=0.04,
                     help="orbit step in radians (~2.3 deg)")
-    ap.add_argument("--dtheta-jitter", type=float, default=0.0,
-                    help="per-lap pose offset (rad): >0 exercises the "
-                         "near-pose dilated-reuse path")
+    ap.add_argument("--sweep", action="store_true",
+                    help="reuse-radius sweep (warped vs dilated vs always)")
+    ap.add_argument("--latency", action="store_true",
+                    help="latency distribution vs slot count")
     args = ap.parse_args()
-    assert args.poses >= 8, "acceptance: trajectory must have >= 8 poses"
 
-    field = scene.make_scene(args.scene)
-    flds = {args.scene: fields.analytic_field_fns(field)}
-    # sort_by_opacity off: argsort(counts) is stable, so identical count
-    # maps give bit-identical block layouts — zero-distance reuse frames
-    # then match the always-probe baseline exactly
-    acfg = pipeline.ASDRConfig(
-        ns_full=96, probe_stride=4, candidates=(12, 24, 48),
-        block_size=128, chunk=16, sort_by_opacity=False)
-
-    def traj():
-        return trajectory_requests(args.scene, args.poses, args.laps,
-                                   args.size, args.dtheta,
-                                   args.dtheta_jitter)
-
-    reuse_cfg = RenderServeConfig(
-        slots=4, blocks_per_batch=16,
-        reuse=pipeline.ProbeReuseConfig(max_angle_deg=1.0,
-                                        max_translation=0.02,
-                                        refresh_every=0))
-    probe_cfg = RenderServeConfig(slots=4, blocks_per_batch=16, reuse=None)
-
-    reqs = traj()
-    done_r, dt_r, eng_r = run_engine(flds, acfg, reuse_cfg, reqs)
-    done_p, dt_p, _ = run_engine(flds, acfg, probe_cfg, traj())
-
-    # exact analytic reference per pose
-    by_rid_r = {r.rid: r for r in done_r}
-    by_rid_p = {r.rid: r for r in done_p}
-    deltas, psnrs_r, psnrs_p = [], [], []
-    for rq in reqs:
-        o, d = scene.camera_rays(rq.cam)
-        ref, _ = scene.render_reference(field, o, d)
-        ref = np.asarray(ref).reshape(args.size, args.size, 3)
-        pr = float(rendering.psnr(by_rid_r[rq.rid].image, ref))
-        pp = float(rendering.psnr(by_rid_p[rq.rid].image, ref))
-        psnrs_r.append(pr)
-        psnrs_p.append(pp)
-        deltas.append(abs(pr - pp))
-
-    st = eng_r.engine_stats()
-    frac = st["reused_probe_fraction"]
-    max_delta = max(deltas)
-    print(f"== render_serve bench: {args.poses}-pose orbit x {args.laps} "
-          f"laps = {len(reqs)} frames, {args.size}x{args.size}, "
-          f"scene={args.scene} ==")
-    print(f"  fps   reuse        : {len(done_r)/dt_r:6.2f}  ({dt_r:.2f}s)")
-    print(f"  fps   always-probe : {len(done_p)/dt_p:6.2f}  ({dt_p:.2f}s)")
-    print(f"  reused-probe fraction: {frac:.3f} "
-          f"({st['probe_hits']} hits, {st['probe_misses']} probes, "
-          f"{st['probe_refreshes']} refreshes)")
-    print(f"  PSNR vs reference (reuse)        : "
-          f"mean {np.mean(psnrs_r):.2f} dB  min {min(psnrs_r):.2f} dB")
-    print(f"  PSNR vs reference (always-probe) : "
-          f"mean {np.mean(psnrs_p):.2f} dB  min {min(psnrs_p):.2f} dB")
-    print(f"  per-frame |PSNR delta|: mean {np.mean(deltas):.4f} dB  "
-          f"max {max_delta:.4f} dB")
-    if args.dtheta_jitter > 0:
-        # near-pose mode: dilated maps oversample, so reuse PSNR sits AT OR
-        # ABOVE the baseline; the exact-delta gate applies to replay only
-        worse = min(pr - pp for pr, pp in zip(psnrs_r, psnrs_p))
-        ok = frac > 0.5 and worse > -0.1
-        print(f"  near-pose acceptance (fraction>0.5, reuse no more than "
-              f"0.1 dB below baseline): {'OK' if ok else 'FAIL'}")
+    if args.sweep:
+        ok = run_sweep(args)
+    elif args.latency:
+        ok = run_latency(args)
     else:
-        ok = frac > 0.5 and max_delta < 0.1
-        print(f"  acceptance (fraction>0.5, max delta<0.1 dB): "
-              f"{'OK' if ok else 'FAIL'}")
+        ok = run_replay(args)
     return 0 if ok else 1
 
 

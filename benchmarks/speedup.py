@@ -9,9 +9,8 @@ wall-clock of the jitted renderers.
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
-from repro.core import decouple, pipeline, reuse, scene
+from repro.core import pipeline, scene
 
 from . import common
 

@@ -1,7 +1,6 @@
 """Fig. 21 — design-space sweeps: adaptive threshold delta, group size n."""
 from __future__ import annotations
 
-import jax.numpy as jnp
 
 from repro.core import decouple, pipeline, rendering, scene
 

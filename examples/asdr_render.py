@@ -16,7 +16,6 @@ from pathlib import Path
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 
 import numpy as np
-import jax.numpy as jnp
 
 from repro.core import fields, pipeline, rendering, scene
 
@@ -81,7 +80,7 @@ def main():
     write_ppm(out / "asdr.ppm", img)
     write_ppm(out / "baseline.ppm", base)
     heat = np.asarray(counts, np.float32).reshape(args.size, args.size)
-    heat = (heat - heat.min()) / max(heat.ptp(), 1)
+    heat = (heat - heat.min()) / max(np.ptp(heat), 1)
     write_ppm(out / "difficulty.ppm",
               np.stack([heat, 0.2 + 0 * heat, 1.0 - heat], -1))
     print(f"  wrote {out}/asdr.ppm, baseline.ppm, difficulty.ppm "

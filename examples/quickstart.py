@@ -13,9 +13,8 @@ from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 
-import jax.numpy as jnp
 
-from repro.core import fields, model as model_lib, pipeline, rendering, scene
+from repro.core import model as model_lib, pipeline, rendering, scene
 from repro.core import train as train_lib
 
 

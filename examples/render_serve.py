@@ -1,12 +1,14 @@
-"""Multi-user render serving demo: pooled blocks + cross-frame probe reuse.
+"""Multi-user render serving demo: pooled blocks + cross-frame reuse.
 
   PYTHONPATH=src python examples/render_serve.py [--frames 12] [--size 64]
 
 Simulates two users orbiting two different scenes at once.  Their render
 requests interleave in the engine's slots; every scheduling round pools
-the Phase-II blocks of all live frames into budget-sorted batches, and
-each user's smooth trajectory reuses its own Phase-I probe maps (with the
-pose-scaled conservative dilation) instead of re-probing per frame.
+the Phase-II blocks of all live frames into budget-sorted batches.  Each
+user's smooth trajectory reuses its own cached maps through both
+framecache tiers: Phase-I probe maps warp to nearby poses instead of
+re-probing, and finished Phase-II frames warp forward so later frames
+march only their disoccluded rays.
 
 Writes out/serve_<scene>_<frame>.ppm plus a per-frame stats table.
 """
@@ -19,7 +21,8 @@ sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 
 import numpy as np
 
-from repro.core import fields, pipeline, rendering, scene
+from repro.core import fields, pipeline, scene
+from repro.framecache import ProbeReuseConfig, RadianceReuseConfig
 from repro.serve.render_engine import (RenderRequest, RenderServeConfig,
                                        RenderServingEngine)
 
@@ -47,9 +50,10 @@ def main():
             for s in args.scenes}
     eng = RenderServingEngine(flds, acfg, RenderServeConfig(
         slots=4, blocks_per_batch=16,
-        reuse=pipeline.ProbeReuseConfig(max_angle_deg=3.0,
-                                        max_translation=0.05,
-                                        refresh_every=6)))
+        reuse=ProbeReuseConfig(max_angle_deg=3.0, max_translation=0.05,
+                               refresh_every=6),
+        radiance=RadianceReuseConfig(max_angle_deg=1.5, max_translation=0.03,
+                                     refresh_every=6)))
 
     # two users, interleaved frame requests along their own orbits
     reqs = []
@@ -67,14 +71,15 @@ def main():
 
     out = Path("out")
     out.mkdir(exist_ok=True)
-    print(f"{'frame':>5} {'scene':>8} {'probe':>7} {'samples':>9} "
-          f"{'vs fixed':>8}")
+    print(f"{'frame':>5} {'scene':>8} {'probe':>7} {'phase2':>7} "
+          f"{'rays':>11} {'samples':>9}")
     per_scene = {s: 0 for s in args.scenes}
     for r in sorted(done, key=lambda r: r.rid):
         tag = "reused" if r.stats["probe_reused"] else "probed"
-        frac = r.stats["samples_processed"] / r.stats["baseline_samples"]
-        print(f"{r.rid:>5} {r.scene:>8} {tag:>7} "
-              f"{r.stats['samples_processed']:>9} {100 * frac:>7.1f}%")
+        rtag = "warped" if r.stats["radiance_reused"] else "marched"
+        rays = f"{r.stats['rays_marched']}/{r.stats['rays_total']}"
+        print(f"{r.rid:>5} {r.scene:>8} {tag:>7} {rtag:>7} {rays:>11} "
+              f"{r.stats['samples_processed']:>9}")
         write_ppm(out / f"serve_{r.scene}_{per_scene[r.scene]:03d}.ppm",
                   r.image)
         per_scene[r.scene] += 1
@@ -85,6 +90,8 @@ def main():
     print(f"  reused-probe fraction {st['reused_probe_fraction']:.2f} "
           f"({st['probe_hits']} hits, {st['probe_misses']} probes, "
           f"{st['probe_refreshes']} refreshes)")
+    print(f"  reused-radiance fraction {st['reused_radiance_fraction']:.2f}, "
+          f"rays marched {100 * st['rays_marched_fraction']:.1f}% of total")
     print(f"  {st['batches']} pooled batches, pad fraction "
           f"{st['pad_block_fraction']:.2f}")
     print(f"  wrote {sum(per_scene.values())} frames to {out}/")

@@ -18,7 +18,6 @@ from __future__ import annotations
 
 from typing import Sequence, Tuple
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -80,12 +79,16 @@ def probe_counts(
     return counts
 
 
-def interpolate_counts(
+def interpolate_map(
     probe: jnp.ndarray, probe_hw: Tuple[int, int], full_hw: Tuple[int, int],
-    candidates: Sequence[int] = DEFAULT_CANDIDATES, ns_full: int = 192,
 ) -> jnp.ndarray:
-    """Bilinear interpolation of the probe-count map to the full image, then
-    conservative snap-UP to the candidate ladder (paper §4.2)."""
+    """Float bilinear interpolation of a per-probe-pixel map to full res.
+
+    probe: (ph*pw,) values on the strided probe grid.  Returns float32
+    (H*W,).  Shared by count interpolation (which then snaps to the
+    candidate ladder), the probe opacity/depth maps, and the framecache
+    warp code — values stay exact floats, no quantization.
+    """
     ph, pw = probe_hw
     H, W = full_hw
     grid = probe.reshape(ph, pw).astype(jnp.float32)
@@ -103,11 +106,21 @@ def interpolate_counts(
         + grid[y1][:, x0] * wy * (1 - wx)
         + grid[y1][:, x1] * wy * wx
     )
+    return v.reshape(H * W)
+
+
+def interpolate_counts(
+    probe: jnp.ndarray, probe_hw: Tuple[int, int], full_hw: Tuple[int, int],
+    candidates: Sequence[int] = DEFAULT_CANDIDATES, ns_full: int = 192,
+) -> jnp.ndarray:
+    """Bilinear interpolation of the probe-count map to the full image, then
+    conservative snap-UP to the candidate ladder (paper §4.2)."""
+    v = interpolate_map(probe, probe_hw, full_hw)
     ladder = jnp.asarray(sorted(set(list(candidates) + [ns_full])), jnp.int32)
     # snap UP: smallest ladder value >= v
     idx = jnp.searchsorted(ladder, jnp.ceil(v).astype(jnp.int32), side="left")
     idx = jnp.clip(idx, 0, ladder.shape[0] - 1)
-    return ladder[idx].reshape(H * W)
+    return ladder[idx]
 
 
 def sort_rays_into_blocks(

@@ -10,9 +10,7 @@ in benchmarks/sweeps.py and benchmarks/quality.py.
 """
 from __future__ import annotations
 
-from typing import Dict
 
-import jax
 import jax.numpy as jnp
 
 from . import rendering, scene

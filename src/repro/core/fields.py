@@ -15,7 +15,7 @@ is simply the ground-truth color and ``color`` is a projection.
 """
 from __future__ import annotations
 
-from typing import Callable, NamedTuple, Tuple
+from typing import Callable, NamedTuple
 
 import jax.numpy as jnp
 

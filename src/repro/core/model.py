@@ -8,12 +8,12 @@ Instant-NGP sizes (64-wide, 1+2 hidden layers, ~33%:67%).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp
 
-from . import hashgrid, mlp, rendering, scene
+from . import hashgrid, mlp, scene
 
 
 @dataclasses.dataclass(frozen=True)

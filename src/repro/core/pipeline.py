@@ -19,11 +19,10 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Dict, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from . import adaptive, decouple, rendering, scene
 from .fields import FieldFns
@@ -212,11 +211,14 @@ def render_adaptive(fns: FieldFns, acfg: ASDRConfig, origins, dirs, counts,
 
 
 def probe_phase(fns: FieldFns, acfg: ASDRConfig, cam, probe_key=None,
-                return_opacity: bool = False):
+                return_opacity: bool = False, return_depth: bool = False):
     """Phase I: strided probe -> per-pixel sample-count map (H*W,).
 
     With return_opacity, also bilinearly interpolates the probe rays'
-    accumulated opacity over the image (secondary block-sort key)."""
+    accumulated opacity over the image (secondary block-sort key).  With
+    return_depth, additionally interpolates each probe ray's expected
+    termination distance (background pinned to FAR) — the proxy depth the
+    framecache warp primitive reprojects per-pixel maps with."""
     H, W = cam.height, cam.width
     o, d = scene.camera_rays(cam)
     d_stride = acfg.probe_stride
@@ -237,16 +239,19 @@ def probe_phase(fns: FieldFns, acfg: ASDRConfig, cam, probe_key=None,
         acfg.candidates, acfg.ns_full,
     )
     probe_cost = int(probe_idx.shape[0]) * acfg.ns_full
-    if not return_opacity:
+    if not (return_opacity or return_depth):
         return counts, probe_cost
-    # bilinear interpolation of the probe opacity map (reuse the count
-    # interpolation machinery on a scaled-int representation)
-    acc_q = jnp.clip((aux["acc"] * 1000).astype(jnp.int32), 0, 1000)
-    opacity = adaptive.interpolate_counts(
-        acc_q, (jj.shape[0], jj.shape[1]), (H, W),
-        candidates=tuple(range(0, 1001, 50)), ns_full=1000,
-    ).astype(jnp.float32) / 1000.0
-    return counts, probe_cost, opacity
+    probe_hw = (jj.shape[0], jj.shape[1])
+    opacity = adaptive.interpolate_map(aux["acc"], probe_hw, (H, W))
+    if not return_depth:
+        return counts, probe_cost, opacity
+    # expected termination distance E[t] + (1 - acc) * FAR: rays that hit
+    # nothing park their proxy depth at the far plane, so warped background
+    # stays background
+    t_exp = (jnp.sum(aux["weights"] * aux["ts"], axis=-1)
+             + (1.0 - aux["acc"]) * scene.FAR)
+    depth = adaptive.interpolate_map(t_exp, probe_hw, (H, W))
+    return counts, probe_cost, opacity, depth
 
 
 def render_asdr_image(fns: FieldFns, acfg: ASDRConfig, cam, probe_key=None):
@@ -281,151 +286,20 @@ def render_asdr_image(fns: FieldFns, acfg: ASDRConfig, cam, probe_key=None):
 
 
 # --------------------------------------------------------------------------
-# Cross-frame probe reuse — the paper's §5.2.2 data reuse extended to the
-# temporal axis: Phase-I count/opacity maps transfer between nearby camera
-# poses, so most frames of a smooth trajectory skip the probe entirely.
+# DEPRECATED import path: cross-frame reuse moved to repro.framecache.
+# ``ProbeCache`` / ``ProbeReuseConfig`` / ``probe_phase_cached`` now live in
+# framecache/probe.py (rebuilt on the pose-delta warp primitive); the lazy
+# module __getattr__ below keeps `from repro.core.pipeline import ProbeCache`
+# working without a core -> framecache import cycle at module load.
 # --------------------------------------------------------------------------
-@dataclasses.dataclass(frozen=True)
-class ProbeReuseConfig:
-    """When may a frame reuse another pose's Phase-I maps?
-
-    A cached entry matches when BOTH the FULL relative-rotation angle
-    (geodesic on SO(3) — an in-plane roll counts, since it permutes every
-    pixel's ray) and the eye translation to the requesting pose are under
-    the thresholds, and the image geometry (HxW, focal) is identical.
-    ``refresh_every = k`` forces a fresh probe after an entry has been
-    reused k times, bounding count-map staleness on long trajectories;
-    0 disables refreshing.
-    """
-    max_angle_deg: float = 4.0
-    max_translation: float = 0.08
-    refresh_every: int = 8
-    max_entries: int = 64
-    # conservative count-map dilation: scaled to the worst-case pixel shift
-    # of the pose delta (adaptive.reuse_dilation_radius) so reused maps
-    # never under-sample shifted content; 0 margin disables.  A pose delta
-    # whose conservative radius exceeds dilate_cap is treated as a MISS
-    # (re-probe) — never as a smaller-than-safe dilation.
-    dilate_margin: float = 1.5
-    dilate_cap: int = 8
+_FRAMECACHE_REEXPORTS = ("ProbeCache", "ProbeReuseConfig",
+                         "probe_phase_cached")
 
 
-@dataclasses.dataclass
-class _ProbeEntry:
-    cam: "scene.Camera"
-    acfg: ASDRConfig          # config the maps were probed under
-    counts: jnp.ndarray
-    opacity: jnp.ndarray
-    reuses_since_probe: int = 0
-    last_used: int = 0
+def __getattr__(name):  # PEP 562 — lazy deprecation re-exports
+    if name in _FRAMECACHE_REEXPORTS:
+        from ..framecache import probe as _probe
+        return getattr(_probe, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
-class ProbeCache:
-    """Pose-keyed cache of Phase-I (counts, opacity) maps.
-
-    Host-side bookkeeping (pure-python, one lookup per request); the maps
-    themselves stay on device.  One cache per scene — poses from different
-    fields must never share count maps.
-    """
-
-    def __init__(self, rcfg: ProbeReuseConfig | None = None):
-        self.rcfg = rcfg or ProbeReuseConfig()
-        self._entries: list[_ProbeEntry] = []
-        self._clock = 0
-        self.hits = 0
-        self.misses = 0
-        self.refreshes = 0
-
-    def __len__(self):
-        return len(self._entries)
-
-    @property
-    def reused_fraction(self) -> float:
-        total = self.hits + self.misses
-        return self.hits / total if total else 0.0
-
-    def _match(self, cam, acfg):
-        """Nearest usable entry: (entry, angle, translation) or None."""
-        max_ang = np.deg2rad(self.rcfg.max_angle_deg)
-        max_tr = self.rcfg.max_translation
-        best, best_score = None, np.inf
-        for e in self._entries:
-            # image geometry and probe config must match exactly: the count
-            # map is per-pixel and acfg-specific; a different focal (zoom)
-            # changes every ray even at an identical pose.  Filtering here
-            # (not post-hoc) lets entries for different configs coexist
-            # instead of shadowing each other.
-            if e.acfg != acfg:
-                continue
-            if (e.cam.height, e.cam.width) != (cam.height, cam.width):
-                continue
-            if abs(e.cam.focal - cam.focal) > 1e-6 * max(cam.focal, 1.0):
-                continue
-            ang, tr = adaptive.pose_distance(cam, e.cam)
-            if ang > max_ang or tr > max_tr:
-                continue
-            score = ang / max(max_ang, 1e-9) + tr / max(max_tr, 1e-9)
-            if score < best_score:
-                best, best_score = (e, ang, tr), score
-        return best
-
-    def _store(self, cam, acfg, counts, opacity, replacing=None):
-        self._clock += 1
-        if replacing is not None:
-            replacing.cam = cam
-            replacing.acfg = acfg
-            replacing.counts = counts
-            replacing.opacity = opacity
-            replacing.reuses_since_probe = 0
-            replacing.last_used = self._clock
-            return
-        if len(self._entries) >= self.rcfg.max_entries:
-            self._entries.remove(min(self._entries, key=lambda e: e.last_used))
-        self._entries.append(_ProbeEntry(cam, acfg, counts, opacity,
-                                         last_used=self._clock))
-
-
-def probe_phase_cached(fns: FieldFns, acfg: ASDRConfig, cam,
-                       cache: ProbeCache | None, probe_key=None):
-    """Phase I with cross-frame reuse.
-
-    Returns (counts (H*W,), probe_cost, opacity (H*W,), reused: bool).
-    probe_cost is 0 on a cache hit — the whole point: a reused frame pays
-    only Phase II.  Opacity is always produced so the serving engine can
-    sort pooled blocks by the composite (count, opacity) key.
-    """
-    if cache is not None:
-        match = cache._match(cam, acfg)
-        if match is not None:
-            entry, ang, tr = match
-            radius = adaptive.reuse_dilation_radius(
-                cam, ang, tr, scene.NEAR,
-                margin=cache.rcfg.dilate_margin,
-            ) if cache.rcfg.dilate_margin > 0 else 0
-            k = cache.rcfg.refresh_every
-            usable = (radius <= cache.rcfg.dilate_cap
-                      and (k <= 0 or entry.reuses_since_probe < k))
-            if usable:
-                cache.hits += 1
-                cache._clock += 1
-                entry.reuses_since_probe += 1
-                entry.last_used = cache._clock
-                counts = adaptive.dilate_count_map(
-                    entry.counts, (cam.height, cam.width), radius,
-                    border_fill=acfg.ns_full)
-                return counts, 0, entry.opacity, True
-            # re-probe at the CURRENT pose and rebase the entry: either a
-            # scheduled refresh (k-th reuse) or a pose delta whose
-            # conservative dilation radius overflows dilate_cap
-            counts, cost, opacity = probe_phase(
-                fns, acfg, cam, probe_key, return_opacity=True)
-            cache.refreshes += 1
-            cache.misses += 1
-            cache._store(cam, acfg, counts, opacity, replacing=entry)
-            return counts, cost, opacity, False
-    counts, cost, opacity = probe_phase(
-        fns, acfg, cam, probe_key, return_opacity=True)
-    if cache is not None:
-        cache.misses += 1
-        cache._store(cam, acfg, counts, opacity)
-    return counts, cost, opacity, False

@@ -9,7 +9,6 @@ legal form of the paper's per-pixel adaptivity).
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 # Opacity saturation threshold for early termination (§6.6: terminate when

@@ -13,8 +13,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from functools import partial
-from typing import Dict, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

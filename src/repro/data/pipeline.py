@@ -22,7 +22,6 @@ from typing import Iterator, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 
 @dataclasses.dataclass(frozen=True)

@@ -1,0 +1,18 @@
+"""Cross-frame reuse subsystem: pose-delta warping of probe maps and
+cached radiance.
+
+Three reuse tiers (README.md in this package):
+  1. intra-frame dedup — core/reuse.py + the Pallas encode kernel;
+  2. warped Phase-I probe maps — probe.py (counts/opacity/depth transfer
+     between nearby poses, reprojected by the pose delta);
+  3. warped Phase-II radiance — radiance.py (finished frames warp to new
+     poses; only disoccluded rays re-march).
+warp.py holds the shared depth-guided reprojection primitive.
+"""
+from .probe import (ProbeCache, ProbeMaps, ProbeReuseConfig,  # noqa: F401
+                    cached_probe_maps, probe_phase_cached)
+from .radiance import (RadianceCache, RadianceReuseConfig,  # noqa: F401
+                       WarpedRadiance)
+from .render import (FrameCache, make_frame_cache,  # noqa: F401
+                     render_asdr_image_cached)
+from . import warp  # noqa: F401

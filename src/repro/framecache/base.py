@@ -1,0 +1,70 @@
+"""Shared skeleton for pose-keyed caches of per-pixel device maps.
+
+ProbeCache (Phase-I maps) and RadianceCache (finished frames) share their
+entire matching and retention policy; keeping it in one place locks their
+semantics together — a change to, say, the focal tolerance or the score
+normalization cannot silently apply to one tier and not the other.
+
+Subclasses provide entry objects with ``cam`` / ``acfg`` / ``last_used``
+attributes and an ``rcfg`` carrying ``max_angle_deg``, ``max_translation``
+and ``max_entries``.  Host-side bookkeeping only (pure python, one lookup
+per request); the maps themselves stay on device.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from ..core import adaptive
+
+
+class PoseKeyedCache:
+    def __init__(self, rcfg):
+        self.rcfg = rcfg
+        self._entries: list = []
+        self._clock = 0
+        self.hits = 0
+        self.misses = 0
+        self.refreshes = 0
+
+    def __len__(self):
+        return len(self._entries)
+
+    @property
+    def reused_fraction(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+    def _tick(self) -> int:
+        self._clock += 1
+        return self._clock
+
+    def _match(self, cam, acfg):
+        """Nearest usable entry: (entry, angle, translation) or None."""
+        max_ang = np.deg2rad(self.rcfg.max_angle_deg)
+        max_tr = self.rcfg.max_translation
+        best, best_score = None, np.inf
+        for e in self._entries:
+            # image geometry and render config must match exactly: the maps
+            # are per-pixel and acfg-specific; a different focal (zoom)
+            # changes every ray even at an identical pose.  Filtering here
+            # (not post-hoc) lets entries for different configs coexist
+            # instead of shadowing each other.
+            if e.acfg != acfg:
+                continue
+            if (e.cam.height, e.cam.width) != (cam.height, cam.width):
+                continue
+            if abs(e.cam.focal - cam.focal) > 1e-6 * max(cam.focal, 1.0):
+                continue
+            ang, tr = adaptive.pose_distance(cam, e.cam)
+            if ang > max_ang or tr > max_tr:
+                continue
+            score = ang / max(max_ang, 1e-9) + tr / max(max_tr, 1e-9)
+            if score < best_score:
+                best, best_score = (e, ang, tr), score
+        return best
+
+    def _append_with_eviction(self, entry):
+        """Add an entry, evicting the least-recently-used past capacity."""
+        if len(self._entries) >= self.rcfg.max_entries:
+            self._entries.remove(min(self._entries, key=lambda e: e.last_used))
+        self._entries.append(entry)

@@ -1,0 +1,206 @@
+"""Cross-frame Phase-I reuse: pose-keyed probe maps, warped by pose delta.
+
+The paper's §5.2.2 data reuse extended to the temporal axis: Phase-I
+count/opacity/depth maps transfer between nearby camera poses, so most
+frames of a smooth trajectory skip the probe entirely.
+
+Two transfer modes, selected by ``ProbeReuseConfig.warp``:
+
+  * warp=True (default) — the cached maps are reprojected to the
+    requesting pose with the entry's own probe depth (warp.warp_count_map
+    / warp.nearest_source).  Only disoccluded pixels fall back to the
+    conservative fill (ns_full), plus a small fixed ``warp_margin``
+    dilation for splat rounding — so the usable pose radius is bounded by
+    the match thresholds, not by a global dilation cap.
+  * warp=False — PR-1 behavior: maps transfer untransformed and the WHOLE
+    map is dilated by the worst-case pixel shift of the pose delta; a
+    radius above ``dilate_cap`` is a miss.  Kept for the reuse-radius
+    sweep benchmark and as the conservative fallback.
+
+A pose delta whose worst-case pixel displacement rounds to zero skips the
+warp entirely and returns the entry's maps untransformed — zero-distance
+reuse is bit-exactly a re-probe (tests and the replay benchmark gate on
+this).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from ..core import adaptive, pipeline, scene
+from ..core.fields import FieldFns
+from ..core.pipeline import ASDRConfig
+from . import warp as warp_lib
+from .base import PoseKeyedCache
+
+
+@dataclasses.dataclass(frozen=True)
+class ProbeReuseConfig:
+    """When (and how) may a frame reuse another pose's Phase-I maps?
+
+    A cached entry matches when BOTH the FULL relative-rotation angle
+    (geodesic on SO(3) — an in-plane roll counts, since it permutes every
+    pixel's ray) and the eye translation to the requesting pose are under
+    the thresholds, and the image geometry (HxW, focal) is identical.
+    ``refresh_every = k`` forces a fresh probe after an entry has been
+    reused k times, bounding count-map staleness on long trajectories;
+    0 disables refreshing.
+    """
+    max_angle_deg: float = 4.0
+    max_translation: float = 0.08
+    refresh_every: int = 8
+    max_entries: int = 64
+    # warp=True: reproject cached maps by the pose delta (depth-guided);
+    # warp_margin is a FIXED post-warp max-dilation radius absorbing the
+    # round-to-nearest splat error — NOT scaled with the pose delta.
+    warp: bool = True
+    warp_margin: int = 1
+    # warp=False fallback: conservative whole-map dilation scaled to the
+    # worst-case pixel shift (adaptive.reuse_dilation_radius); a pose delta
+    # whose radius exceeds dilate_cap is a MISS (re-probe) — never a
+    # smaller-than-safe dilation.
+    dilate_margin: float = 1.5
+    dilate_cap: int = 8
+
+
+@dataclasses.dataclass
+class ProbeMaps:
+    """Phase-I products for one frame, all flat (H*W,) on device.
+
+    cost is the probe's sample count — 0 when the maps were reused.
+    depth is None on a dilation-mode (warp=False) reuse at nonzero pose
+    delta: the entry's depth belongs to the CACHED pose's pixel grid and
+    transferring it unwarped would misregister a later radiance warp, so
+    consumers that need per-pixel depth (the radiance store) must skip
+    such frames."""
+    counts: jnp.ndarray
+    opacity: jnp.ndarray
+    depth: jnp.ndarray | None
+    cost: int
+
+
+@dataclasses.dataclass
+class _ProbeEntry:
+    cam: "scene.Camera"
+    acfg: ASDRConfig          # config the maps were probed under
+    maps: ProbeMaps
+    reuses_since_probe: int = 0
+    last_used: int = 0
+
+
+class ProbeCache(PoseKeyedCache):
+    """Pose-keyed cache of Phase-I (counts, opacity, depth) maps.
+
+    Matching/retention policy in base.PoseKeyedCache (shared with the
+    radiance tier).  One cache per scene — poses from different fields
+    must never share count maps.
+    """
+
+    def __init__(self, rcfg: ProbeReuseConfig | None = None):
+        super().__init__(rcfg or ProbeReuseConfig())
+
+    def _store(self, cam, acfg, maps: ProbeMaps, replacing=None):
+        clock = self._tick()
+        if replacing is not None:
+            replacing.cam = cam
+            replacing.acfg = acfg
+            replacing.maps = maps
+            replacing.reuses_since_probe = 0
+            replacing.last_used = clock
+            return
+        self._append_with_eviction(_ProbeEntry(cam, acfg, maps,
+                                               last_used=clock))
+
+
+def _fresh_probe(fns: FieldFns, acfg: ASDRConfig, cam, probe_key) -> ProbeMaps:
+    counts, cost, opacity, depth = pipeline.probe_phase(
+        fns, acfg, cam, probe_key, return_opacity=True, return_depth=True)
+    return ProbeMaps(counts, opacity, depth, cost)
+
+
+def _warped_maps(entry: _ProbeEntry, cam, acfg: ASDRConfig,
+                 rcfg: ProbeReuseConfig) -> ProbeMaps:
+    """Entry's maps reprojected to the requesting pose."""
+    src = entry.maps
+    H, W = cam.height, cam.width
+    tgt, ok, dist = warp_lib.forward_warp(entry.cam, cam, src.depth)
+    counts, _cvalid = warp_lib.warp_count_map(
+        src.counts, src.depth, entry.cam, cam, acfg.ns_full,
+        margin=rcfg.warp_margin, projection=(tgt, ok, dist))
+    sidx, valid = warp_lib.nearest_source(tgt, ok, dist, H * W)
+    # disoccluded pixels: opacity 1.0 sorts them with the expensive rays
+    # their ns_full count already makes them; depth parks at FAR so a
+    # radiance frame built on these maps warps them as background.
+    opacity = jnp.where(valid, src.opacity[sidx], 1.0)
+    depth = jnp.where(valid, dist[sidx], scene.FAR)
+    return ProbeMaps(counts, opacity, depth, 0)
+
+
+def cached_probe_maps(fns: FieldFns, acfg: ASDRConfig, cam,
+                      cache: ProbeCache | None, probe_key=None):
+    """Phase I with cross-frame reuse: returns (ProbeMaps, reused: bool).
+
+    maps.cost is 0 on a cache hit — the whole point: a reused frame pays
+    only Phase II.  Opacity/depth are always produced so the serving
+    engine can sort pooled blocks and feed the radiance cache.
+    """
+    if cache is None:
+        return _fresh_probe(fns, acfg, cam, probe_key), False
+    match = cache._match(cam, acfg)
+    if match is not None:
+        entry, ang, tr = match
+        rcfg = cache.rcfg
+        k = rcfg.refresh_every
+        stale = k > 0 and entry.reuses_since_probe >= k
+        # worst-case pixel displacement of the delta (margin 1.0 = the
+        # true bound): 0 means no content crossed a pixel boundary and
+        # the maps transfer bit-exactly, warp or no warp
+        shift = adaptive.reuse_dilation_radius(cam, ang, tr, scene.NEAR,
+                                               margin=1.0)
+        if rcfg.warp:
+            usable = not stale
+        else:
+            radius = adaptive.reuse_dilation_radius(
+                cam, ang, tr, scene.NEAR, margin=rcfg.dilate_margin,
+            ) if rcfg.dilate_margin > 0 else 0
+            usable = radius <= rcfg.dilate_cap and not stale
+        if usable:
+            cache.hits += 1
+            entry.reuses_since_probe += 1
+            entry.last_used = cache._tick()
+            if shift == 0:
+                return dataclasses.replace(entry.maps, cost=0), True
+            if rcfg.warp:
+                return _warped_maps(entry, cam, acfg, rcfg), True
+            counts = adaptive.dilate_count_map(
+                entry.maps.counts, (cam.height, cam.width), radius,
+                border_fill=acfg.ns_full)
+            # depth=None: the entry's depth is in the CACHED pose's pixel
+            # grid and this mode (by definition) does not warp — see
+            # ProbeMaps docstring
+            return ProbeMaps(counts, entry.maps.opacity, None, 0), True
+        # re-probe at the CURRENT pose and rebase the entry: either a
+        # scheduled refresh (k-th reuse) or — in dilation mode — a pose
+        # delta whose conservative radius overflows dilate_cap
+        maps = _fresh_probe(fns, acfg, cam, probe_key)
+        cache.refreshes += 1
+        cache.misses += 1
+        cache._store(cam, acfg, maps, replacing=entry)
+        return maps, False
+    maps = _fresh_probe(fns, acfg, cam, probe_key)
+    cache.misses += 1
+    cache._store(cam, acfg, maps)
+    return maps, False
+
+
+def probe_phase_cached(fns: FieldFns, acfg: ASDRConfig, cam,
+                       cache: ProbeCache | None, probe_key=None):
+    """Compat wrapper with the pre-framecache contract.
+
+    Returns (counts (H*W,), probe_cost, opacity (H*W,), reused: bool) —
+    exactly what core.pipeline.probe_phase_cached returned before the
+    subsystem moved here.  New code should use ``cached_probe_maps``.
+    """
+    maps, reused = cached_probe_maps(fns, acfg, cam, cache, probe_key)
+    return maps.counts, maps.cost, maps.opacity, reused

@@ -1,0 +1,136 @@
+"""Cross-frame reuse of finished Phase-II radiance — the big frame lever.
+
+A completed frame (rgb, acc) plus its Phase-I proxy depth map is cached
+keyed by (scene, pose, acfg).  A later request within the radiance-reuse
+radius warps the cached frame to its own pose (warp.warp_image, z-buffered
+nearest-surface) and receives a per-pixel validity mask: VALID pixels take
+the warped radiance directly and skip Phase II entirely; only the INVALID
+(disoccluded) rays are marched through the block pipeline and composited
+over the warp.  On a smooth trajectory most rays of most frames never
+touch the field network.
+
+Safety invariants:
+
+  * only FULLY-rendered frames are stored — a frame assembled from a warp
+    is never re-cached, so warps never chain and drift is bounded by one
+    reprojection from an honestly rendered frame;
+  * ``refresh_every`` forces a full render after an entry has been reused
+    k times, bounding staleness on long dwells;
+  * a warp whose valid fraction drops below ``min_valid_fraction`` is a
+    MISS (full render), so a degenerate warp can never dominate a frame;
+  * zero pixel displacement skips the warp — replaying a pose returns the
+    cached frame bit-exactly.
+
+Host-side bookkeeping mirrors probe.ProbeCache; the frames stay on device.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import adaptive, scene
+from ..core.pipeline import ASDRConfig
+from . import warp as warp_lib
+from .base import PoseKeyedCache
+
+
+@dataclasses.dataclass(frozen=True)
+class RadianceReuseConfig:
+    """When may a frame reuse another pose's finished radiance?
+
+    Deliberately tighter defaults than ProbeReuseConfig: warped radiance
+    is the final image (errors are visible), while warped counts only
+    steer sampling (errors cost samples, not quality).
+    """
+    max_angle_deg: float = 2.0
+    max_translation: float = 0.04
+    refresh_every: int = 4
+    max_entries: int = 32
+    min_valid_fraction: float = 0.6
+
+
+@dataclasses.dataclass
+class WarpedRadiance:
+    """A cached frame reprojected to the requesting pose."""
+    rgb: jnp.ndarray       # (H*W, 3)
+    acc: jnp.ndarray       # (H*W,)
+    depth: jnp.ndarray     # (H*W,)
+    valid: np.ndarray      # (H*W,) bool, host-side — drives ray selection
+    valid_fraction: float
+
+
+@dataclasses.dataclass
+class _RadianceEntry:
+    cam: "scene.Camera"
+    acfg: ASDRConfig
+    rgb: jnp.ndarray
+    acc: jnp.ndarray
+    depth: jnp.ndarray
+    reuses_since_render: int = 0
+    last_used: int = 0
+
+
+class RadianceCache(PoseKeyedCache):
+    """Pose-keyed cache of finished Phase-II frames, one per scene.
+
+    Matching/retention policy in base.PoseKeyedCache (shared with the
+    probe tier)."""
+
+    def __init__(self, rcfg: RadianceReuseConfig | None = None):
+        super().__init__(rcfg or RadianceReuseConfig())
+        self.low_valid_misses = 0
+
+    # ------------------------------------------------------------- lookup
+    def lookup(self, cam, acfg: ASDRConfig) -> WarpedRadiance | None:
+        """Warped cached frame for this pose, or None (= render fully).
+
+        A None return already counted as a miss; the caller should render
+        the frame normally and hand it back via ``store``.
+        """
+        match = self._match(cam, acfg)
+        if match is None:
+            self.misses += 1
+            return None
+        entry, ang, tr = match
+        k = self.rcfg.refresh_every
+        if k > 0 and entry.reuses_since_render >= k:
+            self.refreshes += 1
+            self.misses += 1
+            return None
+        shift = adaptive.reuse_dilation_radius(cam, ang, tr, scene.NEAR,
+                                               margin=1.0)
+        if shift == 0:
+            rgb, acc, depth = entry.rgb, entry.acc, entry.depth
+            valid = np.ones((cam.height * cam.width,), bool)
+            vf = 1.0
+        else:
+            rgb, acc, depth, valid_j = warp_lib.warp_image(
+                entry.rgb, entry.acc, entry.depth, entry.cam, cam)
+            valid = np.asarray(valid_j)
+            vf = float(valid.mean())
+            if vf < self.rcfg.min_valid_fraction:
+                self.low_valid_misses += 1
+                self.misses += 1
+                return None
+        self.hits += 1
+        entry.reuses_since_render += 1
+        entry.last_used = self._tick()
+        return WarpedRadiance(rgb, acc, depth, valid, vf)
+
+    # -------------------------------------------------------------- store
+    def store(self, cam, acfg: ASDRConfig, rgb, acc, depth):
+        """Cache a FULLY-rendered frame (never a warped composite)."""
+        clock = self._tick()
+        match = self._match(cam, acfg)
+        if match is not None:        # rebase the nearby entry (refresh)
+            entry, _, _ = match
+            entry.cam = cam
+            entry.acfg = acfg
+            entry.rgb, entry.acc, entry.depth = rgb, acc, depth
+            entry.reuses_since_render = 0
+            entry.last_used = clock
+            return
+        self._append_with_eviction(_RadianceEntry(cam, acfg, rgb, acc, depth,
+                                                  last_used=clock))

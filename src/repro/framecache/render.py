@@ -1,0 +1,95 @@
+"""Single-image rendering through the full cross-frame reuse stack.
+
+``render_asdr_image_cached`` is ``core.pipeline.render_asdr_image`` plus a
+per-scene ``FrameCache``: Phase I goes through the warped probe cache,
+Phase II first asks the radiance cache for a warp of a nearby finished
+frame and marches only the disoccluded rays.  The serving engine
+(serve/render_engine.py) pools the same per-frame work across requests;
+this path is the sequential reference the engine is tested against, and
+what the reuse-radius sweep benchmark drives.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import pipeline, scene
+from ..core.fields import FieldFns
+from ..core.pipeline import ASDRConfig
+from .probe import ProbeCache, ProbeReuseConfig, cached_probe_maps
+from .radiance import RadianceCache, RadianceReuseConfig
+
+
+@dataclasses.dataclass
+class FrameCache:
+    """The per-scene reuse state: probe maps + finished radiance."""
+    probe: Optional[ProbeCache] = None
+    radiance: Optional[RadianceCache] = None
+
+
+def make_frame_cache(
+    probe_cfg: ProbeReuseConfig | None = ProbeReuseConfig(),
+    radiance_cfg: RadianceReuseConfig | None = RadianceReuseConfig(),
+) -> FrameCache:
+    return FrameCache(
+        probe=ProbeCache(probe_cfg) if probe_cfg is not None else None,
+        radiance=(RadianceCache(radiance_cfg)
+                  if radiance_cfg is not None else None),
+    )
+
+
+def render_asdr_image_cached(fns: FieldFns, acfg: ASDRConfig, cam,
+                             fc: FrameCache | None = None, probe_key=None):
+    """Two-phase ASDR render with cross-frame reuse.
+
+    Returns (image (H,W,3), stats).  With fc=None this is exactly
+    ``pipeline.render_asdr_image`` (modulo the always-on opacity sort key).
+    Stats gain: probe_reused, radiance_reused, rays_marched, rays_total,
+    warp_valid_fraction.
+    """
+    H, W = cam.height, cam.width
+    R = H * W
+    fc = fc or FrameCache()
+    maps, probe_reused = cached_probe_maps(
+        fns, acfg, cam, fc.probe, probe_key)
+
+    warped = fc.radiance.lookup(cam, acfg) if fc.radiance is not None else None
+    o, d = scene.camera_rays(cam)
+
+    if warped is None:
+        o_p, d_p, c_p, op_p, _pad = pipeline.pad_rays_to_blocks(
+            acfg, o, d, maps.counts, maps.opacity)
+        rgb, acc, stats = pipeline.render_adaptive(
+            fns, acfg, o_p, d_p, c_p, op_p)
+        img_flat = np.asarray(rgb[:R])
+        # maps.depth is None on a dilation-mode probe reuse (depth would be
+        # misaligned with this pose) — such frames are not cacheable
+        if fc.radiance is not None and maps.depth is not None:
+            fc.radiance.store(cam, acfg, rgb[:R], acc[:R], maps.depth)
+        rays_marched, valid_fraction = R, 0.0
+        stats = dict(stats)
+    else:
+        march_idx = np.flatnonzero(~warped.valid)
+        img_flat = np.asarray(warped.rgb).copy()
+        stats = {"samples_processed": jnp.asarray(0),
+                 "baseline_samples": 0}
+        if march_idx.size:
+            sel = jnp.asarray(march_idx, jnp.int32)
+            o_p, d_p, c_p, op_p, _pad = pipeline.pad_rays_to_blocks(
+                acfg, o[sel], d[sel], maps.counts[sel], maps.opacity[sel])
+            rgb, _acc, stats = pipeline.render_adaptive(
+                fns, acfg, o_p, d_p, c_p, op_p)
+            stats = dict(stats)
+            img_flat[march_idx] = np.asarray(rgb[: march_idx.size])
+        rays_marched, valid_fraction = int(march_idx.size), warped.valid_fraction
+
+    stats["probe_samples"] = maps.cost
+    stats["probe_reused"] = probe_reused
+    stats["radiance_reused"] = warped is not None
+    stats["rays_marched"] = rays_marched
+    stats["rays_total"] = R
+    stats["warp_valid_fraction"] = valid_fraction
+    return img_flat.reshape(H, W, 3), stats

@@ -28,7 +28,6 @@ uses a one-hot-matmul gather for the dense levels (see EXPERIMENTS.md
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -20,7 +20,6 @@ from typing import Dict
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from ..core import mlp as mlp_lib
 from ..core.fields import FieldFns

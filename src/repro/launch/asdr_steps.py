@@ -23,7 +23,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from .. import optim
 from ..core import model as model_lib
-from ..core import pipeline, scene
+from ..core import pipeline
 from ..core.model import NGPConfig
 
 

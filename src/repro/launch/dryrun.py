@@ -19,7 +19,6 @@ Usage:
   python -m repro.launch.dryrun --all --mesh both --out results/dryrun
 """
 import argparse
-import dataclasses
 import json
 import time
 import traceback
@@ -37,7 +36,6 @@ from repro.models import lm
 from repro.models.config import SHAPES
 from repro.sharding import rules as rules_lib
 from repro.train.step import TrainConfig, make_train_step
-from repro import optim
 
 # long_500k requires sub-quadratic attention: run for SSM/hybrid and the
 # local+global alternating gemma family (O(seq) decode against a sharded
@@ -48,6 +46,14 @@ LONG_OK = {"gemma2-27b", "gemma3-12b", "mamba2-780m", "hymba-1.5b"}
 
 def cell_is_skipped(arch: str, shape: str) -> bool:
     return shape == "long_500k" and arch not in LONG_OK
+
+
+def _cost_dict(compiled) -> dict:
+    """compiled.cost_analysis() returns a dict or (older jax) [dict]."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost
 
 
 def _spec(axes, rules, mesh):
@@ -193,6 +199,13 @@ def run_asdr_cell(shape_name: str, multi_pod: bool, variant="baseline"):
             bundle, mesh, variant=variant)
     elif shape_name == "asdr_train":
         jitted, args, extra = asdr_steps.build_train_cell_ngp(bundle, mesh)
+    elif shape_name == "render_serve":
+        # the serving engine's pooled multi-view march as a mesh cell, so
+        # render-serve rows land in the EXPERIMENTS tables next to the LM
+        # cells (same JSON record schema)
+        from repro.launch import render_serve
+        jitted, args, extra = render_serve.build_pooled_march_cell(
+            bundle, mesh)
     else:
         raise ValueError(shape_name)
 
@@ -203,7 +216,7 @@ def run_asdr_cell(shape_name: str, multi_pod: bool, variant="baseline"):
     compiled = lowered.compile()
     t_compile = time.time() - t0
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    cost = _cost_dict(compiled)
     coll = roofline.collective_bytes(
         compiled.as_text(), body_multiplier=extra.get("scan_multiplier", 1))
     flops = float(cost.get("flops", 0.0)) * extra.get("scan_multiplier", 1)
@@ -253,7 +266,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     t_compile = time.time() - t0
 
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    cost = _cost_dict(compiled)
     hlo = compiled.as_text()
     mult = extra.get("scan_multiplier", 1)
     coll = roofline.collective_bytes(hlo, body_multiplier=mult)
@@ -329,14 +342,18 @@ def main():
 
     cells = []
     archs = configs.list_archs() if (args.all or not args.arch) else [args.arch]
-    if args.arch == "ingp-asdr":
-        shapes = (["asdr_render", "asdr_train"] if not args.shape
-                  else [args.shape])
-    else:
-        shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+
+    def shapes_for(arch):
+        # ingp-asdr has its own shape set — pairing it with the LM SHAPES
+        # (as a naive product would under --all) makes every cell error
+        if arch == "ingp-asdr":
+            return (["asdr_render", "asdr_train", "render_serve"]
+                    if not args.shape else [args.shape])
+        return list(SHAPES) if (args.all or not args.shape) else [args.shape]
+
     meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
     for a in archs:
-        for s in shapes:
+        for s in shapes_for(a):
             for m in meshes:
                 cells.append((a, s, m))
 

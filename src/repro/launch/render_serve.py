@@ -74,8 +74,11 @@ def build_pooled_march_cell(bundle, mesh, pool_blocks: int = POOL_BLOCKS):
         jax.ShapeDtypeStruct((pool_blocks, B, 3), jnp.float32),
         jax.ShapeDtypeStruct((pool_blocks,), jnp.int32),
     )
+    # lax.map is a scan: the block body appears once in HLO but runs
+    # pool_blocks times — dryrun's cost model multiplies by this
     return jitted, args, {"pool_blocks": pool_blocks, "block": B,
-                          "rays_per_call": pool_blocks * B}
+                          "rays_per_call": pool_blocks * B,
+                          "scan_multiplier": pool_blocks}
 
 
 def _dryrun(multi_pod: bool):
@@ -99,7 +102,8 @@ def _dryrun(multi_pod: bool):
 
 
 def _concrete(args):
-    from repro.core import fields, pipeline, rendering, scene
+    from repro.core import fields, pipeline, scene
+    from repro.framecache import ProbeReuseConfig, RadianceReuseConfig
     from repro.serve.render_engine import (RenderRequest, RenderServeConfig,
                                            RenderServingEngine)
 
@@ -109,7 +113,9 @@ def _concrete(args):
     flds = {s: fields.analytic_field_fns(scene.make_scene(s))
             for s in ("mic", "hotdog")}
     eng = RenderServingEngine(flds, acfg, RenderServeConfig(
-        slots=args.slots, blocks_per_batch=args.blocks_per_batch))
+        slots=args.slots, blocks_per_batch=args.blocks_per_batch,
+        reuse=ProbeReuseConfig(),
+        radiance=None if args.no_radiance else RadianceReuseConfig()))
 
     reqs = []
     for i in range(args.poses):
@@ -126,12 +132,17 @@ def _concrete(args):
           f"{dt:.2f}s = {len(done)/dt:.2f} fps")
     print(f"  reused-probe fraction : {st['reused_probe_fraction']:.2f} "
           f"({st['probe_hits']} hits / {st['probe_misses']} probes)")
+    print(f"  radiance reuse        : {st['reused_radiance_fraction']:.2f} "
+          f"of frames, rays marched "
+          f"{100 * st['rays_marched_fraction']:.1f}% of total")
     print(f"  pooled batches        : {st['batches']} "
           f"(pad fraction {st['pad_block_fraction']:.2f})")
+    marched = [r for r in done if r.stats["rays_marched"]]
     mean_frac = np.mean([r.stats["samples_processed"]
-                         / r.stats["baseline_samples"] for r in done])
+                         / r.stats["baseline_samples"]
+                         for r in marched]) if marched else 0.0
     print(f"  phase-II samples      : {100 * mean_frac:.1f}% of fixed-"
-          f"{acfg.ns_full} baseline")
+          f"{acfg.ns_full} baseline (marched frames)")
 
 
 def main():
@@ -143,6 +154,8 @@ def main():
     ap.add_argument("--block", type=int, default=256)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--blocks-per-batch", type=int, default=16)
+    ap.add_argument("--no-radiance", action="store_true",
+                    help="disable warped-radiance reuse (probe reuse stays)")
     args = ap.parse_args()
     if args.dryrun:
         _dryrun(args.multi_pod)

@@ -19,11 +19,9 @@ from __future__ import annotations
 
 import argparse
 import time
-from pathlib import Path
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 import repro.configs as configs
 from repro.ckpt import CheckpointManager

@@ -19,7 +19,7 @@ requirement of the ``long_500k`` cell).
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Optional
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp

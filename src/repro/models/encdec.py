@@ -13,7 +13,7 @@ or linear] + [cross-KV static], the standard enc-dec serving layout.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, List, NamedTuple, Optional, Tuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp

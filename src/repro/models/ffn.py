@@ -21,7 +21,6 @@ import jax
 import jax.numpy as jnp
 
 from . import params as pp
-from .params import P
 
 
 # ------------------------------------------------------------------ dense FFN

@@ -12,8 +12,7 @@ axes (models/params.py) resolved by sharding/rules.py.
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Any, Dict, List, NamedTuple, Optional, Tuple
+from typing import Any, Dict, List, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -25,7 +24,6 @@ from . import ffn as ffn_lib
 from . import params as pp
 from . import ssm as ssm_lib
 from .config import ModelConfig
-from .params import P
 
 
 # ------------------------------------------------------------------ layer init

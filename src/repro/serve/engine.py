@@ -14,14 +14,13 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, Dict, List, Optional
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from ..models import lm as lm_lib
-from ..models import transformer as tfm
 
 
 @dataclasses.dataclass

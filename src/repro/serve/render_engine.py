@@ -1,4 +1,4 @@
-"""Batched multi-view render serving engine with cross-frame probe reuse.
+"""Batched multi-view render serving engine with cross-frame reuse.
 
 The render analogue of serve/engine.py's slot-based LM engine: render
 requests (camera pose + scene) occupy ``slots``; every scheduling round the
@@ -7,11 +7,18 @@ and marched through a single jitted batched ``_march_block`` — so MXU/VPU
 utilization depends only on the pooled block stream, not on which request
 each block belongs to (continuous batching for rays).
 
-Phase I goes through ``core.pipeline.ProbeCache``: a request whose pose is
-within the configured angular/translation distance of a previously probed
-pose reuses that pose's count/opacity maps (refreshing every k-th frame),
-extending the paper's intra-frame data reuse to the temporal axis — most
-frames of a smooth trajectory pay zero probe cost.
+Cross-frame reuse goes through ``repro.framecache``:
+
+  * Phase I — ``framecache.probe``: a request whose pose is within the
+    configured angular/translation distance of a previously probed pose
+    gets that pose's count/opacity/depth maps reprojected by the pose
+    delta (warped, disocclusions filled conservatively), so most frames
+    of a smooth trajectory pay zero probe cost.
+  * Phase II — ``framecache.radiance`` (opt-in via
+    ``RenderServeConfig.radiance``): a finished frame within the radiance
+    radius is warped to the requesting pose; the slot marches ONLY the
+    disoccluded rays and composites them over the warp — most rays skip
+    the field network entirely.
 
 Batches have a fixed block count (``blocks_per_batch``); the trailing
 partial batch is padded with unit-budget dummy blocks, so each scene
@@ -36,7 +43,10 @@ import numpy as np
 
 from ..core import pipeline, scene
 from ..core.fields import FieldFns
-from ..core.pipeline import ASDRConfig, ProbeCache, ProbeReuseConfig
+from ..core.pipeline import ASDRConfig
+from ..framecache.probe import (ProbeCache, ProbeMaps, ProbeReuseConfig,
+                                cached_probe_maps)
+from ..framecache.radiance import RadianceCache, RadianceReuseConfig
 
 
 # jitted batched marches shared across engine instances: keyed by the
@@ -57,6 +67,9 @@ class RenderServeConfig:
     slots: int = 4
     blocks_per_batch: int = 16
     reuse: Optional[ProbeReuseConfig] = ProbeReuseConfig()
+    # warped-radiance reuse is opt-in: None keeps the engine bit-identical
+    # to the single-image pipeline (the identity tests rely on this)
+    radiance: Optional[RadianceReuseConfig] = None
     probe_seed: Optional[int] = None   # None = deterministic midpoint probe
 
 
@@ -71,20 +84,32 @@ class RenderRequest:
 
 
 class _Slot:
-    """A live request: its sorted-block layout and result buffers."""
+    """A live request: its sorted-block layout and result buffers.
+
+    With radiance reuse, ``march_idx`` selects the disoccluded rays the
+    slot actually marches (None = all rays) and ``base_rgb`` holds the
+    warped cached frame the marched rays composite over.
+    """
 
     def __init__(self, req: RenderRequest, rays, order, budgets, pad: int,
-                 probe_cost: int, reused: bool, block_size: int):
+                 maps: ProbeMaps, reused: bool, block_size: int,
+                 march_idx: Optional[np.ndarray] = None,
+                 base_rgb: Optional[np.ndarray] = None,
+                 warp_valid_fraction: float = 0.0):
         self.req = req
-        self.rays = rays                 # padded (origins, dirs)
+        self.rays = rays                 # padded (origins, dirs) of marched rays
         self.order = order
         self.budgets = budgets
         self.pad = pad
-        self.probe_cost = probe_cost
+        self.maps = maps
         self.reused = reused
         self.block_size = block_size
+        self.march_idx = march_idx
+        self.base_rgb = base_rgb
+        self.warp_valid_fraction = warp_valid_fraction
         n_blocks = budgets.shape[0]
         self.rgb = np.zeros((n_blocks, block_size, 3), np.float32)
+        self.acc = np.zeros((n_blocks, block_size), np.float32)
         self.chunks = np.zeros((n_blocks,), np.int64)
         self.pending = n_blocks
         self.t0 = time.time()
@@ -97,8 +122,9 @@ class _Slot:
         for bi in range(self.budgets.shape[0]):
             yield (self, bi, o_s[bi], d_s[bi], int(self.budgets[bi]))
 
-    def deliver(self, bi: int, rgb, chunks):
+    def deliver(self, bi: int, rgb, acc, chunks):
         self.rgb[bi] = rgb
+        self.acc[bi] = acc
         self.chunks[bi] = chunks
         self.pending -= 1
 
@@ -107,14 +133,32 @@ class _Slot:
         H, W = req.cam.height, req.cam.width
         R = H * W
         Rp = self.order.shape[0]
-        inv = np.zeros((Rp,), np.int64)
-        inv[np.asarray(self.order)] = np.arange(Rp)
-        flat = self.rgb.reshape(Rp, 3)[inv]
-        req.image = flat[:R].reshape(H, W, 3)
+        if Rp:
+            inv = np.zeros((Rp,), np.int64)
+            inv[np.asarray(self.order)] = np.arange(Rp)
+            flat = self.rgb.reshape(Rp, 3)[inv]
+            acc_flat = self.acc.reshape(Rp)[inv]
+        else:
+            flat = np.zeros((0, 3), np.float32)
+            acc_flat = np.zeros((0,), np.float32)
+        if self.march_idx is None:
+            img_flat = flat[:R]
+            self.acc_full = acc_flat[:R]
+            rays_marched = R
+        else:
+            img_flat = self.base_rgb.copy()
+            img_flat[self.march_idx] = flat[: self.march_idx.size]
+            self.acc_full = None       # warped frames are never re-cached
+            rays_marched = int(self.march_idx.size)
+        req.image = img_flat.reshape(H, W, 3)
         req.latency_s = time.time() - self.t0
         req.stats = {
-            "probe_samples": self.probe_cost,
+            "probe_samples": self.maps.cost,
             "probe_reused": self.reused,
+            "radiance_reused": self.march_idx is not None,
+            "rays_marched": rays_marched,
+            "rays_total": R,
+            "warp_valid_fraction": self.warp_valid_fraction,
             "samples_processed": int(self.chunks.sum())
             * self.block_size * acfg.chunk,
             # padded ray count, matching render_adaptive's stats — the
@@ -134,11 +178,16 @@ class RenderServingEngine:
         self.probe_caches: Dict[str, ProbeCache] = {
             name: ProbeCache(rcfg.reuse) for name in fields
         } if rcfg.reuse is not None else {}
+        self.radiance_caches: Dict[str, RadianceCache] = {
+            name: RadianceCache(rcfg.radiance) for name in fields
+        } if rcfg.radiance is not None else {}
         # engine counters (across render() calls)
         self.frames = 0
         self.batches = 0
         self.blocks_marched = 0
         self.pad_blocks = 0
+        self.rays_marched = 0
+        self.rays_total = 0
 
     # ---------------------------------------------------------------- march
     def _batched_march(self, scene_id: str):
@@ -162,14 +211,29 @@ class RenderServingEngine:
         cache = self.probe_caches.get(req.scene)
         key = (None if self.rcfg.probe_seed is None
                else jax.random.PRNGKey(self.rcfg.probe_seed + req.rid))
-        counts, cost, opacity, reused = pipeline.probe_phase_cached(
-            fns, acfg, req.cam, cache, key)
+        maps, reused = cached_probe_maps(fns, acfg, req.cam, cache, key)
         o, d = scene.camera_rays(req.cam)
+        counts, opacity = maps.counts, maps.opacity
+
+        rad = self.radiance_caches.get(req.scene)
+        warped = rad.lookup(req.cam, acfg) if rad is not None else None
+        march_idx = base_rgb = None
+        vf = 0.0
+        if warped is not None:
+            march_idx = np.flatnonzero(~warped.valid)
+            base_rgb = np.asarray(warped.rgb)
+            vf = warped.valid_fraction
+            sel = jnp.asarray(march_idx, jnp.int32)
+            o, d = o[sel], d[sel]
+            counts, opacity = counts[sel], opacity[sel]
+
         o, d, counts, opacity, pad = pipeline.pad_rays_to_blocks(
             acfg, o, d, counts, opacity)
         order, budgets = pipeline.block_sort(acfg, counts, opacity)
         return _Slot(req, (o, d), np.asarray(order), np.asarray(budgets),
-                     pad, cost, reused, acfg.block_size)
+                     pad, maps, reused, acfg.block_size,
+                     march_idx=march_idx, base_rgb=base_rgb,
+                     warp_valid_fraction=vf)
 
     # ---------------------------------------------------------------- serve
     def render(self, requests: List[RenderRequest]) -> List[RenderRequest]:
@@ -181,7 +245,9 @@ class RenderServingEngine:
         finalizes any request whose blocks all returned and admits queued
         requests into freed slots — so new requests enter while older
         ones are still mid-flight, and a batch freely mixes blocks from
-        different requests of the same scene.
+        different requests of the same scene.  A radiance-warped frame
+        with no disoccluded rays contributes zero blocks and finalizes on
+        the round it was admitted.
         """
         rcfg = self.rcfg
         B = self.acfg.block_size
@@ -196,43 +262,62 @@ class RenderServingEngine:
                 live.append(slot)
                 pool.extend(slot.emit_blocks(*slot.rays))
 
-            # one batch per round: the largest-budget scene group first,
-            # so batches stay budget-homogeneous across requests
-            pool.sort(key=lambda it: -it[4])
-            scene_id = pool[0][0].req.scene
-            batch = [it for it in pool
-                     if it[0].req.scene == scene_id][:rcfg.blocks_per_batch]
-            taken = set(map(id, batch))
-            pool = [it for it in pool if id(it) not in taken]
+            if pool:
+                # one batch per round: the largest-budget scene group
+                # first, so batches stay budget-homogeneous across requests
+                pool.sort(key=lambda it: -it[4])
+                scene_id = pool[0][0].req.scene
+                batch = [it for it in pool
+                         if it[0].req.scene == scene_id][:rcfg.blocks_per_batch]
+                taken = set(map(id, batch))
+                pool = [it for it in pool if id(it) not in taken]
 
-            march = self._batched_march(scene_id)
-            N = rcfg.blocks_per_batch
-            n_pad = N - len(batch)
-            o_b = jnp.stack([it[2] for it in batch]
-                            + [jnp.zeros((B, 3))] * n_pad)
-            d_b = jnp.stack([it[3] for it in batch]
-                            + [jnp.tile(jnp.asarray([[0., 0., 1.]]),
-                                        (B, 1))] * n_pad)
-            budgets = jnp.asarray(
-                [it[4] for it in batch] + [1] * n_pad, jnp.int32)
-            rgb, _acc, chunks = march(o_b, d_b, budgets)
-            rgb = np.asarray(rgb)
-            chunks = np.asarray(chunks)
-            for i, (slot, bi, *_rest) in enumerate(batch):
-                slot.deliver(bi, rgb[i], chunks[i])
-            self.batches += 1
-            self.blocks_marched += len(batch)
-            self.pad_blocks += n_pad
+                march = self._batched_march(scene_id)
+                N = rcfg.blocks_per_batch
+                n_pad = N - len(batch)
+                o_b = jnp.stack([it[2] for it in batch]
+                                + [jnp.zeros((B, 3))] * n_pad)
+                d_b = jnp.stack([it[3] for it in batch]
+                                + [jnp.tile(jnp.asarray([[0., 0., 1.]]),
+                                            (B, 1))] * n_pad)
+                budgets = jnp.asarray(
+                    [it[4] for it in batch] + [1] * n_pad, jnp.int32)
+                rgb, acc, chunks = march(o_b, d_b, budgets)
+                rgb = np.asarray(rgb)
+                acc = np.asarray(acc)
+                chunks = np.asarray(chunks)
+                for i, (slot, bi, *_rest) in enumerate(batch):
+                    slot.deliver(bi, rgb[i], acc[i], chunks[i])
+                self.batches += 1
+                self.blocks_marched += len(batch)
+                self.pad_blocks += n_pad
 
             still = []
             for slot in live:
                 if slot.pending == 0:
-                    done.append(slot.finalize(self.acfg))
-                    self.frames += 1
+                    done.append(self._finalize(slot))
                 else:
                     still.append(slot)
             live = still
         return done
+
+    def _finalize(self, slot: _Slot) -> RenderRequest:
+        req = slot.finalize(self.acfg)
+        self.frames += 1
+        self.rays_marched += req.stats["rays_marched"]
+        self.rays_total += req.stats["rays_total"]
+        # only fully-rendered frames WITH a pose-aligned depth map feed the
+        # radiance cache (framecache safety invariants: warps never chain,
+        # and a dilation-mode probe reuse returns depth=None because the
+        # entry's depth belongs to the cached pose's pixel grid)
+        rad = self.radiance_caches.get(req.scene)
+        if (rad is not None and slot.march_idx is None
+                and slot.maps.depth is not None):
+            R = req.cam.height * req.cam.width
+            rad.store(req.cam, self.acfg,
+                      jnp.asarray(req.image.reshape(R, 3)),
+                      jnp.asarray(slot.acc_full), slot.maps.depth)
+        return req
 
     # ---------------------------------------------------------------- stats
     def engine_stats(self) -> Dict:
@@ -243,6 +328,10 @@ class RenderServingEngine:
             "pad_block_fraction": (
                 self.pad_blocks / max(self.blocks_marched + self.pad_blocks, 1)
             ),
+            "rays_marched": self.rays_marched,
+            "rays_total": self.rays_total,
+            "rays_marched_fraction": (
+                self.rays_marched / max(self.rays_total, 1)),
         }
         hits = sum(c.hits for c in self.probe_caches.values())
         misses = sum(c.misses for c in self.probe_caches.values())
@@ -251,4 +340,9 @@ class RenderServingEngine:
         out["reused_probe_fraction"] = hits / max(hits + misses, 1)
         out["probe_refreshes"] = sum(
             c.refreshes for c in self.probe_caches.values())
+        r_hits = sum(c.hits for c in self.radiance_caches.values())
+        r_miss = sum(c.misses for c in self.radiance_caches.values())
+        out["radiance_hits"] = r_hits
+        out["radiance_misses"] = r_miss
+        out["reused_radiance_fraction"] = r_hits / max(r_hits + r_miss, 1)
         return out

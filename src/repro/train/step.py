@@ -18,8 +18,6 @@ Memory posture at scale (the reason for each knob):
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp

@@ -16,7 +16,6 @@ import os
 import sys
 import types
 
-import pytest
 
 # Cheap XLA backend codegen for the fast tier (~20% less compile time on
 # CPU; numerics unchanged — the full suite passes either way).  Device

@@ -1,5 +1,4 @@
 """§4.2 adaptive sampling: Eq.(3) metric, count selection, interpolation."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -1,6 +1,4 @@
 """Checkpointing: atomicity, keep-k, restart, elastic reshard."""
-import json
-import shutil
 from pathlib import Path
 
 import jax

@@ -1,5 +1,4 @@
 """Data pipelines: determinism-by-step, structure, replay."""
-import jax.numpy as jnp
 import numpy as np
 
 from repro.data import TokenPipeline

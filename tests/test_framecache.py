@@ -1,0 +1,332 @@
+"""Cross-frame reuse subsystem invariants (repro.framecache).
+
+Covers the three ISSUE-2 test requirements: warped count maps stay
+conservative (exact at zero pose delta), the disocclusion mask is correct
+under translation, and the serving engine remains bit-identical to the
+single-image pipeline with radiance reuse disabled — plus the framecache
+safety invariants (no warp chaining, low-valid miss, refresh bounds).
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import adaptive, fields, pipeline, scene
+from repro import framecache
+from repro.framecache import probe as fc_probe
+from repro.framecache import radiance as fc_radiance
+from repro.framecache import warp as fc_warp
+from repro.serve.render_engine import (RenderRequest, RenderServeConfig,
+                                       RenderServingEngine)
+
+ACFG = pipeline.ASDRConfig(ns_full=48, probe_stride=4, candidates=(8, 16, 32),
+                           block_size=64, chunk=16, sort_by_opacity=False)
+SIZE = 16
+
+
+def cam_at(theta, phi=0.5, size=SIZE):
+    return scene.look_at_camera(size, size, theta=theta, phi=phi)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    fns = fields.analytic_field_fns(scene.make_scene("mic"))
+    maps, _ = fc_probe.cached_probe_maps(fns, ACFG, cam_at(0.7), None)
+    return fns, maps
+
+
+# ------------------------------------------------------------------ warp
+def test_forward_warp_self_is_identity(setup):
+    """Projecting a frame's own lifted points back into it must hit every
+    pixel exactly — the zero-delta shortcut and replay gates rely on it."""
+    _, maps = setup
+    cam = cam_at(0.7)
+    tgt, ok, dist = fc_warp.forward_warp(cam, cam, maps.depth)
+    np.testing.assert_array_equal(np.asarray(tgt), np.arange(SIZE * SIZE))
+    assert np.asarray(ok).all()
+    np.testing.assert_allclose(np.asarray(dist), np.asarray(maps.depth),
+                               rtol=1e-5)
+
+
+def test_warp_image_self_is_identity(setup):
+    fns, maps = setup
+    cam = cam_at(0.7)
+    rgb = jnp.asarray(np.random.default_rng(0).uniform(
+        size=(SIZE * SIZE, 3)).astype(np.float32))
+    acc = jnp.asarray(np.random.default_rng(1).uniform(
+        size=(SIZE * SIZE,)).astype(np.float32))
+    rgb_w, acc_w, depth_w, valid = fc_warp.warp_image(
+        rgb, acc, maps.depth, cam, cam)
+    assert np.asarray(valid).all()
+    np.testing.assert_array_equal(np.asarray(rgb_w), np.asarray(rgb))
+    np.testing.assert_array_equal(np.asarray(acc_w), np.asarray(acc))
+
+
+@settings(max_examples=5, deadline=None)
+@given(st.sampled_from([0.0, 0.01, 0.02, 0.04]))
+def test_warped_counts_conservative(setup, jitter):
+    """Property: a warped count map never under-samples — on valid pixels
+    the reused count >= the fresh-probe count at the new pose (within the
+    one-pixel warp margin); invalid pixels carry ns_full.  At zero pose
+    delta this is exact equality."""
+    fns, maps = setup
+    cam = cam_at(0.7)
+    cam_b = cam_at(0.7 + jitter)
+    warped, valid = fc_warp.warp_count_map(
+        maps.counts, maps.depth, cam, cam_b, ACFG.ns_full, margin=1)
+    fresh, _ = fc_probe.cached_probe_maps(fns, ACFG, cam_b, None)
+    w, f = np.asarray(warped), np.asarray(fresh.counts)
+    v = np.asarray(valid)
+    assert (w[~v] == ACFG.ns_full).all()
+    cons = (w >= f)[v].mean() if v.any() else 1.0
+    assert cons >= 0.98, f"warped counts under-sample: {cons:.3f} at {jitter}"
+    if jitter == 0.0:
+        # self-warp is the identity permutation: with the rounding margin
+        # off, the warped map IS the fresh map, bit-exactly (the cached
+        # path shortcuts the warp entirely in this case — see probe.py)
+        exact, v0 = fc_warp.warp_count_map(
+            maps.counts, maps.depth, cam, cam_b, ACFG.ns_full, margin=0)
+        np.testing.assert_array_equal(np.asarray(exact), f)
+        assert np.asarray(v0).all()
+
+
+def test_disocclusion_mask_on_translation(setup):
+    """A translated pose reveals content the source never saw: the warp
+    must flag it invalid, and the invalid band must sit on the side the
+    new content enters from."""
+    _, maps = setup
+    cam = cam_at(0.7)
+    # slide the eye along the camera's right axis; keep the rotation
+    right = np.asarray(cam.c2w_rot)[:, 0]
+    cam_t = scene.Camera(cam.height, cam.width, cam.focal, cam.c2w_rot,
+                         np.asarray(cam.origin) + 0.12 * right)
+    tgt, ok, dist = fc_warp.forward_warp(cam, cam_t, maps.depth)
+    _src, valid = fc_warp.nearest_source(tgt, ok, dist, SIZE * SIZE)
+    v = np.asarray(valid).reshape(SIZE, SIZE)
+    assert 0.3 < v.mean() < 1.0
+    # content shifts left in the image when the eye moves right: the
+    # revealed (invalid) band is on the right edge
+    assert v[:, : SIZE // 4].mean() > v[:, -SIZE // 4:].mean()
+
+
+def test_warp_zbuffer_prefers_near_surface():
+    """Two source pixels landing on one target pixel: the nearer wins."""
+    cam = cam_at(0.7)
+    n = cam.height * cam.width
+    tgt = jnp.zeros((4,), jnp.int32)          # all collide on pixel 0
+    ok = jnp.asarray([True, True, True, False])
+    dist = jnp.asarray([2.0, 0.5, 1.0, 0.1])  # entry 3 is invalid
+    src, valid = fc_warp.nearest_source(tgt, ok, dist, n)
+    assert bool(valid[0]) and int(src[0]) == 1
+    assert not np.asarray(valid[1:]).any()
+
+
+# ----------------------------------------------------------------- probe
+def test_probe_cache_warp_mode_sustains_beyond_dilate_cap(setup):
+    """A pose delta whose conservative dilation radius overflows the cap
+    (a PR-1 miss) must still be a HIT in warp mode."""
+    fns, _ = setup
+    rcfg = dict(max_angle_deg=6.0, max_translation=0.12, refresh_every=0)
+    cam, cam_far = cam_at(0.7), cam_at(0.79)
+    ang, tr = adaptive.pose_distance(cam, cam_far)
+    radius = adaptive.reuse_dilation_radius(cam, ang, tr, scene.NEAR,
+                                            margin=1.5)
+    assert radius > 8, "test needs a delta past the dilation cap"
+
+    warp_cache = fc_probe.ProbeCache(
+        fc_probe.ProbeReuseConfig(warp=True, **rcfg))
+    dil_cache = fc_probe.ProbeCache(
+        fc_probe.ProbeReuseConfig(warp=False, dilate_cap=8, **rcfg))
+    for cache in (warp_cache, dil_cache):
+        fc_probe.cached_probe_maps(fns, ACFG, cam, cache)
+    _, reused_w = fc_probe.cached_probe_maps(fns, ACFG, cam_far, warp_cache)
+    _, reused_d = fc_probe.cached_probe_maps(fns, ACFG, cam_far, dil_cache)
+    assert reused_w and not reused_d
+
+
+def test_dilation_mode_reuse_frames_are_not_radiance_cacheable(setup):
+    """warp=False reuse at a nonzero delta transfers depth unwarped-able:
+    ProbeMaps.depth must be None and the radiance store must skip the
+    frame (a stale depth map would misregister later radiance warps)."""
+    fns, _ = setup
+    fc = framecache.FrameCache(
+        probe=fc_probe.ProbeCache(fc_probe.ProbeReuseConfig(
+            warp=False, dilate_cap=64, refresh_every=0)),
+        radiance=fc_radiance.RadianceCache(
+            fc_radiance.RadianceReuseConfig(refresh_every=0)))
+    framecache.render_asdr_image_cached(fns, ACFG, cam_at(0.7), fc)
+    assert len(fc.radiance) == 1
+    # 0.75 sits OUTSIDE the radiance radius (2 deg / 0.04) but INSIDE the
+    # probe radius (4 deg / 0.08): probe dilation-reuses, radiance misses
+    maps, reused = fc_probe.cached_probe_maps(fns, ACFG, cam_at(0.75),
+                                              fc.probe)
+    assert reused and maps.depth is None
+    _, st = framecache.render_asdr_image_cached(fns, ACFG, cam_at(0.75), fc)
+    assert st["probe_reused"] and not st["radiance_reused"]
+    assert len(fc.radiance) == 1       # the dilation-reuse frame not stored
+
+
+def test_probe_maps_include_depth(setup):
+    fns, maps = setup
+    d = np.asarray(maps.depth)
+    assert d.shape == (SIZE * SIZE,)
+    assert (d >= scene.NEAR).all() and (d <= scene.FAR + 1e-5).all()
+
+
+# -------------------------------------------------------------- radiance
+def test_radiance_zero_delta_identity(setup):
+    """Replaying a pose returns the cached frame bit-exactly, marching
+    zero rays."""
+    fns, _ = setup
+    fc = framecache.make_frame_cache(
+        radiance_cfg=fc_radiance.RadianceReuseConfig(refresh_every=0))
+    img1, st1 = framecache.render_asdr_image_cached(fns, ACFG, cam_at(0.7), fc)
+    img2, st2 = framecache.render_asdr_image_cached(fns, ACFG, cam_at(0.7), fc)
+    assert not st1["radiance_reused"] and st2["radiance_reused"]
+    assert st2["rays_marched"] == 0 and st1["rays_marched"] == SIZE * SIZE
+    np.testing.assert_array_equal(img1, img2)
+    # and it matches the plain pipeline exactly
+    ref, _ = pipeline.render_asdr_image(fns, ACFG, cam_at(0.7))
+    np.testing.assert_array_equal(img1, np.asarray(ref))
+
+
+def test_radiance_low_valid_fraction_is_miss(setup):
+    """A warp that would leave most of the frame disoccluded must fall
+    back to a full render, not serve a mostly-hole frame."""
+    fns, _ = setup
+    cache = fc_radiance.RadianceCache(fc_radiance.RadianceReuseConfig(
+        max_angle_deg=90.0, max_translation=10.0, min_valid_fraction=0.95))
+    cam = cam_at(0.7)
+    img, stats = framecache.render_asdr_image_cached(
+        fns, ACFG, cam, framecache.FrameCache(radiance=cache))
+    # a big sideways translation reveals a wide band -> valid < 0.95
+    right = np.asarray(cam.c2w_rot)[:, 0]
+    cam_t = scene.Camera(cam.height, cam.width, cam.focal, cam.c2w_rot,
+                         np.asarray(cam.origin) + 0.3 * right)
+    assert cache.lookup(cam_t, ACFG) is None
+    assert cache.low_valid_misses == 1
+
+
+def test_radiance_warped_frames_are_not_recached(setup):
+    """Safety invariant: only fully-rendered frames enter the cache, so
+    warps never chain."""
+    fns, _ = setup
+    fc = framecache.make_frame_cache(
+        radiance_cfg=fc_radiance.RadianceReuseConfig(refresh_every=0))
+    framecache.render_asdr_image_cached(fns, ACFG, cam_at(0.7), fc)
+    assert len(fc.radiance) == 1
+    _, st = framecache.render_asdr_image_cached(fns, ACFG, cam_at(0.7), fc)
+    assert st["radiance_reused"] and len(fc.radiance) == 1
+    entry = fc.radiance._entries[0]
+    assert entry.reuses_since_render == 1
+
+
+def test_radiance_refresh_every_forces_full_render(setup):
+    fns, _ = setup
+    fc = framecache.make_frame_cache(
+        radiance_cfg=fc_radiance.RadianceReuseConfig(refresh_every=2))
+    cam = cam_at(0.7)
+    stats = [framecache.render_asdr_image_cached(fns, ACFG, cam, fc)[1]
+             for _ in range(4)]
+    assert [s["radiance_reused"] for s in stats] == [False, True, True, False]
+    assert fc.radiance.refreshes == 1
+
+
+# ---------------------------------------------------------------- engine
+def test_engine_matches_pipeline_with_radiance_disabled(setup):
+    """ISSUE-2 identity requirement: radiance=None keeps the engine
+    bit-identical to render_asdr_image even while probe reuse is on."""
+    fns, _ = setup
+    flds = {"mic": fns}
+    eng = RenderServingEngine(flds, ACFG, RenderServeConfig(
+        slots=2, blocks_per_batch=4,
+        reuse=fc_probe.ProbeReuseConfig(refresh_every=0), radiance=None))
+    reqs = [RenderRequest(rid=i, scene="mic", cam=cam_at(0.7))
+            for i in range(3)]
+    done = {r.rid: r for r in eng.render(reqs)}
+    ref, _ = pipeline.render_asdr_image(fns, ACFG, cam_at(0.7))
+    for rid in done:
+        assert not done[rid].stats["radiance_reused"]
+        assert done[rid].stats["rays_marched"] == SIZE * SIZE
+        np.testing.assert_array_equal(done[rid].image, np.asarray(ref))
+
+
+def test_engine_radiance_replay_marches_zero_rays(setup):
+    fns, _ = setup
+    flds = {"mic": fns}
+    eng = RenderServingEngine(flds, ACFG, RenderServeConfig(
+        slots=2, blocks_per_batch=4,
+        reuse=fc_probe.ProbeReuseConfig(refresh_every=0),
+        radiance=fc_radiance.RadianceReuseConfig(refresh_every=0)))
+    reqs = [RenderRequest(rid=i, scene="mic", cam=cam_at(0.7 + 0.05 * (i % 2)))
+            for i in range(4)]
+    done = {r.rid: r for r in eng.render(reqs)}
+    for rid in (2, 3):
+        assert done[rid].stats["radiance_reused"]
+        assert done[rid].stats["rays_marched"] == 0
+        np.testing.assert_array_equal(done[rid].image, done[rid - 2].image)
+    st = eng.engine_stats()
+    assert st["rays_marched_fraction"] == 0.5
+    assert st["reused_radiance_fraction"] == 0.5
+
+
+def test_engine_radiance_composites_marched_rays(setup):
+    """A near-pose frame assembled from warp + marched disocclusions must
+    stay close to the fully-rendered frame at that pose."""
+    fns, _ = setup
+    flds = {"mic": fns}
+    eng = RenderServingEngine(flds, ACFG, RenderServeConfig(
+        slots=2, blocks_per_batch=4,
+        reuse=fc_probe.ProbeReuseConfig(refresh_every=0),
+        radiance=fc_radiance.RadianceReuseConfig(
+            max_angle_deg=4.0, max_translation=0.08, refresh_every=0,
+            min_valid_fraction=0.2)))
+    # sequential render() calls: the radiance lookup happens at admission,
+    # so frame 0 must have FINISHED before frame 1 can warp it
+    first = eng.render([RenderRequest(rid=0, scene="mic", cam=cam_at(0.7))])
+    done = {r.rid: r for r in eng.render(
+        [RenderRequest(rid=1, scene="mic", cam=cam_at(0.73))])}
+    done[0] = first[0]
+    assert done[1].stats["radiance_reused"]
+    ref, _ = pipeline.render_asdr_image(fns, ACFG, cam_at(0.73))
+    from repro.core import rendering
+    assert float(rendering.psnr(done[1].image, np.asarray(ref))) > 30.0
+
+
+# ------------------------------------------------------- compat + interp
+def test_pipeline_reexports_are_framecache():
+    assert pipeline.ProbeCache is fc_probe.ProbeCache
+    assert pipeline.ProbeReuseConfig is fc_probe.ProbeReuseConfig
+    assert pipeline.probe_phase_cached is fc_probe.probe_phase_cached
+    with pytest.raises(AttributeError):
+        pipeline.no_such_symbol
+
+
+def test_interpolate_map_is_exact_float_bilinear():
+    # constant maps are fixed points at any scale
+    const = jnp.full((16,), 0.37, jnp.float32)
+    out = adaptive.interpolate_map(const, (4, 4), (12, 12))
+    np.testing.assert_allclose(np.asarray(out), 0.37, rtol=1e-6)
+    # interpolation never leaves the data range, and hits corners exactly
+    rng = np.random.default_rng(3)
+    probe = jnp.asarray(rng.uniform(size=(16,)).astype(np.float32))
+    out = np.asarray(adaptive.interpolate_map(probe, (4, 4), (8, 8)))
+    p = np.asarray(probe).reshape(4, 4)
+    assert out.min() >= p.min() - 1e-6 and out.max() <= p.max() + 1e-6
+    grid = out.reshape(8, 8)
+    assert abs(grid[0, 0] - p[0, 0]) < 1e-6
+    assert abs(grid[-1, -1] - p[-1, -1]) < 1e-6
+
+
+def test_probe_opacity_is_unquantized(setup):
+    """The 50-step int ladder hack is gone: probe opacity is float
+    bilinear of the probe acc, not snapped to multiples of 0.05."""
+    fns, _ = setup
+    _, _, opacity = pipeline.probe_phase(fns, ACFG, cam_at(0.7),
+                                         return_opacity=True)
+    op = np.asarray(opacity)
+    assert op.min() >= 0.0 and op.max() <= 1.0 + 1e-6
+    frac = np.abs(op * 20 - np.round(op * 20))
+    assert (frac > 1e-4).any(), "opacity still quantized to the 0.05 ladder"

@@ -3,7 +3,6 @@ import jax.numpy as jnp
 import pytest
 
 from repro.core import train as T
-from repro.core.model import NGPConfig
 
 
 @pytest.mark.slow

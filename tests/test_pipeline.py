@@ -1,6 +1,5 @@
 """Two-phase ASDR pipeline on the exact analytic field."""
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.core import fields, pipeline, rendering, scene

@@ -1,5 +1,4 @@
 """Locality profiling (paper Figs. 4/8/15/22) behaves as the paper found."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 

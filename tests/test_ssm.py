@@ -1,5 +1,4 @@
 """Mamba-2 SSD: chunked == naive recurrence; decode == prefill handoff."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp

@@ -1,0 +1,128 @@
+#!/usr/bin/env python
+"""Repo lint driver: ruff > pyflakes > built-in fallback.
+
+  python tools/lint.py [paths...]      (default: src tests benchmarks examples)
+
+The container this repo grows in has no lint package baked in, so when
+neither ruff nor pyflakes is importable we fall back to a minimal
+checker that catches the two highest-value classes cheaply:
+
+  * syntax errors (ast.parse), and
+  * module-level unused imports (a name imported but never referenced
+    anywhere in the module — comparisons are on the AST, so names used
+    in annotations, decorators, f-strings or nested scopes all count).
+
+An import line carrying ``# noqa`` is exempt, matching ruff/pyflakes
+convention (re-export modules like package __init__ use it).
+Exit code 1 on any finding; used by ``make lint`` and CI.
+"""
+from __future__ import annotations
+
+import ast
+import subprocess
+import sys
+from pathlib import Path
+
+DEFAULT_PATHS = ["src", "tests", "benchmarks", "examples", "tools"]
+
+
+def _try_external(paths):
+    """Run ruff or pyflakes if available; return exit code or None."""
+    probes = (
+        (["ruff", "check"], ["ruff", "--version"]),
+        ([sys.executable, "-m", "ruff", "check"],
+         [sys.executable, "-m", "ruff", "--version"]),
+        ([sys.executable, "-m", "pyflakes"],
+         [sys.executable, "-c", "import pyflakes"]),
+    )
+    for cmd, probe in probes:
+        try:
+            if subprocess.run(probe, capture_output=True).returncode != 0:
+                continue
+        except FileNotFoundError:
+            continue
+        proc = subprocess.run(cmd + paths, capture_output=True, text=True)
+        sys.stdout.write(proc.stdout)
+        sys.stderr.write(proc.stderr)
+        tool = "ruff" if "ruff" in " ".join(cmd) else "pyflakes"
+        print(f"[lint] checked with {tool}: "
+              f"{'clean' if proc.returncode == 0 else 'FINDINGS'}")
+        return proc.returncode
+    return None
+
+
+def _imported_names(node):
+    """(alias, lineno) pairs bound by an import statement."""
+    out = []
+    for alias in node.names:
+        if alias.name == "*":
+            continue
+        bound = alias.asname or alias.name.split(".")[0]
+        out.append((bound, node.lineno))
+    return out
+
+
+def check_file(path: Path):
+    src = path.read_text()
+    try:
+        tree = ast.parse(src, filename=str(path))
+    except SyntaxError as e:
+        return [f"{path}:{e.lineno}: syntax error: {e.msg}"]
+    if path.name == "__init__.py":
+        return []   # package surface: imports ARE the point (ruff F401 rule)
+    lines = src.splitlines()
+    imports = []   # (name, lineno)
+    for node in tree.body:
+        if isinstance(node, (ast.Import, ast.ImportFrom)):
+            if isinstance(node, ast.ImportFrom) and node.module == "__future__":
+                continue
+            line = lines[node.lineno - 1] if node.lineno <= len(lines) else ""
+            if "# noqa" in line:
+                continue
+            imports.append(_imported_names(node))
+    if not imports:
+        return []
+    used = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Name):
+            used.add(node.id)
+        elif isinstance(node, ast.Attribute):
+            pass  # the root Name of a dotted use is a Name node anyway
+    # __all__ strings count as uses (explicit re-export)
+    for node in tree.body:
+        if (isinstance(node, ast.Assign) and
+                any(isinstance(t, ast.Name) and t.id == "__all__"
+                    for t in node.targets)):
+            for c in ast.walk(node.value):
+                if isinstance(c, ast.Constant) and isinstance(c.value, str):
+                    used.add(c.value)
+    problems = []
+    for group in imports:
+        for name, lineno in group:
+            if name not in used:
+                problems.append(
+                    f"{path}:{lineno}: '{name}' imported but unused")
+    return problems
+
+
+def main(argv):
+    paths = argv or DEFAULT_PATHS
+    code = _try_external(paths)
+    if code is not None:
+        return code
+    files = []
+    for p in paths:
+        p = Path(p)
+        files.extend(sorted(p.rglob("*.py")) if p.is_dir() else [p])
+    problems = []
+    for f in files:
+        problems.extend(check_file(f))
+    for line in problems:
+        print(line)
+    print(f"[lint] fallback checker: {len(files)} files, "
+          f"{len(problems)} findings")
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))
