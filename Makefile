@@ -5,7 +5,8 @@ PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test test-full lint bench-serve bench-serve-sweep \
-        bench-serve-latency dryrun-serve
+        bench-serve-latency bench-scenecache bench-scenecache-budgets \
+        dryrun-serve
 
 test:
 	$(PY) -m pytest -x -q
@@ -26,6 +27,12 @@ bench-serve-sweep:
 
 bench-serve-latency:
 	$(PY) benchmarks/render_serve.py --latency
+
+bench-scenecache:
+	$(PY) benchmarks/scene_cache.py
+
+bench-scenecache-budgets:
+	$(PY) benchmarks/scene_cache.py --budgets
 
 dryrun-serve:
 	$(PY) -m repro.launch.render_serve --dryrun

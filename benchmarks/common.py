@@ -20,11 +20,47 @@ from repro.core import train as train_lib
 CACHE = Path(__file__).resolve().parent / "_cache"
 CACHE.mkdir(exist_ok=True)
 
+OUT_DIR = Path(__file__).resolve().parent.parent / "out" / "bench"
+
 SCENES = ("lego", "hotdog", "mic")
 EVAL_CAM = dict(theta=0.9, phi=0.55)
 IMG_HW = (64, 64)
 NS_FULL = 96
 CANDIDATES = (12, 24, 48)
+
+
+def emit_rows(stem: str, rows):
+    """Append rows to out/bench/<stem>.json (a flat list across runs).
+
+    Shared by the serving benchmarks (render_serve.py, scene_cache.py) so
+    the JSON-append semantics — tolerate a corrupt file, extend, rewrite —
+    stay identical everywhere.
+    """
+    import json
+    OUT_DIR.mkdir(parents=True, exist_ok=True)
+    path = OUT_DIR / f"{stem}.json"
+    existing = []
+    if path.exists():
+        try:
+            existing = json.loads(path.read_text())
+        except json.JSONDecodeError:
+            existing = []
+    existing.extend(rows)
+    path.write_text(json.dumps(existing, indent=1))
+    print(f"  [json] {len(rows)} rows -> {path} ({len(existing)} total)")
+
+
+def serve_bench_acfg(block: int = 128) -> "pipeline.ASDRConfig":
+    """The serving benchmarks' shared render config.
+
+    sort_by_opacity off: argsort(counts) is stable, so identical count
+    maps give bit-identical block layouts — zero-distance reuse frames
+    then match the always-probe baseline exactly (both the replay and
+    the scene-cache benchmarks gate on this).
+    """
+    return pipeline.ASDRConfig(
+        ns_full=96, probe_stride=4, candidates=(12, 24, 48),
+        block_size=block, chunk=16, sort_by_opacity=False)
 
 
 def trained_model(scene_name: str, quick: bool = False):

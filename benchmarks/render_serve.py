@@ -34,7 +34,6 @@ structure.
 from __future__ import annotations
 
 import argparse
-import json
 import sys
 import time
 from pathlib import Path
@@ -43,27 +42,15 @@ sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 
 import numpy as np
 
-from repro.core import adaptive, fields, pipeline, rendering, scene
+from common import emit_rows as _emit_rows, serve_bench_acfg
+from repro.core import adaptive, fields, rendering, scene
 from repro.framecache import ProbeReuseConfig, RadianceReuseConfig
 from repro.serve.render_engine import (RenderRequest, RenderServeConfig,
                                        RenderServingEngine)
 
-OUT_DIR = Path(__file__).resolve().parent.parent / "out" / "bench"
-
 
 def emit_rows(name: str, rows):
-    """Append rows to the mode's JSON file (a flat list across runs)."""
-    OUT_DIR.mkdir(parents=True, exist_ok=True)
-    path = OUT_DIR / f"render_serve_{name}.json"
-    existing = []
-    if path.exists():
-        try:
-            existing = json.loads(path.read_text())
-        except json.JSONDecodeError:
-            existing = []
-    existing.extend(rows)
-    path.write_text(json.dumps(existing, indent=1))
-    print(f"  [json] {len(rows)} rows -> {path} ({len(existing)} total)")
+    _emit_rows(f"render_serve_{name}", rows)
 
 
 def trajectory_requests(scene_name, poses, laps, size, dtheta, jitter=0.0):
@@ -106,13 +93,7 @@ def psnr_per_frame(refs, done, reqs):
             for rq in reqs]
 
 
-def make_acfg(size_block=128):
-    # sort_by_opacity off: argsort(counts) is stable, so identical count
-    # maps give bit-identical block layouts — zero-distance reuse frames
-    # then match the always-probe baseline exactly
-    return pipeline.ASDRConfig(
-        ns_full=96, probe_stride=4, candidates=(12, 24, 48),
-        block_size=size_block, chunk=16, sort_by_opacity=False)
+make_acfg = serve_bench_acfg
 
 
 # ---------------------------------------------------------------- replay

@@ -1,0 +1,202 @@
+"""Scene-space block reuse benchmark: multi-user sweep + byte-budget sweep.
+
+  PYTHONPATH=src python benchmarks/scene_cache.py            # client sweep
+  PYTHONPATH=src python benchmarks/scene_cache.py --budgets  # budget sweep
+
+Default (clients) mode — the workload the scenecache tier exists for:
+``--clients`` concurrent users of ONE scene request the same pose set
+(spectators of a shared scene: a venue, a product page, a game replay),
+interleaved so their frames are live in the engine together.  Per client
+count, an engine with the shared block store runs against a no-cache
+engine on the identical request stream.  Gates:
+
+  * cross-client sharing: block hit rate > 0 for clients >= 2 (one
+    client's marches satisfy the others' identical blocks);
+  * bounded memory: resident bytes <= the configured byte budget after
+    every run;
+  * fidelity: per-frame |PSNR delta| vs the no-cache engine <= 0.1 dB
+    (hits replay outputs of an identical march, so the delta is 0.0).
+
+--budgets — byte-budget sweep at a fixed client count: hit rate, resident
+MB, and evictions vs budget, showing the coverage-aware LRU degrading
+gradually (smaller budgets trade hit rate for memory, never correctness).
+
+All modes append JSON rows to out/bench/scene_cache_<mode>.json.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+import numpy as np
+
+from common import emit_rows as _emit_rows, serve_bench_acfg as make_acfg
+from repro.core import fields, rendering, scene
+from repro.scenecache import SceneCacheConfig
+from repro.serve.render_engine import (RenderRequest, RenderServeConfig,
+                                       RenderServingEngine)
+
+
+def emit_rows(name: str, rows):
+    _emit_rows(f"scene_cache_{name}", rows)
+
+
+def multi_client_requests(scene_name, clients, poses, size, dtheta):
+    """Interleaved streams: every client requests the same pose set."""
+    reqs = []
+    for i in range(poses):
+        for c in range(clients):
+            reqs.append(RenderRequest(
+                rid=c * poses + i, scene=scene_name,
+                cam=scene.look_at_camera(size, size,
+                                         theta=0.55 + dtheta * i, phi=0.5)))
+    return reqs
+
+
+def frame_psnr_delta(done_c, done_p, refs):
+    """max per-frame |PSNR delta| of cached vs plain against references."""
+    deltas = []
+    for rid, rp in done_p.items():
+        p_c = float(rendering.psnr(done_c[rid].image, refs[rid]))
+        p_p = float(rendering.psnr(rp.image, refs[rid]))
+        deltas.append(abs(p_c - p_p))
+    return max(deltas)
+
+
+def run_clients(args):
+    field = scene.make_scene(args.scene)
+    flds = {args.scene: fields.analytic_field_fns(field)}
+    acfg = make_acfg()
+    budget = int(args.budget_mb * (1 << 20))
+    rows, all_ok = [], True
+    # exact analytic reference per pose — the pose set is shared by every
+    # client AND every clients-count iteration, so render each pose once
+    pose_ref = {}
+    for rq in multi_client_requests(args.scene, 1, args.poses, args.size,
+                                    args.dtheta):
+        o, d = scene.camera_rays(rq.cam)
+        ref, _ = scene.render_reference(field, o, d)
+        pose_ref[rq.rid] = np.asarray(ref).reshape(args.size, args.size, 3)
+    print(f"== scene-cache client sweep: {args.poses} shared poses, "
+          f"{args.size}x{args.size}, scene={args.scene}, "
+          f"budget {args.budget_mb:.1f} MB ==")
+    for clients in (1, 2, 4):
+        def reqs_fn(c=clients):
+            return multi_client_requests(args.scene, c, args.poses,
+                                         args.size, args.dtheta)
+        cfg_kw = dict(slots=4, blocks_per_batch=16, reuse=None, radiance=None)
+        # warm-up compile outside the timed runs
+        RenderServingEngine(flds, acfg, RenderServeConfig(**cfg_kw)).render(
+            [reqs_fn()[0]])
+        eng_c = RenderServingEngine(flds, acfg, RenderServeConfig(
+            scenecache=SceneCacheConfig(byte_budget=budget), **cfg_kw))
+        t0 = time.time()
+        done_c = {r.rid: r for r in eng_c.render(reqs_fn())}
+        dt_c = time.time() - t0
+        eng_p = RenderServingEngine(flds, acfg, RenderServeConfig(**cfg_kw))
+        t0 = time.time()
+        done_p = {r.rid: r for r in eng_p.render(reqs_fn())}
+        dt_p = time.time() - t0
+
+        # per-frame PSNR vs the exact analytic reference for both engines;
+        # the gate is on the DELTA (cached hits replay identical marches,
+        # so this is 0.0 unless the cache corrupts a block)
+        refs = {rq.rid: pose_ref[rq.rid % args.poses] for rq in reqs_fn()}
+        max_delta = frame_psnr_delta(done_c, done_p, refs)
+
+        st = eng_c.engine_stats()
+        sc = st["scenecache"]
+        hit_rate = st["scene_block_hit_rate"]
+        resident_ok = sc["resident_bytes"] <= sc["byte_budget"]
+        ok = (resident_ok and max_delta <= 0.1
+              and (hit_rate > 0.0 if clients >= 2 else True))
+        all_ok = all_ok and ok
+        rows.append({
+            "bench": "scene_cache_clients", "scene": args.scene,
+            "size": args.size, "poses": args.poses, "clients": clients,
+            "byte_budget": budget,
+            "block_hit_rate": hit_rate,
+            "blocks_marched": st["blocks_marched"],
+            "blocks_hit": st["scene_block_hits"],
+            "resident_mb": sc["resident_bytes"] / (1 << 20),
+            "evictions": sc["evictions"],
+            "fps_cached": len(done_c) / dt_c,
+            "fps_plain": len(done_p) / dt_p,
+            "max_abs_psnr_delta": max_delta, "ok": ok,
+        })
+        print(f"  clients {clients}: hit rate {hit_rate:.3f} "
+              f"({st['scene_block_hits']} hits / "
+              f"{st['blocks_marched']} marched)  resident "
+              f"{sc['resident_bytes'] / (1 << 20):.2f} MB  "
+              f"delta {max_delta:.4f} dB  "
+              f"fps {len(done_c) / dt_c:.2f} vs {len(done_p) / dt_p:.2f}  "
+              f"{'OK' if ok else 'FAIL'}")
+    print(f"  acceptance (cross-client hits > 0, resident <= budget, "
+          f"delta <= 0.1 dB): {'OK' if all_ok else 'FAIL'}")
+    emit_rows("clients", rows)
+    return all_ok
+
+
+def run_budgets(args):
+    flds = {args.scene: fields.analytic_field_fns(scene.make_scene(args.scene))}
+    acfg = make_acfg()
+    clients = 4
+    rows, all_ok = [], True
+    budgets = [int(m * (1 << 20)) for m in (0.125, 0.5, 2.0, 8.0)]
+    print(f"== scene-cache budget sweep: {clients} clients x {args.poses} "
+          f"poses, {args.size}x{args.size} ==")
+    cfg_kw = dict(slots=4, blocks_per_batch=16, reuse=None, radiance=None)
+    RenderServingEngine(flds, acfg, RenderServeConfig(**cfg_kw)).render(
+        [multi_client_requests(args.scene, 1, 1, args.size, args.dtheta)[0]])
+    for budget in budgets:
+        eng = RenderServingEngine(flds, acfg, RenderServeConfig(
+            scenecache=SceneCacheConfig(byte_budget=budget), **cfg_kw))
+        t0 = time.time()
+        done = eng.render(multi_client_requests(
+            args.scene, clients, args.poses, args.size, args.dtheta))
+        dt = time.time() - t0
+        st = eng.engine_stats()
+        sc = st["scenecache"]
+        ok = sc["resident_bytes"] <= sc["byte_budget"]
+        all_ok = all_ok and ok
+        rows.append({
+            "bench": "scene_cache_budgets", "scene": args.scene,
+            "size": args.size, "poses": args.poses, "clients": clients,
+            "byte_budget": budget,
+            "block_hit_rate": st["scene_block_hit_rate"],
+            "blocks_marched": st["blocks_marched"],
+            "resident_mb": sc["resident_bytes"] / (1 << 20),
+            "evictions": sc["evictions"],
+            "fps": len(done) / dt, "ok": ok,
+        })
+        print(f"  budget {budget / (1 << 20):6.3f} MB: hit rate "
+              f"{st['scene_block_hit_rate']:.3f}  resident "
+              f"{sc['resident_bytes'] / (1 << 20):6.3f} MB  "
+              f"evictions {sc['evictions']:4d}  fps {len(done) / dt:.2f}")
+    print(f"  acceptance (resident <= budget at every point): "
+          f"{'OK' if all_ok else 'FAIL'}")
+    emit_rows("budgets", rows)
+    return all_ok
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scene", default="mic")
+    ap.add_argument("--poses", type=int, default=6,
+                    help="shared poses per client")
+    ap.add_argument("--size", type=int, default=48)
+    ap.add_argument("--dtheta", type=float, default=0.04)
+    ap.add_argument("--budget-mb", type=float, default=8.0)
+    ap.add_argument("--budgets", action="store_true",
+                    help="byte-budget sweep instead of the client sweep")
+    args = ap.parse_args()
+    ok = run_budgets(args) if args.budgets else run_clients(args)
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

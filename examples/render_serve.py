@@ -23,6 +23,7 @@ import numpy as np
 
 from repro.core import fields, pipeline, scene
 from repro.framecache import ProbeReuseConfig, RadianceReuseConfig
+from repro.scenecache import SceneCacheConfig
 from repro.serve.render_engine import (RenderRequest, RenderServeConfig,
                                        RenderServingEngine)
 
@@ -41,6 +42,9 @@ def main():
                     help="frames per user trajectory")
     ap.add_argument("--size", type=int, default=64)
     ap.add_argument("--scenes", nargs=2, default=("hotdog", "mic"))
+    ap.add_argument("--spectators", type=int, default=0,
+                    help="extra users replaying user 0's exact poses — "
+                         "their blocks hit the shared scene-space store")
     args = ap.parse_args()
 
     acfg = pipeline.ASDRConfig(
@@ -53,9 +57,12 @@ def main():
         reuse=ProbeReuseConfig(max_angle_deg=3.0, max_translation=0.05,
                                refresh_every=6),
         radiance=RadianceReuseConfig(max_angle_deg=1.5, max_translation=0.03,
-                                     refresh_every=6)))
+                                     refresh_every=6),
+        scenecache=(SceneCacheConfig(byte_budget=16 << 20)
+                    if args.spectators else None)))
 
-    # two users, interleaved frame requests along their own orbits
+    # two users, interleaved frame requests along their own orbits; any
+    # --spectators ride user 0's poses and share its blocks scene-side
     reqs = []
     for f in range(args.frames):
         for u, sc in enumerate(args.scenes):
@@ -64,6 +71,11 @@ def main():
                 cam=scene.look_at_camera(
                     args.size, args.size,
                     theta=0.6 + 0.008 * f + 0.3 * u, phi=0.5)))
+        for s in range(args.spectators):
+            reqs.append(RenderRequest(
+                rid=len(reqs), scene=args.scenes[0],
+                cam=scene.look_at_camera(
+                    args.size, args.size, theta=0.6 + 0.008 * f, phi=0.5)))
 
     t0 = time.time()
     done = eng.render(reqs)
@@ -94,6 +106,12 @@ def main():
           f"rays marched {100 * st['rays_marched_fraction']:.1f}% of total")
     print(f"  {st['batches']} pooled batches, pad fraction "
           f"{st['pad_block_fraction']:.2f}")
+    if eng.scenecache is not None:
+        sc = st["scenecache"]
+        print(f"  scene-block hit rate {st['scene_block_hit_rate']:.2f} "
+              f"({st['scene_block_hits']} hits), resident "
+              f"{sc['resident_bytes'] / (1 << 20):.2f} MB, "
+              f"{sc['evictions']} evictions")
     print(f"  wrote {sum(per_scene.values())} frames to {out}/")
 
 

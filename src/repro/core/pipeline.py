@@ -79,7 +79,10 @@ def _march_block(fns: FieldFns, acfg: ASDRConfig, origins, dirs, budget):
     """March one block of rays with a traced per-block sample budget.
 
     origins/dirs: (B, 3); budget: traced int32 scalar.
-    Returns (rgb (B,3), acc (B,), chunks_done scalar).
+    Returns (rgb (B,3), acc (B,), depth (B,), chunks_done scalar) — depth
+    is the per-ray termination depth ``E[t] + (1 - acc) * FAR``, the
+    full-resolution replacement for the probe's stride-d proxy depth
+    (framecache warps register against it at depth edges).
     """
     B = origins.shape[0]
     C = acfg.chunk
@@ -87,12 +90,12 @@ def _march_block(fns: FieldFns, acfg: ASDRConfig, origins, dirs, budget):
     n_chunks = (budget + C - 1) // C
 
     def cond(state):
-        ci, log_t, _, _ = state
+        ci, log_t, _, _, _ = state
         alive = jnp.any(log_t > LOG_EPS_T) if acfg.early_termination else True
         return jnp.logical_and(ci < n_chunks, alive)
 
     def body(state):
-        ci, log_t, rgb, acc = state
+        ci, log_t, rgb, acc, dep = state
         idx = ci * C + jnp.arange(C)
         valid = idx < budget
         ts = scene.NEAR + (idx.astype(jnp.float32) + 0.5) * delta_t
@@ -120,19 +123,24 @@ def _march_block(fns: FieldFns, acfg: ASDRConfig, origins, dirs, budget):
         w = trans * alphas
         rgb = rgb + jnp.sum(w[..., None] * colors, axis=1)
         acc = acc + jnp.sum(w, axis=-1)
+        dep = dep + jnp.sum(w * ts[None, :], axis=-1)
         log_t = log_t + jnp.sum(log_steps, axis=-1)
-        return ci + 1, log_t, rgb, acc
+        return ci + 1, log_t, rgb, acc, dep
 
     state = (
         jnp.asarray(0, jnp.int32),
         jnp.zeros((B,)),
         jnp.zeros((B, 3)),
         jnp.zeros((B,)),
+        jnp.zeros((B,)),
     )
-    ci, _, rgb, acc = jax.lax.while_loop(cond, body, state)
+    ci, _, rgb, acc, dep = jax.lax.while_loop(cond, body, state)
+    # an early-terminated ray leaves a negligible transmittance tail; the
+    # (1 - acc) * FAR term pins true background rays to the far plane
+    depth = dep + (1.0 - acc) * scene.FAR
     if acfg.white_background:
         rgb = rgb + (1.0 - acc[:, None])
-    return rgb, acc, ci
+    return rgb, acc, depth, ci
 
 
 def block_sort(acfg: ASDRConfig, counts, opacity=None):
@@ -194,7 +202,7 @@ def render_adaptive(fns: FieldFns, acfg: ASDRConfig, origins, dirs, counts,
     d_s = dirs[order].reshape(-1, B, 3)
 
     march = partial(_march_block, fns, acfg)
-    rgb_s, acc_s, chunks = jax.lax.map(
+    rgb_s, acc_s, depth_s, chunks = jax.lax.map(
         lambda args: march(*args), (o_s, d_s, budgets)
     )
     # unsort
@@ -206,6 +214,9 @@ def render_adaptive(fns: FieldFns, acfg: ASDRConfig, origins, dirs, counts,
         "baseline_samples": R * acfg.ns_full,
         "chunks_per_block": chunks,
         "budgets": budgets,
+        # full-resolution termination depth (ROADMAP item): replaces the
+        # probe's stride-d proxy depth wherever a finished frame is cached
+        "term_depth": depth_s.reshape(R)[inv],
     }
     return rgb, acc, stats
 
@@ -245,11 +256,8 @@ def probe_phase(fns: FieldFns, acfg: ASDRConfig, cam, probe_key=None,
     opacity = adaptive.interpolate_map(aux["acc"], probe_hw, (H, W))
     if not return_depth:
         return counts, probe_cost, opacity
-    # expected termination distance E[t] + (1 - acc) * FAR: rays that hit
-    # nothing park their proxy depth at the far plane, so warped background
-    # stays background
-    t_exp = (jnp.sum(aux["weights"] * aux["ts"], axis=-1)
-             + (1.0 - aux["acc"]) * scene.FAR)
+    t_exp = rendering.expected_termination_depth(
+        aux["weights"], aux["ts"], aux["acc"], scene.FAR)
     depth = adaptive.interpolate_map(t_exp, probe_hw, (H, W))
     return counts, probe_cost, opacity, depth
 

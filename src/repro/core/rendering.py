@@ -56,6 +56,20 @@ def composite(
     return rgb, acc, weights
 
 
+def expected_termination_depth(
+    weights: jnp.ndarray, ts: jnp.ndarray, acc: jnp.ndarray, far: float
+) -> jnp.ndarray:
+    """Per-ray proxy termination depth ``E[t] + (1 - acc) * far``.
+
+    weights/ts: (..., S), acc: (...,).  Rays that hit nothing park their
+    depth at the far plane, so warped background stays background.  Shared
+    by the Phase-I probe (stride-d resolution) and the Phase-II march
+    (full per-ray resolution) — the framecache warp primitive reprojects
+    per-pixel maps with whichever is available, preferring the march's.
+    """
+    return jnp.sum(weights * ts, axis=-1) + (1.0 - acc) * far
+
+
 def early_termination_counts(alphas: jnp.ndarray) -> jnp.ndarray:
     """Number of samples each ray *needs* before T drops below threshold.
 

@@ -22,12 +22,29 @@ class PoseKeyedCache:
         self.rcfg = rcfg
         self._entries: list = []
         self._clock = 0
+        self._seq = 0
         self.hits = 0
         self.misses = 0
         self.refreshes = 0
 
     def __len__(self):
         return len(self._entries)
+
+    def resident_bytes(self) -> int:
+        """Total bytes held by cached maps/frames.
+
+        Feeds the shared-budget accounting that covers all reuse tiers
+        (the scene-space block tier bounds itself in bytes; these pose
+        tiers report theirs so an operator can see the whole footprint).
+        """
+        return sum(self._entry_nbytes(e) for e in self._entries)
+
+    @staticmethod
+    def _arrays_nbytes(*arrays) -> int:
+        return sum(getattr(a, "nbytes", 0) for a in arrays if a is not None)
+
+    def _entry_nbytes(self, entry) -> int:  # pragma: no cover - interface
+        raise NotImplementedError
 
     @property
     def reused_fraction(self) -> float:
@@ -64,7 +81,17 @@ class PoseKeyedCache:
         return best
 
     def _append_with_eviction(self, entry):
-        """Add an entry, evicting the least-recently-used past capacity."""
+        """Add an entry, evicting the least-recently-used past capacity.
+
+        Totally ordered: exact recency ties break by insertion sequence
+        (oldest first), never by list position — rebased entries keep
+        their slot in ``_entries``, so position is NOT insertion order
+        and must not decide evictions.
+        """
+        entry.seq = self._seq
+        self._seq += 1
         if len(self._entries) >= self.rcfg.max_entries:
-            self._entries.remove(min(self._entries, key=lambda e: e.last_used))
+            self._entries.remove(
+                min(self._entries,
+                    key=lambda e: (e.last_used, getattr(e, "seq", 0))))
         self._entries.append(entry)

@@ -71,9 +71,10 @@ class ProbeMaps:
     cost is the probe's sample count — 0 when the maps were reused.
     depth is None on a dilation-mode (warp=False) reuse at nonzero pose
     delta: the entry's depth belongs to the CACHED pose's pixel grid and
-    transferring it unwarped would misregister a later radiance warp, so
-    consumers that need per-pixel depth (the radiance store) must skip
-    such frames."""
+    transferring it unwarped would misregister anything built on it.
+    (The radiance store no longer consumes this map at all — finished
+    frames are cached under the Phase-II march's own termination depth,
+    which is pose-aligned by construction.)"""
     counts: jnp.ndarray
     opacity: jnp.ndarray
     depth: jnp.ndarray | None
@@ -87,6 +88,7 @@ class _ProbeEntry:
     maps: ProbeMaps
     reuses_since_probe: int = 0
     last_used: int = 0
+    seq: int = 0              # insertion order — eviction tie-break
 
 
 class ProbeCache(PoseKeyedCache):
@@ -99,6 +101,10 @@ class ProbeCache(PoseKeyedCache):
 
     def __init__(self, rcfg: ProbeReuseConfig | None = None):
         super().__init__(rcfg or ProbeReuseConfig())
+
+    def _entry_nbytes(self, entry) -> int:
+        m = entry.maps
+        return self._arrays_nbytes(m.counts, m.opacity, m.depth)
 
     def _store(self, cam, acfg, maps: ProbeMaps, replacing=None):
         clock = self._tick()

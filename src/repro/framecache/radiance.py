@@ -1,7 +1,9 @@
 """Cross-frame reuse of finished Phase-II radiance — the big frame lever.
 
-A completed frame (rgb, acc) plus its Phase-I proxy depth map is cached
-keyed by (scene, pose, acfg).  A later request within the radiance-reuse
+A completed frame (rgb, acc) plus its per-ray march termination depth
+(full resolution, from the Phase-II while_loop — sharper at depth edges
+than the probe's stride-d proxy it replaced) is cached keyed by
+(scene, pose, acfg).  A later request within the radiance-reuse
 radius warps the cached frame to its own pose (warp.warp_image, z-buffered
 nearest-surface) and receives a per-pixel validity mask: VALID pixels take
 the warped radiance directly and skip Phase II entirely; only the INVALID
@@ -53,10 +55,13 @@ class RadianceReuseConfig:
 
 @dataclasses.dataclass
 class WarpedRadiance:
-    """A cached frame reprojected to the requesting pose."""
+    """A cached frame reprojected to the requesting pose.
+
+    Deliberately rgb + validity only: warped frames are never re-cached
+    (invariant above), so consumers have no use for warped acc/depth —
+    they composite marched rays over ``rgb`` where ``valid`` is False.
+    """
     rgb: jnp.ndarray       # (H*W, 3)
-    acc: jnp.ndarray       # (H*W,)
-    depth: jnp.ndarray     # (H*W,)
     valid: np.ndarray      # (H*W,) bool, host-side — drives ray selection
     valid_fraction: float
 
@@ -70,6 +75,7 @@ class _RadianceEntry:
     depth: jnp.ndarray
     reuses_since_render: int = 0
     last_used: int = 0
+    seq: int = 0              # insertion order — eviction tie-break
 
 
 class RadianceCache(PoseKeyedCache):
@@ -81,6 +87,9 @@ class RadianceCache(PoseKeyedCache):
     def __init__(self, rcfg: RadianceReuseConfig | None = None):
         super().__init__(rcfg or RadianceReuseConfig())
         self.low_valid_misses = 0
+
+    def _entry_nbytes(self, entry) -> int:
+        return self._arrays_nbytes(entry.rgb, entry.acc, entry.depth)
 
     # ------------------------------------------------------------- lookup
     def lookup(self, cam, acfg: ASDRConfig) -> WarpedRadiance | None:
@@ -102,11 +111,11 @@ class RadianceCache(PoseKeyedCache):
         shift = adaptive.reuse_dilation_radius(cam, ang, tr, scene.NEAR,
                                                margin=1.0)
         if shift == 0:
-            rgb, acc, depth = entry.rgb, entry.acc, entry.depth
+            rgb = entry.rgb
             valid = np.ones((cam.height * cam.width,), bool)
             vf = 1.0
         else:
-            rgb, acc, depth, valid_j = warp_lib.warp_image(
+            rgb, _acc, _depth, valid_j = warp_lib.warp_image(
                 entry.rgb, entry.acc, entry.depth, entry.cam, cam)
             valid = np.asarray(valid_j)
             vf = float(valid.mean())
@@ -117,7 +126,7 @@ class RadianceCache(PoseKeyedCache):
         self.hits += 1
         entry.reuses_since_render += 1
         entry.last_used = self._tick()
-        return WarpedRadiance(rgb, acc, depth, valid, vf)
+        return WarpedRadiance(rgb, valid, vf)
 
     # -------------------------------------------------------------- store
     def store(self, cam, acfg: ASDRConfig, rgb, acc, depth):

@@ -19,25 +19,54 @@ import numpy as np
 from ..core import pipeline, scene
 from ..core.fields import FieldFns
 from ..core.pipeline import ASDRConfig
+from ..scenecache import SceneBlockCache
+from ..scenecache.render import render_adaptive_cached
 from .probe import ProbeCache, ProbeReuseConfig, cached_probe_maps
 from .radiance import RadianceCache, RadianceReuseConfig
 
 
 @dataclasses.dataclass
 class FrameCache:
-    """The per-scene reuse state: probe maps + finished radiance."""
+    """The per-scene reuse state: probe maps + finished radiance.
+
+    ``scene`` optionally plugs in the scene-space block tier
+    (repro.scenecache) — unlike the two pose tiers it may be SHARED
+    between FrameCaches of different scenes/users (block keys carry the
+    scene id); ``scene_id`` names this scene inside that shared store.
+    """
     probe: Optional[ProbeCache] = None
     radiance: Optional[RadianceCache] = None
+    scene: Optional[SceneBlockCache] = None
+    scene_id: str = "scene"
 
 
 def make_frame_cache(
     probe_cfg: ProbeReuseConfig | None = ProbeReuseConfig(),
     radiance_cfg: RadianceReuseConfig | None = RadianceReuseConfig(),
+    scene_cache: SceneBlockCache | None = None,
+    scene_id: str = "scene",
 ) -> FrameCache:
+    """Build the per-scene reuse state.
+
+    ``scene_cache`` takes an already-constructed ``SceneBlockCache`` (not
+    a config): the scene tier's whole point is that one store is shared
+    across users/scenes, so the caller owns its lifetime.  Sharing makes
+    ``scene_id`` load-bearing — block keys are pure ray geometry plus the
+    id, so two scenes under one id would silently serve each other's
+    radiance.  An explicit id is therefore required with a shared store.
+    """
+    if scene_cache is not None and scene_id == "scene":
+        raise ValueError(
+            "make_frame_cache(scene_cache=...) requires an explicit "
+            "scene_id: block keys disambiguate scenes ONLY by this id, so "
+            "two scenes sharing a store under the default would serve "
+            "each other's cached blocks")
     return FrameCache(
         probe=ProbeCache(probe_cfg) if probe_cfg is not None else None,
         radiance=(RadianceCache(radiance_cfg)
                   if radiance_cfg is not None else None),
+        scene=scene_cache,
+        scene_id=scene_id,
     )
 
 
@@ -48,7 +77,7 @@ def render_asdr_image_cached(fns: FieldFns, acfg: ASDRConfig, cam,
     Returns (image (H,W,3), stats).  With fc=None this is exactly
     ``pipeline.render_asdr_image`` (modulo the always-on opacity sort key).
     Stats gain: probe_reused, radiance_reused, rays_marched, rays_total,
-    warp_valid_fraction.
+    warp_valid_fraction, scene_block_hits, scene_block_misses.
     """
     H, W = cam.height, cam.width
     R = H * W
@@ -62,26 +91,29 @@ def render_asdr_image_cached(fns: FieldFns, acfg: ASDRConfig, cam,
     if warped is None:
         o_p, d_p, c_p, op_p, _pad = pipeline.pad_rays_to_blocks(
             acfg, o, d, maps.counts, maps.opacity)
-        rgb, acc, stats = pipeline.render_adaptive(
-            fns, acfg, o_p, d_p, c_p, op_p)
+        rgb, acc, stats = render_adaptive_cached(
+            fns, acfg, o_p, d_p, c_p, op_p, fc.scene, fc.scene_id)
         img_flat = np.asarray(rgb[:R])
-        # maps.depth is None on a dilation-mode probe reuse (depth would be
-        # misaligned with this pose) — such frames are not cacheable
-        if fc.radiance is not None and maps.depth is not None:
-            fc.radiance.store(cam, acfg, rgb[:R], acc[:R], maps.depth)
+        # stored under the MARCH's per-ray termination depth (sharper than
+        # the probe's stride-d proxy at depth edges, and pose-aligned even
+        # when a dilation-mode probe reuse left maps.depth = None)
+        if fc.radiance is not None:
+            fc.radiance.store(cam, acfg, rgb[:R], acc[:R],
+                              stats["term_depth"][:R])
         rays_marched, valid_fraction = R, 0.0
         stats = dict(stats)
     else:
         march_idx = np.flatnonzero(~warped.valid)
         img_flat = np.asarray(warped.rgb).copy()
         stats = {"samples_processed": jnp.asarray(0),
-                 "baseline_samples": 0}
+                 "samples_reused": 0, "baseline_samples": 0,
+                 "scene_block_hits": 0, "scene_block_misses": 0}
         if march_idx.size:
             sel = jnp.asarray(march_idx, jnp.int32)
             o_p, d_p, c_p, op_p, _pad = pipeline.pad_rays_to_blocks(
                 acfg, o[sel], d[sel], maps.counts[sel], maps.opacity[sel])
-            rgb, _acc, stats = pipeline.render_adaptive(
-                fns, acfg, o_p, d_p, c_p, op_p)
+            rgb, _acc, stats = render_adaptive_cached(
+                fns, acfg, o_p, d_p, c_p, op_p, fc.scene, fc.scene_id)
             stats = dict(stats)
             img_flat[march_idx] = np.asarray(rgb[: march_idx.size])
         rays_marched, valid_fraction = int(march_idx.size), warped.valid_fraction

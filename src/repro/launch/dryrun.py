@@ -224,6 +224,15 @@ def run_asdr_cell(shape_name: str, multi_pod: bool, variant="baseline"):
         "scan_multiplier", 1)
     terms = roofline.roofline_terms(flops, bts, coll["total"])
     n_chips = 512 if multi_pod else 256
+    if shape_name == "render_serve":
+        # the scene-space block tier's reuse numbers ride along in the
+        # serving cell's record: a tiny concrete multi-client run (host
+        # devices) reporting cross-client block hit rate, resident bytes
+        # vs budget, and evictions — the march-cost AND march-avoided
+        # halves of the serving story in one JSON row
+        from repro.launch import render_serve as rs_mod
+        extra = dict(extra)
+        extra["scenecache"] = rs_mod.scenecache_smoke()
     return {
         "arch": "ingp-asdr", "shape": shape_name,
         "mesh": "multi" if multi_pod else "single",

@@ -101,9 +101,50 @@ def _dryrun(multi_pod: bool):
           f"peak={mem.temp_size_in_bytes + mem.argument_size_in_bytes}")
 
 
+def scenecache_smoke(size: int = 16, poses: int = 3, clients: int = 2,
+                     budget_bytes: int = 4 << 20) -> dict:
+    """Tiny concrete scene-block-reuse run for the dryrun JSON record.
+
+    ``clients`` request streams replay the SAME poses of one scene
+    through an engine whose only reuse tier is the shared scene-space
+    block store — the cross-client hit rate, resident bytes, and eviction
+    count land next to the compile-cell numbers so the serving record
+    carries both halves of the story (march cost AND reuse).
+    """
+    from repro.core import fields, pipeline, scene
+    from repro.scenecache import SceneCacheConfig
+    from repro.serve.render_engine import (RenderRequest, RenderServeConfig,
+                                           RenderServingEngine)
+
+    acfg = pipeline.ASDRConfig(ns_full=48, probe_stride=4,
+                               candidates=(8, 16, 32), block_size=64,
+                               chunk=16, sort_by_opacity=False)
+    flds = {"mic": fields.analytic_field_fns(scene.make_scene("mic"))}
+    eng = RenderServingEngine(flds, acfg, RenderServeConfig(
+        slots=2, blocks_per_batch=4, reuse=None,
+        scenecache=SceneCacheConfig(byte_budget=budget_bytes)))
+    reqs = [RenderRequest(rid=c * poses + i, scene="mic",
+                          cam=scene.look_at_camera(size, size,
+                                                   theta=0.6 + 0.05 * i,
+                                                   phi=0.5))
+            for c in range(clients) for i in range(poses)]
+    eng.render(reqs)
+    st = eng.engine_stats()
+    return {
+        "clients": clients, "poses": poses, "size": size,
+        "scene_block_hits": st["scene_block_hits"],
+        "scene_block_hit_rate": st["scene_block_hit_rate"],
+        "blocks_marched": st["blocks_marched"],
+        **{k: st["scenecache"][k]
+           for k in ("resident_bytes", "byte_budget", "evictions",
+                     "entries")},
+    }
+
+
 def _concrete(args):
     from repro.core import fields, pipeline, scene
     from repro.framecache import ProbeReuseConfig, RadianceReuseConfig
+    from repro.scenecache import SceneCacheConfig
     from repro.serve.render_engine import (RenderRequest, RenderServeConfig,
                                            RenderServingEngine)
 
@@ -115,7 +156,10 @@ def _concrete(args):
     eng = RenderServingEngine(flds, acfg, RenderServeConfig(
         slots=args.slots, blocks_per_batch=args.blocks_per_batch,
         reuse=ProbeReuseConfig(),
-        radiance=None if args.no_radiance else RadianceReuseConfig()))
+        radiance=None if args.no_radiance else RadianceReuseConfig(),
+        scenecache=(SceneCacheConfig(
+            byte_budget=int(args.scenecache_mb * (1 << 20)))
+            if args.scenecache_mb > 0 else None)))
 
     reqs = []
     for i in range(args.poses):
@@ -137,6 +181,14 @@ def _concrete(args):
           f"{100 * st['rays_marched_fraction']:.1f}% of total")
     print(f"  pooled batches        : {st['batches']} "
           f"(pad fraction {st['pad_block_fraction']:.2f})")
+    if eng.scenecache is not None:
+        sc = st["scenecache"]
+        print(f"  scene-block reuse     : hit rate "
+              f"{st['scene_block_hit_rate']:.2f} "
+              f"({st['scene_block_hits']} hits), resident "
+              f"{sc['resident_bytes'] / (1 << 20):.2f} MB / "
+              f"{sc['byte_budget'] / (1 << 20):.0f} MB budget, "
+              f"{sc['evictions']} evictions")
     marched = [r for r in done if r.stats["rays_marched"]]
     mean_frac = np.mean([r.stats["samples_processed"]
                          / r.stats["baseline_samples"]
@@ -156,6 +208,9 @@ def main():
     ap.add_argument("--blocks-per-batch", type=int, default=16)
     ap.add_argument("--no-radiance", action="store_true",
                     help="disable warped-radiance reuse (probe reuse stays)")
+    ap.add_argument("--scenecache-mb", type=float, default=0.0,
+                    help="enable scene-space block reuse with this byte "
+                         "budget in MB (0 = off)")
     args = ap.parse_args()
     if args.dryrun:
         _dryrun(args.multi_pod)

@@ -1,0 +1,23 @@
+"""Scene-space block reuse: a shared, memory-bounded cache of Phase-II
+block outputs keyed by (voxel footprint, view bucket).
+
+The fourth reuse tier (framecache/README.md).  The framecache tiers
+replay ONE user's trajectory cheaply — their entries are per-pose
+full-resolution maps, so memory grows with distinct poses and hits never
+cross users.  This tier caches at the granularity the compute actually
+happens — the Phase-II block march — under a scene-space key, behind one
+store with an explicit byte budget, so N concurrent users of one scene
+share hits and bounded memory.
+
+  key.py    — block key derivation (quantized voxel footprint + view
+              bucket) and the coarse coverage cell;
+  store.py  — SceneBlockCache: byte-budgeted, coverage-aware
+              deterministic LRU;
+  render.py — render_adaptive_cached, the single-image consumer
+              (framecache/render.py); the serving engine pools the same
+              lookups across requests (serve/render_engine.py).
+"""
+from .key import acfg_token, block_keys  # noqa: F401
+from .render import render_adaptive_cached  # noqa: F401
+from .store import (BlockOutput, SceneBlockCache,  # noqa: F401
+                    SceneCacheConfig)

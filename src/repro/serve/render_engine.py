@@ -20,6 +20,16 @@ Cross-frame reuse goes through ``repro.framecache``:
     disoccluded rays and composites them over the warp — most rays skip
     the field network entirely.
 
+Scene-space block reuse (``repro.scenecache``, opt-in via
+``RenderServeConfig.scenecache`` or a shared ``SceneBlockCache`` passed
+to the constructor) sits below both: every pooled block carries a key
+derived from its quantized voxel footprint + view bucket; blocks whose
+key is resident in the shared byte-budgeted store skip the march and
+composite directly, and marched blocks populate it — so N concurrent
+users of one scene share hits and bounded memory instead of N per-pose
+LRUs.  ``scenecache=None`` (default) leaves the pooled-march path
+bit-identical to the pre-scenecache engine.
+
 Batches have a fixed block count (``blocks_per_batch``); the trailing
 partial batch is padded with unit-budget dummy blocks, so each scene
 compiles exactly one batched march.  Budget-descending order keeps batches
@@ -47,6 +57,8 @@ from ..core.pipeline import ASDRConfig
 from ..framecache.probe import (ProbeCache, ProbeMaps, ProbeReuseConfig,
                                 cached_probe_maps)
 from ..framecache.radiance import RadianceCache, RadianceReuseConfig
+from ..scenecache import SceneBlockCache, SceneCacheConfig
+from ..scenecache import key as scenecache_key
 
 
 # jitted batched marches shared across engine instances: keyed by the
@@ -70,6 +82,11 @@ class RenderServeConfig:
     # warped-radiance reuse is opt-in: None keeps the engine bit-identical
     # to the single-image pipeline (the identity tests rely on this)
     radiance: Optional[RadianceReuseConfig] = None
+    # scene-space block reuse (repro.scenecache) is likewise opt-in: None
+    # leaves the pooled-march path untouched.  An explicit SceneBlockCache
+    # instance passed to the engine constructor overrides this config —
+    # that is how several engines over one scene share a single store.
+    scenecache: Optional[SceneCacheConfig] = None
     probe_seed: Optional[int] = None   # None = deterministic midpoint probe
 
 
@@ -110,7 +127,10 @@ class _Slot:
         n_blocks = budgets.shape[0]
         self.rgb = np.zeros((n_blocks, block_size, 3), np.float32)
         self.acc = np.zeros((n_blocks, block_size), np.float32)
+        self.depth = np.zeros((n_blocks, block_size), np.float32)
         self.chunks = np.zeros((n_blocks,), np.int64)
+        self.cached_blocks = 0        # delivered from the scene store
+        self.cached_chunks = 0
         self.pending = n_blocks
         self.t0 = time.time()
 
@@ -122,10 +142,14 @@ class _Slot:
         for bi in range(self.budgets.shape[0]):
             yield (self, bi, o_s[bi], d_s[bi], int(self.budgets[bi]))
 
-    def deliver(self, bi: int, rgb, acc, chunks):
+    def deliver(self, bi: int, rgb, acc, depth, chunks, cached: bool = False):
         self.rgb[bi] = rgb
         self.acc[bi] = acc
+        self.depth[bi] = depth
         self.chunks[bi] = chunks
+        if cached:
+            self.cached_blocks += 1
+            self.cached_chunks += int(chunks)
         self.pending -= 1
 
     def finalize(self, acfg: ASDRConfig) -> RenderRequest:
@@ -138,17 +162,24 @@ class _Slot:
             inv[np.asarray(self.order)] = np.arange(Rp)
             flat = self.rgb.reshape(Rp, 3)[inv]
             acc_flat = self.acc.reshape(Rp)[inv]
+            depth_flat = self.depth.reshape(Rp)[inv]
         else:
             flat = np.zeros((0, 3), np.float32)
             acc_flat = np.zeros((0,), np.float32)
+            depth_flat = np.zeros((0,), np.float32)
         if self.march_idx is None:
             img_flat = flat[:R]
             self.acc_full = acc_flat[:R]
+            # the march's per-ray termination depth: what the radiance
+            # cache warps this frame with (sharper than the probe's
+            # stride-d proxy at depth edges)
+            self.depth_full = depth_flat[:R]
             rays_marched = R
         else:
             img_flat = self.base_rgb.copy()
             img_flat[self.march_idx] = flat[: self.march_idx.size]
             self.acc_full = None       # warped frames are never re-cached
+            self.depth_full = None
             rays_marched = int(self.march_idx.size)
         req.image = img_flat.reshape(H, W, 3)
         req.latency_s = time.time() - self.t0
@@ -159,8 +190,16 @@ class _Slot:
             "rays_marched": rays_marched,
             "rays_total": R,
             "warp_valid_fraction": self.warp_valid_fraction,
-            "samples_processed": int(self.chunks.sum())
+            # compute actually spent: scene-store hits replay stored
+            # outputs without marching, so their chunks count as REUSED
+            # samples, not processed ones — the compute-fraction metrics
+            # must show the scene tier's savings
+            "samples_processed":
+                (int(self.chunks.sum()) - self.cached_chunks)
+                * self.block_size * acfg.chunk,
+            "samples_reused": self.cached_chunks
             * self.block_size * acfg.chunk,
+            "scene_block_hits": self.cached_blocks,
             # padded ray count, matching render_adaptive's stats — the
             # numerator includes the pad rays' chunks, so the denominator
             # must too or the fraction inflates (and can exceed 1.0)
@@ -171,7 +210,8 @@ class _Slot:
 
 class RenderServingEngine:
     def __init__(self, fields: Dict[str, FieldFns], acfg: ASDRConfig,
-                 rcfg: RenderServeConfig = RenderServeConfig()):
+                 rcfg: RenderServeConfig = RenderServeConfig(),
+                 scenecache: Optional[SceneBlockCache] = None):
         self.fields = fields
         self.acfg = acfg
         self.rcfg = rcfg
@@ -181,6 +221,13 @@ class RenderServingEngine:
         self.radiance_caches: Dict[str, RadianceCache] = {
             name: RadianceCache(rcfg.radiance) for name in fields
         } if rcfg.radiance is not None else {}
+        # scene-space block store: an explicitly passed instance is SHARED
+        # (several engines over one scene pool their hits); otherwise the
+        # engine owns one iff the config asks for it.  Keys carry the
+        # scene id, so one store safely serves all of this engine's scenes.
+        if scenecache is None and rcfg.scenecache is not None:
+            scenecache = SceneBlockCache(rcfg.scenecache)
+        self.scenecache = scenecache
         # engine counters (across render() calls)
         self.frames = 0
         self.batches = 0
@@ -188,6 +235,7 @@ class RenderServingEngine:
         self.pad_blocks = 0
         self.rays_marched = 0
         self.rays_total = 0
+        self.scene_blocks_hit = 0
 
     # ---------------------------------------------------------------- march
     def _batched_march(self, scene_id: str):
@@ -235,6 +283,55 @@ class RenderServingEngine:
                      march_idx=march_idx, base_rgb=base_rgb,
                      warp_valid_fraction=vf)
 
+    def _keyed_items(self, slot: _Slot) -> List[tuple]:
+        """The slot's work items, extended to (..., key, cell) — blocks
+        already resident in the scene store deliver HERE (their one
+        counted lookup) and never enter the pool.
+
+        With the scene tier off both fields are None and the pooled-march
+        path below is byte-for-byte the pre-scenecache behavior.
+        """
+        items = list(slot.emit_blocks(*slot.rays))
+        if self.scenecache is None or not items:
+            return [it + (None, None) for it in items]
+        o_np = np.stack([np.asarray(it[2]) for it in items])
+        d_np = np.stack([np.asarray(it[3]) for it in items])
+        buds = np.asarray([it[4] for it in items])
+        kcs = scenecache_key.block_keys(
+            self.scenecache.cfg, slot.req.scene, self.acfg, o_np, d_np, buds)
+        pending = []
+        for it, kc in zip(items, kcs):
+            out = self.scenecache.lookup(kc[0])
+            if out is None:
+                pending.append(it + kc)
+            else:
+                it[0].deliver(it[1], out.rgb, out.acc, out.depth,
+                              out.chunks, cached=True)
+                self.scene_blocks_hit += 1
+        return pending
+
+    def _sweep_pool(self, pool: List[tuple]) -> List[tuple]:
+        """Deliver every pooled block whose key BECAME resident; keep the
+        rest.
+
+        Runs once per scheduling round, so a block marched (and stored)
+        for one request satisfies an identical block another client
+        pooled in the SAME round — cross-request sharing without any
+        inter-slot coordination.  Pool items already recorded their miss
+        at admission, so these re-checks don't count misses (hits do).
+        """
+        rest = []
+        for it in pool:
+            out = (self.scenecache.lookup(it[5], count_miss=False)
+                   if it[5] is not None else None)
+            if out is None:
+                rest.append(it)
+            else:
+                it[0].deliver(it[1], out.rgb, out.acc, out.depth,
+                              out.chunks, cached=True)
+                self.scene_blocks_hit += 1
+        return rest
+
     # ---------------------------------------------------------------- serve
     def render(self, requests: List[RenderRequest]) -> List[RenderRequest]:
         """Serve all requests; returns them completed, in finish order.
@@ -260,7 +357,10 @@ class RenderServingEngine:
             while queue and len(live) < rcfg.slots:
                 slot = self._admit(queue.pop(0))
                 live.append(slot)
-                pool.extend(slot.emit_blocks(*slot.rays))
+                pool.extend(self._keyed_items(slot))
+
+            if self.scenecache is not None and pool:
+                pool = self._sweep_pool(pool)
 
             if pool:
                 # one batch per round: the largest-budget scene group
@@ -272,6 +372,21 @@ class RenderServingEngine:
                 taken = set(map(id, batch))
                 pool = [it for it in pool if id(it) not in taken]
 
+                # in-batch dedup: identical keys selected together (two
+                # clients admitted the same round) march once; followers
+                # receive the leader's outputs
+                followers: List[tuple] = []
+                if self.scenecache is not None:
+                    uniq, seen = [], {}
+                    for it in batch:
+                        if it[5] is not None and it[5] in seen:
+                            followers.append((it, seen[it[5]]))
+                        else:
+                            if it[5] is not None:
+                                seen[it[5]] = len(uniq)
+                            uniq.append(it)
+                    batch = uniq
+
                 march = self._batched_march(scene_id)
                 N = rcfg.blocks_per_batch
                 n_pad = N - len(batch)
@@ -282,12 +397,20 @@ class RenderServingEngine:
                                             (B, 1))] * n_pad)
                 budgets = jnp.asarray(
                     [it[4] for it in batch] + [1] * n_pad, jnp.int32)
-                rgb, acc, chunks = march(o_b, d_b, budgets)
+                rgb, acc, depth, chunks = march(o_b, d_b, budgets)
                 rgb = np.asarray(rgb)
                 acc = np.asarray(acc)
+                depth = np.asarray(depth)
                 chunks = np.asarray(chunks)
-                for i, (slot, bi, *_rest) in enumerate(batch):
-                    slot.deliver(bi, rgb[i], acc[i], chunks[i])
+                for i, it in enumerate(batch):
+                    it[0].deliver(it[1], rgb[i], acc[i], depth[i], chunks[i])
+                    if it[5] is not None:
+                        self.scenecache.store(it[5], it[6], rgb[i], acc[i],
+                                              depth[i], int(chunks[i]))
+                for it, li in followers:
+                    it[0].deliver(it[1], rgb[li], acc[li], depth[li],
+                                  chunks[li], cached=True)
+                    self.scene_blocks_hit += 1
                 self.batches += 1
                 self.blocks_marched += len(batch)
                 self.pad_blocks += n_pad
@@ -306,17 +429,19 @@ class RenderServingEngine:
         self.frames += 1
         self.rays_marched += req.stats["rays_marched"]
         self.rays_total += req.stats["rays_total"]
-        # only fully-rendered frames WITH a pose-aligned depth map feed the
-        # radiance cache (framecache safety invariants: warps never chain,
-        # and a dilation-mode probe reuse returns depth=None because the
-        # entry's depth belongs to the cached pose's pixel grid)
+        # only fully-rendered frames feed the radiance cache (framecache
+        # safety invariant: warps never chain).  The stored depth is the
+        # MARCH's per-ray termination depth — always pose-aligned (so even
+        # dilation-mode probe-reuse frames, whose probe maps carry
+        # depth=None, are cacheable) and sharper than the probe's stride-d
+        # proxy at depth edges.
         rad = self.radiance_caches.get(req.scene)
-        if (rad is not None and slot.march_idx is None
-                and slot.maps.depth is not None):
+        if rad is not None and slot.march_idx is None:
             R = req.cam.height * req.cam.width
             rad.store(req.cam, self.acfg,
                       jnp.asarray(req.image.reshape(R, 3)),
-                      jnp.asarray(slot.acc_full), slot.maps.depth)
+                      jnp.asarray(slot.acc_full),
+                      jnp.asarray(slot.depth_full))
         return req
 
     # ---------------------------------------------------------------- stats
@@ -345,4 +470,12 @@ class RenderServingEngine:
         out["radiance_hits"] = r_hits
         out["radiance_misses"] = r_miss
         out["reused_radiance_fraction"] = r_hits / max(r_hits + r_miss, 1)
+        # scene-space block tier: hit rate over blocks that needed output
+        # (delivered from the shared store vs actually marched; pad blocks
+        # excluded from both sides)
+        out["scene_block_hits"] = self.scene_blocks_hit
+        out["scene_block_hit_rate"] = self.scene_blocks_hit / max(
+            self.scene_blocks_hit + self.blocks_marched, 1)
+        if self.scenecache is not None:
+            out["scenecache"] = self.scenecache.stats()
         return out

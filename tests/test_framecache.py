@@ -146,10 +146,11 @@ def test_probe_cache_warp_mode_sustains_beyond_dilate_cap(setup):
     assert reused_w and not reused_d
 
 
-def test_dilation_mode_reuse_frames_are_not_radiance_cacheable(setup):
-    """warp=False reuse at a nonzero delta transfers depth unwarped-able:
-    ProbeMaps.depth must be None and the radiance store must skip the
-    frame (a stale depth map would misregister later radiance warps)."""
+def test_dilation_mode_reuse_frames_cache_under_march_depth(setup):
+    """warp=False reuse at a nonzero delta transfers depth unwarped-able —
+    ProbeMaps.depth must be None — but the frame is still radiance-
+    cacheable: the store keeps the MARCH's own termination depth, which is
+    pose-aligned by construction (the probe proxy it replaced was not)."""
     fns, _ = setup
     fc = framecache.FrameCache(
         probe=fc_probe.ProbeCache(fc_probe.ProbeReuseConfig(
@@ -165,7 +166,13 @@ def test_dilation_mode_reuse_frames_are_not_radiance_cacheable(setup):
     assert reused and maps.depth is None
     _, st = framecache.render_asdr_image_cached(fns, ACFG, cam_at(0.75), fc)
     assert st["probe_reused"] and not st["radiance_reused"]
-    assert len(fc.radiance) == 1       # the dilation-reuse frame not stored
+    # fully-marched frame stored despite maps.depth=None, with a sane
+    # per-ray depth; replaying the pose now reuses it bit-exactly
+    assert len(fc.radiance) == 2
+    d = np.asarray(fc.radiance._entries[-1].depth)
+    assert (d >= scene.NEAR).all() and (d <= scene.FAR + 1e-4).all()
+    _, st2 = framecache.render_asdr_image_cached(fns, ACFG, cam_at(0.75), fc)
+    assert st2["radiance_reused"] and st2["rays_marched"] == 0
 
 
 def test_probe_maps_include_depth(setup):
@@ -173,6 +180,41 @@ def test_probe_maps_include_depth(setup):
     d = np.asarray(maps.depth)
     assert d.shape == (SIZE * SIZE,)
     assert (d >= scene.NEAR).all() and (d <= scene.FAR + 1e-5).all()
+
+
+def test_march_termination_depth_sharper_than_probe_proxy(setup):
+    """The Phase-II march's per-ray termination depth (ROADMAP item) must
+    be in-range, pin background rays to FAR, and register depth edges
+    better than the probe's stride-d interpolated proxy — the reason the
+    radiance store switched to it."""
+    fns, maps = setup
+    cam = cam_at(0.7)
+    o, d = scene.camera_rays(cam)
+    counts = jnp.full((SIZE * SIZE,), ACFG.ns_full, jnp.int32)
+    _, acc, stats = pipeline.render_adaptive(fns, ACFG, o, d, counts)
+    march_d = np.asarray(stats["term_depth"])
+    acc = np.asarray(acc)
+    assert march_d.shape == (SIZE * SIZE,)
+    assert (march_d >= scene.NEAR - 1e-5).all()
+    assert (march_d <= scene.FAR + 1e-4).all()
+    bg = acc < 1e-3
+    assert bg.any() and np.allclose(march_d[bg], scene.FAR, atol=2e-3)
+    # reference: densely-sampled expected termination depth per ray
+    from repro.core import rendering
+    pts, deltas, ts = scene.sample_points(o, d, 256)
+    fld = scene.make_scene("mic")
+    sigma, _ = fld(pts.reshape(-1, 3))
+    inside = np.all((np.asarray(pts.reshape(-1, 3)) >= 0.0)
+                    & (np.asarray(pts.reshape(-1, 3)) <= 1.0), axis=-1)
+    sigma = jnp.where(jnp.asarray(inside), sigma, 0.0).reshape(
+        SIZE * SIZE, 256)
+    _, ref_acc, w = rendering.composite(
+        sigma, jnp.zeros(sigma.shape + (3,)), deltas)
+    ref_d = np.asarray(rendering.expected_termination_depth(
+        w, ts, ref_acc, scene.FAR))
+    err_march = np.abs(march_d - ref_d).mean()
+    err_probe = np.abs(np.asarray(maps.depth) - ref_d).mean()
+    assert err_march <= err_probe + 1e-3, (err_march, err_probe)
 
 
 # -------------------------------------------------------------- radiance

@@ -1,0 +1,321 @@
+"""Scene-space block reuse invariants (repro.scenecache).
+
+ISSUE-3 test requirements: view-bucket quantization boundary behavior,
+byte budget never exceeded under arbitrary insert sequences (property
+test), deterministic (coverage-aware) eviction, and engine bit-identity
+with scenecache=None — plus the framecache satellite (ordered tie-break
+eviction, resident_bytes on both pose caches).
+"""
+import dataclasses
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro import framecache, scenecache
+from repro.core import fields, pipeline, scene
+from repro.framecache import base as fc_base
+from repro.framecache import probe as fc_probe
+from repro.framecache import radiance as fc_radiance
+from repro.scenecache import (SceneBlockCache, SceneCacheConfig, block_keys,
+                              render_adaptive_cached)
+from repro.serve.render_engine import (RenderRequest, RenderServeConfig,
+                                       RenderServingEngine)
+
+ACFG = pipeline.ASDRConfig(ns_full=48, probe_stride=4, candidates=(8, 16, 32),
+                           block_size=64, chunk=16, sort_by_opacity=False)
+SIZE = 16
+CFG = SceneCacheConfig()
+
+
+def cam_at(theta, phi=0.5, size=SIZE):
+    return scene.look_at_camera(size, size, theta=theta, phi=phi)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    return {"mic": fields.analytic_field_fns(scene.make_scene("mic"))}
+
+
+def _block(rng, B=8):
+    o = rng.uniform(0.2, 0.8, size=(1, B, 3)).astype(np.float32)
+    d = rng.normal(size=(1, B, 3)).astype(np.float32)
+    d /= np.linalg.norm(d, axis=-1, keepdims=True)
+    return o, d
+
+
+# ------------------------------------------------------------------- keys
+def test_block_key_identity_and_sensitivity():
+    rng = np.random.default_rng(0)
+    o, d = _block(rng)
+    (k1, c1), = block_keys(CFG, "mic", ACFG, o, d, np.asarray([32]))
+    (k2, c2), = block_keys(CFG, "mic", ACFG, o.copy(), d.copy(),
+                           np.asarray([32]))
+    assert k1 == k2 and c1 == c2          # pure function of the inputs
+    (k3, _), = block_keys(CFG, "hotdog", ACFG, o, d, np.asarray([32]))
+    (k4, _), = block_keys(CFG, "mic", ACFG, o, d, np.asarray([48]))
+    loose = dataclasses.replace(ACFG, delta=0.1)
+    (k5, _), = block_keys(CFG, "mic", loose, o, d, np.asarray([32]))
+    (k6, _), = block_keys(CFG, "mic", ACFG, o, -d, np.asarray([32]))
+    assert len({k1, k3, k4, k5, k6}) == 5  # scene/budget/acfg/view all key
+
+
+def test_view_bucket_quantization_boundary():
+    """A direction nudge that stays inside its view bucket (and inside its
+    voxel cells) keeps the key; a nudge of the same size across the bucket
+    boundary changes it."""
+    cfg = SceneCacheConfig(voxel_res=4, view_buckets=64)
+    B = 4
+    o = np.full((1, B, 3), 0.375, np.float32)      # voxel-cell centers
+    d = np.tile(np.asarray([0.0, 0.0, 1.0], np.float32), (1, B, 1))
+    # x-component bucket boundary sits at dx=0 (floor((0.5)*64) = 32):
+    # +eps stays in bucket 32, -eps lands in bucket 31.  eps shifts the
+    # chord endpoints by <= FAR*eps ~ 2e-4 << the 1/4-unit voxel cells.
+    eps = 1e-4
+    d_in = d.copy()
+    d_in[..., 0] = eps
+    d_out = d.copy()
+    d_out[..., 0] = -eps
+    (k0, _), = block_keys(cfg, "s", ACFG, o, d, np.asarray([32]))
+    (ki, _), = block_keys(cfg, "s", ACFG, o, d_in, np.asarray([32]))
+    (ko, _), = block_keys(cfg, "s", ACFG, o, d_out, np.asarray([32]))
+    assert k0 == ki          # same bucket, same voxels -> shared key
+    assert k0 != ko          # crossed the bucket boundary -> distinct key
+
+
+# ------------------------------------------------------------------ store
+def _mk_out(rng, B):
+    return (rng.uniform(size=(B, 3)).astype(np.float32),
+            rng.uniform(size=(B,)).astype(np.float32),
+            rng.uniform(scene.NEAR, scene.FAR, size=(B,)).astype(np.float32))
+
+
+@settings(max_examples=5, deadline=None)
+@given(st.integers(min_value=0, max_value=10_000))
+def test_byte_budget_never_exceeded(seed):
+    """Property: after EVERY operation of an arbitrary store/lookup
+    sequence, resident_bytes() <= byte_budget and matches the entries."""
+    rng = np.random.default_rng(seed)
+    B = 16
+    one = _mk_out(rng, B)
+    entry_bytes = scenecache.BlockOutput(*one, 0).nbytes
+    budget = int(entry_bytes * 3.5)       # room for 3 entries, not 4
+    cache = SceneBlockCache(SceneCacheConfig(byte_budget=budget))
+    keys = [bytes([i]) * 8 for i in range(8)]
+    for _ in range(60):
+        op = rng.integers(0, 3)
+        k = keys[rng.integers(0, len(keys))]
+        if op == 2:
+            cache.lookup(k)
+        else:
+            cell = ("s", int(rng.integers(0, 2)))
+            rgb, acc, dep = _mk_out(rng, B)
+            cache.store(k, cell, rgb, acc, dep, int(rng.integers(1, 4)))
+        assert cache.resident_bytes() <= budget
+        assert cache.resident_bytes() == sum(
+            e.out.nbytes for e in cache._entries.values())
+        assert len(cache) <= 3
+    # an entry bigger than the whole budget is rejected, not admitted
+    big = _mk_out(rng, 4096)
+    assert not cache.store(b"big", ("s", 9), *big, 1)
+    assert cache.rejected == 1 and cache.resident_bytes() <= budget
+
+
+def test_store_lookup_roundtrip_and_lru():
+    rng = np.random.default_rng(1)
+    B = 8
+    cache = SceneBlockCache(SceneCacheConfig(byte_budget=1 << 20))
+    rgb, acc, dep = _mk_out(rng, B)
+    assert cache.lookup(b"k1") is None and cache.misses == 1
+    cache.store(b"k1", ("s", 0), jnp.asarray(rgb), acc, dep, 3)
+    out = cache.lookup(b"k1")
+    assert out is not None and out.chunks == 3
+    np.testing.assert_array_equal(out.rgb, rgb)
+    np.testing.assert_array_equal(out.acc, acc)
+    np.testing.assert_array_equal(out.depth, dep)
+    assert cache.hits == 1 and cache.stats()["hit_rate"] == 0.5
+
+
+def test_eviction_deterministic_and_coverage_aware():
+    """Coverage-aware LRU total order: redundant-cell entries evict first
+    (LRU within the group, insertion order on exact ties), sole covers of
+    a cell survive; two caches fed the same sequence agree exactly."""
+    rng = np.random.default_rng(2)
+    B = 16
+    one = _mk_out(rng, B)
+    entry_bytes = scenecache.BlockOutput(*one, 0).nbytes
+    budget = int(entry_bytes * 3.5)
+
+    def build():
+        c = SceneBlockCache(SceneCacheConfig(byte_budget=budget))
+        c.store(b"a", ("cell1",), *_mk_out(rng, B), 1)   # redundant pair...
+        c.store(b"b", ("cell1",), *_mk_out(rng, B), 1)
+        c.store(b"c", ("cell2",), *_mk_out(rng, B), 1)   # sole cover
+        c.lookup(b"a")               # make "a" the RECENT redundant entry
+        c.store(b"d", ("cell3",), *_mk_out(rng, B), 1)   # forces eviction
+        return c
+
+    c1, c2 = build(), build()
+    assert set(c1._entries) == set(c2._entries) == {b"a", b"c", b"d"}
+    assert c1.evictions == 1          # "b": LRU of the redundant cell1 pair
+    # exact-recency tie inside one cell: insertion order (oldest) decides
+    c3 = SceneBlockCache(SceneCacheConfig(byte_budget=budget))
+    for k in (b"x", b"y", b"z"):
+        c3.store(k, ("cell",), *_mk_out(rng, B), 1)
+    for e in c3._entries.values():
+        e.last_used = 7
+    c3.store(b"w", ("cell",), *_mk_out(rng, B), 1)
+    assert b"x" not in c3._entries and set(c3._entries) == {b"y", b"z", b"w"}
+
+
+# ------------------------------------------------- framecache (satellite)
+def test_framecache_eviction_tie_breaks_by_insertion_order():
+    class _E:
+        def __init__(self):
+            self.last_used = 0
+
+    cache = fc_base.PoseKeyedCache(
+        fc_probe.ProbeReuseConfig(max_entries=2))
+    e1, e2, e3 = _E(), _E(), _E()
+    cache._append_with_eviction(e1)
+    cache._append_with_eviction(e2)
+    e1.last_used = e2.last_used = 5        # exact recency tie
+    cache._append_with_eviction(e3)
+    assert e1 not in cache._entries and e2 in cache._entries
+    assert [e.seq for e in cache._entries] == [1, 2]
+
+
+def test_framecache_resident_bytes():
+    R = SIZE * SIZE
+    cam = cam_at(0.7)
+    probe = fc_probe.ProbeCache(fc_probe.ProbeReuseConfig())
+    rad = fc_radiance.RadianceCache(fc_radiance.RadianceReuseConfig())
+    assert probe.resident_bytes() == 0 and rad.resident_bytes() == 0
+    counts = jnp.full((R,), 16, jnp.int32)
+    opac = jnp.zeros((R,), jnp.float32)
+    depth = jnp.full((R,), 1.0, jnp.float32)
+    probe._store(cam, ACFG, fc_probe.ProbeMaps(counts, opac, depth, 0))
+    # counts (int32) + opacity + depth (float32), all (R,)
+    assert probe.resident_bytes() == 3 * 4 * R
+    probe._store(cam_at(0.9), ACFG,
+                 fc_probe.ProbeMaps(counts, opac, None, 0))  # depth-less
+    assert probe.resident_bytes() == 3 * 4 * R + 2 * 4 * R
+    rad.store(cam, ACFG, jnp.zeros((R, 3)), opac, depth)
+    # rgb (R,3) + acc + depth, float32
+    assert rad.resident_bytes() == (3 + 1 + 1) * 4 * R
+
+
+# ----------------------------------------------------------- single image
+def test_single_image_all_miss_matches_plain_pipeline(setup):
+    """First (all-miss) cached call must be bit-identical to the plain
+    pipeline; the replayed call hits every block and stays bit-identical."""
+    fns = setup["mic"]
+    cache = SceneBlockCache(SceneCacheConfig(byte_budget=8 << 20))
+    fc = framecache.FrameCache(scene=cache, scene_id="mic")
+    img1, st1 = framecache.render_asdr_image_cached(fns, ACFG, cam_at(0.7), fc)
+    ref, _ = pipeline.render_asdr_image(fns, ACFG, cam_at(0.7))
+    np.testing.assert_array_equal(img1, np.asarray(ref))
+    assert st1["scene_block_hits"] == 0 and st1["scene_block_misses"] == 4
+    img2, st2 = framecache.render_asdr_image_cached(fns, ACFG, cam_at(0.7), fc)
+    assert st2["scene_block_hits"] == 4 and st2["scene_block_misses"] == 0
+    np.testing.assert_array_equal(img1, img2)
+    assert cache.resident_bytes() > 0
+
+
+def test_make_frame_cache_shared_store_requires_scene_id():
+    """Block keys disambiguate scenes only by scene_id: a shared store
+    under the default id would serve scenes each other's blocks, so the
+    constructor refuses it."""
+    store = SceneBlockCache(SceneCacheConfig())
+    with pytest.raises(ValueError, match="scene_id"):
+        framecache.make_frame_cache(scene_cache=store)
+    fc = framecache.make_frame_cache(scene_cache=store, scene_id="mic")
+    assert fc.scene is store and fc.scene_id == "mic"
+
+
+def test_render_adaptive_cached_none_is_render_adaptive(setup):
+    fns = setup["mic"]
+    o, d = scene.camera_rays(cam_at(0.7))
+    counts = jnp.full((SIZE * SIZE,), 16, jnp.int32)
+    rgb_a, acc_a, st_a = pipeline.render_adaptive(fns, ACFG, o, d, counts)
+    rgb_b, acc_b, st_b = render_adaptive_cached(fns, ACFG, o, d, counts)
+    np.testing.assert_array_equal(np.asarray(rgb_a), np.asarray(rgb_b))
+    np.testing.assert_array_equal(np.asarray(acc_a), np.asarray(acc_b))
+    assert st_b["scene_block_hits"] == 0
+    np.testing.assert_array_equal(np.asarray(st_a["term_depth"]),
+                                  np.asarray(st_b["term_depth"]))
+
+
+# ----------------------------------------------------------------- engine
+def test_engine_scenecache_none_is_bit_identical(setup):
+    """The identity requirement: scenecache=None leaves the pooled-march
+    engine bit-identical to render_asdr_image."""
+    eng = RenderServingEngine(setup, ACFG, RenderServeConfig(
+        slots=2, blocks_per_batch=4, reuse=None, scenecache=None))
+    done = eng.render([RenderRequest(rid=0, scene="mic", cam=cam_at(0.7))])
+    ref, _ = pipeline.render_asdr_image(setup["mic"], ACFG, cam_at(0.7))
+    np.testing.assert_array_equal(done[0].image, np.asarray(ref))
+    assert "scenecache" not in eng.engine_stats()
+
+
+def test_engine_cross_client_block_reuse_bit_identical(setup):
+    """Two clients at the same pose: the second's blocks come from the
+    shared store (zero extra marches) and the frames match bit-exactly —
+    including a third client served by a SECOND engine sharing the store."""
+    store = SceneBlockCache(SceneCacheConfig(byte_budget=8 << 20))
+    eng = RenderServingEngine(setup, ACFG, RenderServeConfig(
+        slots=2, blocks_per_batch=4, reuse=None), scenecache=store)
+    first = eng.render([RenderRequest(rid=0, scene="mic", cam=cam_at(0.7))])
+    marched = eng.blocks_marched
+    second = eng.render([RenderRequest(rid=1, scene="mic", cam=cam_at(0.7))])
+    assert eng.blocks_marched == marched          # zero new marches
+    assert eng.scene_blocks_hit == 4
+    # compute honesty: a fully cache-served frame spent zero samples
+    assert second[0].stats["scene_block_hits"] == 4
+    assert second[0].stats["samples_processed"] == 0
+    assert (second[0].stats["samples_reused"]
+            == first[0].stats["samples_processed"])
+    np.testing.assert_array_equal(first[0].image, second[0].image)
+    ref, _ = pipeline.render_asdr_image(setup["mic"], ACFG, cam_at(0.7))
+    np.testing.assert_array_equal(second[0].image, np.asarray(ref))
+    eng2 = RenderServingEngine(setup, ACFG, RenderServeConfig(
+        slots=2, blocks_per_batch=4, reuse=None), scenecache=store)
+    third = eng2.render([RenderRequest(rid=2, scene="mic", cam=cam_at(0.7))])
+    assert eng2.blocks_marched == 0 and eng2.scene_blocks_hit == 4
+    np.testing.assert_array_equal(third[0].image, np.asarray(ref))
+
+
+def test_engine_same_round_duplicate_blocks_dedup(setup):
+    """Identical requests admitted in the same scheduling round: in-batch
+    dedup + the pool sweep mean the engine marches each distinct block
+    once and both frames complete identically."""
+    eng = RenderServingEngine(setup, ACFG, RenderServeConfig(
+        slots=4, blocks_per_batch=4, reuse=None,
+        scenecache=SceneCacheConfig(byte_budget=8 << 20)))
+    reqs = [RenderRequest(rid=i, scene="mic", cam=cam_at(0.7))
+            for i in range(3)]
+    done = {r.rid: r for r in eng.render(reqs)}
+    assert eng.blocks_marched == 4                # one frame's worth
+    assert eng.scene_blocks_hit == 8              # the other two frames'
+    for rid in (1, 2):
+        np.testing.assert_array_equal(done[0].image, done[rid].image)
+    # cache-level counters are FIRST-TOUCH lookup stats: every block
+    # records exactly one admission miss (all 3 frames admit before any
+    # march), sweep deliveries count hits, in-batch dedup followers never
+    # look up, and the multi-round pool re-sweeps add NO further misses
+    sc = eng.engine_stats()["scenecache"]
+    assert sc["misses"] == 12 and sc["hits"] == 4
+
+
+def test_engine_stats_expose_scenecache(setup):
+    eng = RenderServingEngine(setup, ACFG, RenderServeConfig(
+        slots=2, blocks_per_batch=4, reuse=None,
+        scenecache=SceneCacheConfig(byte_budget=1 << 20)))
+    eng.render([RenderRequest(rid=0, scene="mic", cam=cam_at(0.7))])
+    st = eng.engine_stats()
+    sc = st["scenecache"]
+    assert sc["entries"] == 4 and sc["resident_bytes"] > 0
+    assert sc["resident_bytes"] <= sc["byte_budget"]
+    assert st["scene_block_hit_rate"] == 0.0
