@@ -13,7 +13,13 @@ warped radiance), against an always-probe/no-reuse run.  Gates:
     warp the cached frames and march only disoccluded rays — on an exact
     replay that is zero rays),
   * per-frame |PSNR delta| vs the no-reuse run <= 0.1 dB,
-  * reused-probe fraction > 0.5.
+  * reused-probe fraction > 0.5 (hits + SKIPS over admissions — a full
+    radiance hit pays no probe at all under radiance-first admission),
+  * every full-radiance-hit frame ran ZERO probe rays (probe_samples 0,
+    Phase I skipped) and probes + skips == admissions,
+  * per-frame admission stall p99 with the double-buffered pipeline
+    (prefetch=2, default) no worse than a synchronous prefetch=0 run —
+    whose frames must also match bit-exactly (prefetch determinism).
 
 --sweep — reuse-radius sweep (ROADMAP item): per-lap pose jitter steps
 through increasing pose deltas; three probe-transfer modes run the same
@@ -34,6 +40,7 @@ structure.
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import sys
 import time
 from pathlib import Path
@@ -122,6 +129,11 @@ def run_replay(args):
     reqs = traj()
     done_r, dt_r, eng_r = run_engine(flds, acfg, reuse_cfg, reqs)
     done_p, dt_p, eng_p = run_engine(flds, acfg, none_cfg, traj())
+    # synchronous-admission baseline: same reuse config, prefetch off —
+    # frames must match the double-buffered run bit-exactly, and the
+    # double-buffered admission stall must not regress past it
+    sync_cfg = dataclasses.replace(reuse_cfg, prefetch=0)
+    done_s, _dt_s, _eng_s = run_engine(flds, acfg, sync_cfg, traj())
 
     refs = reference_frames(field, reqs, args.size)
     psnrs_r = psnr_per_frame(refs, done_r, reqs)
@@ -133,13 +145,38 @@ def run_replay(args):
                 / max(st_p["rays_marched_fraction"], 1e-9))
     probe_frac = st_r["reused_probe_fraction"]
     max_delta = max(deltas)
+
+    # radiance-first admission gates
+    by_rid_s = {r.rid: r for r in done_s}
+    prefetch_identical = all(
+        np.array_equal(r.image, by_rid_s[r.rid].image) for r in done_r)
+    full_hits = [r for r in done_r
+                 if r.stats["radiance_reused"]
+                 and r.stats["rays_marched"] == 0]
+    full_hit_zero_probe = bool(full_hits) and all(
+        r.stats["probe_samples"] == 0 and r.stats["probe_skipped"]
+        for r in full_hits)
+    counters_ok = (st_r["probe_hits"] + st_r["probe_misses"]
+                   + st_r["probe_skips"] == st_r["admissions"])
+    stall_r = np.asarray([r.stats["admit_stall_s"] for r in done_r]) * 1e3
+    stall_s = np.asarray([r.stats["admit_stall_s"] for r in done_s]) * 1e3
+    p99_r = float(np.percentile(stall_r, 99))
+    p99_s = float(np.percentile(stall_s, 99))
+    # "no worse" with a small epsilon + 10% headroom for timer noise
+    admission_ok = p99_r <= p99_s * 1.10 + 0.5
     print(f"== render_serve replay: {args.poses}-pose orbit x {args.laps} "
           f"laps = {len(reqs)} frames, {args.size}x{args.size}, "
           f"scene={args.scene} ==")
     print(f"  fps   reuse    : {len(done_r)/dt_r:6.2f}  ({dt_r:.2f}s)")
     print(f"  fps   no-reuse : {len(done_p)/dt_p:6.2f}  ({dt_p:.2f}s)")
     print(f"  reused-probe fraction   : {probe_frac:.3f} "
-          f"({st_r['probe_hits']} hits, {st_r['probe_misses']} probes)")
+          f"({st_r['probe_hits']} hits, {st_r['probe_skips']} skips, "
+          f"{st_r['probe_misses']} probes)")
+    print(f"  full-radiance-hit frames: {len(full_hits)} "
+          f"(zero probe rays: {'yes' if full_hit_zero_probe else 'NO'})")
+    print(f"  admission stall p99     : {p99_r:.2f} ms double-buffered vs "
+          f"{p99_s:.2f} ms synchronous "
+          f"(identical frames: {'yes' if prefetch_identical else 'NO'})")
     print(f"  reused-radiance fraction: "
           f"{st_r['reused_radiance_fraction']:.3f} "
           f"({st_r['radiance_hits']} hits)")
@@ -151,9 +188,13 @@ def run_replay(args):
           f"min {min(psnrs_p):.2f} dB")
     print(f"  per-frame |PSNR delta|: mean {np.mean(deltas):.4f} dB  "
           f"max {max_delta:.4f} dB")
-    ok = ray_frac < 0.5 and max_delta <= 0.1 and probe_frac > 0.5
+    ok = (ray_frac < 0.5 and max_delta <= 0.1 and probe_frac > 0.5
+          and full_hit_zero_probe and counters_ok and admission_ok
+          and prefetch_identical)
     print(f"  acceptance (ray fraction<0.5, max delta<=0.1 dB, "
-          f"probe fraction>0.5): {'OK' if ok else 'FAIL'}")
+          f"probe fraction>0.5, full hits skip probe, "
+          f"probes+skips==admissions, admission p99 no worse than sync): "
+          f"{'OK' if ok else 'FAIL'}")
     emit_rows("replay", [{
         "bench": "replay", "scene": args.scene, "size": args.size,
         "poses": args.poses, "laps": args.laps,
@@ -164,6 +205,23 @@ def run_replay(args):
         "mean_psnr_reuse": float(np.mean(psnrs_r)),
         "mean_psnr_no_reuse": float(np.mean(psnrs_p)),
         "max_abs_psnr_delta": max_delta, "ok": ok,
+    }, {
+        "bench": "replay_admission", "scene": args.scene, "size": args.size,
+        "poses": args.poses, "laps": args.laps,
+        "full_hit_frames": len(full_hits),
+        "full_hit_zero_probe": full_hit_zero_probe,
+        "probe_hits": st_r["probe_hits"],
+        "probe_misses": st_r["probe_misses"],
+        "probe_skips": st_r["probe_skips"],
+        "admissions": st_r["admissions"],
+        "counters_ok": counters_ok,
+        "misprepares": st_r["misprepares"],
+        "admission_stall_p99_ms_prefetch": p99_r,
+        "admission_stall_p99_ms_sync": p99_s,
+        "admission_ok": admission_ok,
+        "prefetch_identical": prefetch_identical,
+        "ok": (full_hit_zero_probe and counters_ok and admission_ok
+               and prefetch_identical),
     }])
     return ok
 
@@ -254,6 +312,14 @@ def run_sweep(args):
 
 # --------------------------------------------------------------- latency
 def run_latency(args):
+    """p50/p99 per-frame latency vs slot count and prefetch depth.
+
+    latency_s is END-TO-END under the double-buffered admission path:
+    queue wait + admission (probe/warp) + march, clocked from render()
+    entry — so deeper queues legitimately show longer tails.  The
+    admission-stall percentiles isolate the blocking Stage-B commit the
+    prefetch is meant to shrink.
+    """
     flds = {s: fields.analytic_field_fns(scene.make_scene(s))
             for s in ("mic", "hotdog")}
     acfg = make_acfg()
@@ -262,26 +328,36 @@ def run_latency(args):
     print(f"== multi-client latency: {frames} frames "
           f"(2 scenes interleaved), {args.size}x{args.size} ==")
     for slots in (1, 2, 4, 8):
-        rcfg = RenderServeConfig(slots=slots, blocks_per_batch=16,
-                                 reuse=ProbeReuseConfig(refresh_every=0))
-        reqs = [RenderRequest(
-            rid=i, scene=("mic", "hotdog")[i % 2],
-            cam=scene.look_at_camera(args.size, args.size,
-                                     theta=0.6 + 0.01 * (i // 2), phi=0.5))
-            for i in range(frames)]
-        done, dt, eng = run_engine(flds, acfg, rcfg, reqs)
-        lat_ms = np.asarray([r.latency_s for r in done]) * 1e3
-        row = {
-            "bench": "latency_vs_slots", "size": args.size,
-            "frames": frames, "slots": slots,
-            "p50_ms": float(np.percentile(lat_ms, 50)),
-            "p99_ms": float(np.percentile(lat_ms, 99)),
-            "mean_ms": float(lat_ms.mean()),
-            "fps": len(done) / dt,
-        }
-        rows.append(row)
-        print(f"  slots {slots}: p50 {row['p50_ms']:7.1f} ms  "
-              f"p99 {row['p99_ms']:7.1f} ms  fps {row['fps']:5.2f}")
+        for prefetch in (0, 2):
+            rcfg = RenderServeConfig(slots=slots, blocks_per_batch=16,
+                                     reuse=ProbeReuseConfig(refresh_every=0),
+                                     prefetch=prefetch)
+            reqs = [RenderRequest(
+                rid=i, scene=("mic", "hotdog")[i % 2],
+                cam=scene.look_at_camera(args.size, args.size,
+                                         theta=0.6 + 0.01 * (i // 2),
+                                         phi=0.5))
+                for i in range(frames)]
+            done, dt, eng = run_engine(flds, acfg, rcfg, reqs)
+            lat_ms = np.asarray([r.latency_s for r in done]) * 1e3
+            stall_ms = np.asarray(
+                [r.stats["admit_stall_s"] for r in done]) * 1e3
+            row = {
+                "bench": "latency_vs_slots", "size": args.size,
+                "frames": frames, "slots": slots, "prefetch": prefetch,
+                "p50_ms": float(np.percentile(lat_ms, 50)),
+                "p99_ms": float(np.percentile(lat_ms, 99)),
+                "mean_ms": float(lat_ms.mean()),
+                "admission_stall_p50_ms": float(np.percentile(stall_ms, 50)),
+                "admission_stall_p99_ms": float(np.percentile(stall_ms, 99)),
+                "fps": len(done) / dt,
+            }
+            rows.append(row)
+            print(f"  slots {slots} prefetch {prefetch}: "
+                  f"p50 {row['p50_ms']:7.1f} ms  "
+                  f"p99 {row['p99_ms']:7.1f} ms  "
+                  f"admit p99 {row['admission_stall_p99_ms']:6.1f} ms  "
+                  f"fps {row['fps']:5.2f}")
     emit_rows("latency", rows)
     return True
 

@@ -87,7 +87,8 @@ def main():
           f"{'rays':>11} {'samples':>9}")
     per_scene = {s: 0 for s in args.scenes}
     for r in sorted(done, key=lambda r: r.rid):
-        tag = "reused" if r.stats["probe_reused"] else "probed"
+        tag = ("skipped" if r.stats["probe_skipped"]
+               else "reused" if r.stats["probe_reused"] else "probed")
         rtag = "warped" if r.stats["radiance_reused"] else "marched"
         rays = f"{r.stats['rays_marched']}/{r.stats['rays_total']}"
         print(f"{r.rid:>5} {r.scene:>8} {tag:>7} {rtag:>7} {rays:>11} "
@@ -100,7 +101,8 @@ def main():
     print(f"\n[engine] {st['frames']} frames in {dt:.2f}s = "
           f"{st['frames']/dt:.2f} fps aggregate")
     print(f"  reused-probe fraction {st['reused_probe_fraction']:.2f} "
-          f"({st['probe_hits']} hits, {st['probe_misses']} probes, "
+          f"({st['probe_hits']} hits, {st['probe_skips']} skips, "
+          f"{st['probe_misses']} probes, "
           f"{st['probe_refreshes']} refreshes)")
     print(f"  reused-radiance fraction {st['reused_radiance_fraction']:.2f}, "
           f"rays marched {100 * st['rays_marched_fraction']:.1f}% of total")

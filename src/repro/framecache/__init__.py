@@ -9,10 +9,13 @@ Three reuse tiers (README.md in this package):
      poses; only disoccluded rays re-march).
 warp.py holds the shared depth-guided reprojection primitive.
 """
-from .probe import (ProbeCache, ProbeMaps, ProbeReuseConfig,  # noqa: F401
-                    cached_probe_maps, probe_phase_cached)
-from .radiance import (RadianceCache, RadianceReuseConfig,  # noqa: F401
-                       WarpedRadiance)
+from .probe import (ProbeCache, ProbeMaps, ProbePlan,  # noqa: F401
+                    ProbeReuseConfig, cached_probe_maps,
+                    commit_probe_plan, execute_probe_plan, plan_probe,
+                    probe_phase_cached)
+from .radiance import (RadianceCache, RadiancePlan,  # noqa: F401
+                       RadianceReuseConfig, WarpedRadiance,
+                       commit_lookup, plan_lookup)
 from .render import (FrameCache, make_frame_cache,  # noqa: F401
                      render_asdr_image_cached)
 from . import warp  # noqa: F401

@@ -89,6 +89,7 @@ class _ProbeEntry:
     reuses_since_probe: int = 0
     last_used: int = 0
     seq: int = 0              # insertion order — eviction tie-break
+    version: int = 0          # bumped on rebase — invalidates prepared plans
 
 
 class ProbeCache(PoseKeyedCache):
@@ -101,6 +102,31 @@ class ProbeCache(PoseKeyedCache):
 
     def __init__(self, rcfg: ProbeReuseConfig | None = None):
         super().__init__(rcfg or ProbeReuseConfig())
+        # admissions that consumed NO probe maps (full radiance hit
+        # upstream): they are neither hits nor misses — the maps were
+        # never needed — and MUST NOT age any entry (see note_skip)
+        self.skips = 0
+
+    def note_skip(self):
+        """Record an admission that skipped Phase I entirely.
+
+        A full radiance hit delivers the frame before the probe would
+        run, so the admission consumes no count/opacity maps.  Counting
+        it as a hit would age the matched entry (``reuses_since_probe``)
+        and eventually force a refresh probe for maps nobody reads;
+        counting it as a miss would run that probe immediately.  The skip
+        is its own ledger line: the staleness bound stays "at most
+        ``refresh_every`` CONSUMED reuses between probes", and
+        ``hits + misses + skips`` equals admissions exactly.
+        """
+        self.skips += 1
+
+    @property
+    def no_probe_fraction(self) -> float:
+        """Fraction of admissions that paid zero probe samples (hits via
+        reuse plus full-radiance-hit skips) — the replay gate metric."""
+        total = self.hits + self.misses + self.skips
+        return (self.hits + self.skips) / total if total else 0.0
 
     def _entry_nbytes(self, entry) -> int:
         m = entry.maps
@@ -114,6 +140,7 @@ class ProbeCache(PoseKeyedCache):
             replacing.maps = maps
             replacing.reuses_since_probe = 0
             replacing.last_used = clock
+            replacing.version += 1
             return
         self._append_with_eviction(_ProbeEntry(cam, acfg, maps,
                                                last_used=clock))
@@ -143,6 +170,117 @@ def _warped_maps(entry: _ProbeEntry, cam, acfg: ASDRConfig,
     return ProbeMaps(counts, opacity, depth, 0)
 
 
+# --------------------------------------------------------------- planning
+#
+# Phase I is split into three stages so the serving engine can speculate
+# it ahead of need (double-buffered admission) without committing cache
+# state it may have to revise:
+#
+#   plan_probe    — PURE decision against a snapshot of the cache;
+#   execute_plan  — PURE device work (fresh probe / warp / dilate);
+#   commit_plan   — the ONLY mutating stage (counters, stores, aging).
+#
+# A prepared (plan, maps) pair is valid for reuse iff the plan's
+# ``basis`` — a fingerprint of every input the execution reads — still
+# matches a freshly computed plan at commit time.  Fresh and refresh
+# probes share the basis ``("probe",)``: both execute the same
+# _fresh_probe(fns, acfg, cam, key), so speculated fresh maps survive a
+# decision flip between them.  ``cached_probe_maps`` chains the three
+# stages and is bit-identical to the pre-split single call.
+
+@dataclasses.dataclass
+class ProbePlan:
+    """A pure Phase-I admission decision.
+
+    kind: "fresh" (no usable entry), "reuse" (serve from ``entry`` in
+    ``mode`` exact/warp/dilate), or "refresh" (entry matched but stale or
+    past the dilation cap — probe now and rebase it).
+    """
+    kind: str
+    entry: object | None = None
+    mode: str = "probe"        # reuse flavor: "exact" | "warp" | "dilate"
+    radius: int = 0            # dilate-mode dilation radius
+    basis: tuple = ("probe",)  # fingerprint of the inputs execution reads
+
+
+def plan_probe(cache: ProbeCache | None, cam, acfg: ASDRConfig) -> ProbePlan:
+    """Decide how this admission gets its Phase-I maps.  Pure: reads the
+    cache, mutates nothing — safe to run speculatively and re-run at
+    commit time to revalidate a prepared plan."""
+    if cache is None:
+        return ProbePlan("fresh")
+    match = cache._match(cam, acfg)
+    if match is None:
+        return ProbePlan("fresh")
+    entry, ang, tr = match
+    rcfg = cache.rcfg
+    k = rcfg.refresh_every
+    stale = k > 0 and entry.reuses_since_probe >= k
+    # worst-case pixel displacement of the delta (margin 1.0 = the
+    # true bound): 0 means no content crossed a pixel boundary and
+    # the maps transfer bit-exactly, warp or no warp
+    shift = adaptive.reuse_dilation_radius(cam, ang, tr, scene.NEAR,
+                                           margin=1.0)
+    if rcfg.warp:
+        usable, radius = not stale, 0
+    else:
+        radius = adaptive.reuse_dilation_radius(
+            cam, ang, tr, scene.NEAR, margin=rcfg.dilate_margin,
+        ) if rcfg.dilate_margin > 0 else 0
+        usable = radius <= rcfg.dilate_cap and not stale
+    if not usable:
+        # re-probe at the CURRENT pose and rebase the entry: either a
+        # scheduled refresh (k-th consumed reuse) or — in dilation mode —
+        # a pose delta whose conservative radius overflows dilate_cap
+        return ProbePlan("refresh", entry)
+    mode = "exact" if shift == 0 else ("warp" if rcfg.warp else "dilate")
+    return ProbePlan("reuse", entry, mode, radius,
+                     basis=(mode, id(entry), entry.version, radius))
+
+
+def execute_probe_plan(fns: FieldFns, acfg: ASDRConfig, cam,
+                       plan: ProbePlan, probe_key=None,
+                       rcfg: ProbeReuseConfig | None = None) -> ProbeMaps:
+    """Run the device work the plan calls for.  Pure — dispatchable while
+    an earlier march is still in flight."""
+    if plan.kind in ("fresh", "refresh"):
+        return _fresh_probe(fns, acfg, cam, probe_key)
+    entry = plan.entry
+    if plan.mode == "exact":
+        return dataclasses.replace(entry.maps, cost=0)
+    if plan.mode == "warp":
+        return _warped_maps(entry, cam, acfg, rcfg)
+    counts = adaptive.dilate_count_map(
+        entry.maps.counts, (cam.height, cam.width), plan.radius,
+        border_fill=acfg.ns_full)
+    # depth=None: the entry's depth is in the CACHED pose's pixel
+    # grid and this mode (by definition) does not warp — see
+    # ProbeMaps docstring
+    return ProbeMaps(counts, entry.maps.opacity, None, 0)
+
+
+def commit_probe_plan(cache: ProbeCache | None, cam, acfg: ASDRConfig,
+                      plan: ProbePlan, maps: ProbeMaps) -> bool:
+    """Apply the plan's bookkeeping; returns reused.  The only stage that
+    mutates the cache, so all aging/stores happen at one deterministic
+    point (admission) regardless of how early the maps were computed."""
+    if cache is None:
+        return False
+    if plan.kind == "reuse":
+        cache.hits += 1
+        plan.entry.reuses_since_probe += 1
+        plan.entry.last_used = cache._tick()
+        return True
+    if plan.kind == "refresh":
+        cache.refreshes += 1
+        cache.misses += 1
+        cache._store(cam, acfg, maps, replacing=plan.entry)
+        return False
+    cache.misses += 1
+    cache._store(cam, acfg, maps)
+    return False
+
+
 def cached_probe_maps(fns: FieldFns, acfg: ASDRConfig, cam,
                       cache: ProbeCache | None, probe_key=None):
     """Phase I with cross-frame reuse: returns (ProbeMaps, reused: bool).
@@ -150,54 +288,15 @@ def cached_probe_maps(fns: FieldFns, acfg: ASDRConfig, cam,
     maps.cost is 0 on a cache hit — the whole point: a reused frame pays
     only Phase II.  Opacity/depth are always produced so the serving
     engine can sort pooled blocks and feed the radiance cache.
+    Plan + execute + commit in one synchronous step — the sequential
+    path; the serving engine drives the stages separately to overlap
+    execution with the pooled march.
     """
-    if cache is None:
-        return _fresh_probe(fns, acfg, cam, probe_key), False
-    match = cache._match(cam, acfg)
-    if match is not None:
-        entry, ang, tr = match
-        rcfg = cache.rcfg
-        k = rcfg.refresh_every
-        stale = k > 0 and entry.reuses_since_probe >= k
-        # worst-case pixel displacement of the delta (margin 1.0 = the
-        # true bound): 0 means no content crossed a pixel boundary and
-        # the maps transfer bit-exactly, warp or no warp
-        shift = adaptive.reuse_dilation_radius(cam, ang, tr, scene.NEAR,
-                                               margin=1.0)
-        if rcfg.warp:
-            usable = not stale
-        else:
-            radius = adaptive.reuse_dilation_radius(
-                cam, ang, tr, scene.NEAR, margin=rcfg.dilate_margin,
-            ) if rcfg.dilate_margin > 0 else 0
-            usable = radius <= rcfg.dilate_cap and not stale
-        if usable:
-            cache.hits += 1
-            entry.reuses_since_probe += 1
-            entry.last_used = cache._tick()
-            if shift == 0:
-                return dataclasses.replace(entry.maps, cost=0), True
-            if rcfg.warp:
-                return _warped_maps(entry, cam, acfg, rcfg), True
-            counts = adaptive.dilate_count_map(
-                entry.maps.counts, (cam.height, cam.width), radius,
-                border_fill=acfg.ns_full)
-            # depth=None: the entry's depth is in the CACHED pose's pixel
-            # grid and this mode (by definition) does not warp — see
-            # ProbeMaps docstring
-            return ProbeMaps(counts, entry.maps.opacity, None, 0), True
-        # re-probe at the CURRENT pose and rebase the entry: either a
-        # scheduled refresh (k-th reuse) or — in dilation mode — a pose
-        # delta whose conservative radius overflows dilate_cap
-        maps = _fresh_probe(fns, acfg, cam, probe_key)
-        cache.refreshes += 1
-        cache.misses += 1
-        cache._store(cam, acfg, maps, replacing=entry)
-        return maps, False
-    maps = _fresh_probe(fns, acfg, cam, probe_key)
-    cache.misses += 1
-    cache._store(cam, acfg, maps)
-    return maps, False
+    plan = plan_probe(cache, cam, acfg)
+    maps = execute_probe_plan(fns, acfg, cam, plan, probe_key,
+                              rcfg=cache.rcfg if cache is not None else None)
+    reused = commit_probe_plan(cache, cam, acfg, plan, maps)
+    return maps, reused
 
 
 def probe_phase_cached(fns: FieldFns, acfg: ASDRConfig, cam,

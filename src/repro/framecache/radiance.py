@@ -65,6 +65,12 @@ class WarpedRadiance:
     valid: np.ndarray      # (H*W,) bool, host-side — drives ray selection
     valid_fraction: float
 
+    @property
+    def full_hit(self) -> bool:
+        """Every pixel valid: the frame is delivered entirely from the
+        warp — zero rays march, and Phase I can be skipped outright."""
+        return bool(self.valid.all())
+
 
 @dataclasses.dataclass
 class _RadianceEntry:
@@ -76,6 +82,7 @@ class _RadianceEntry:
     reuses_since_render: int = 0
     last_used: int = 0
     seq: int = 0              # insertion order — eviction tie-break
+    version: int = 0          # bumped on rebase — invalidates prepared plans
 
 
 class RadianceCache(PoseKeyedCache):
@@ -96,37 +103,12 @@ class RadianceCache(PoseKeyedCache):
         """Warped cached frame for this pose, or None (= render fully).
 
         A None return already counted as a miss; the caller should render
-        the frame normally and hand it back via ``store``.
+        the frame normally and hand it back via ``store``.  Plan + commit
+        in one synchronous step — the sequential path; the serving engine
+        drives the stages separately (plan_lookup speculatively ahead of
+        need, commit_lookup at admission).
         """
-        match = self._match(cam, acfg)
-        if match is None:
-            self.misses += 1
-            return None
-        entry, ang, tr = match
-        k = self.rcfg.refresh_every
-        if k > 0 and entry.reuses_since_render >= k:
-            self.refreshes += 1
-            self.misses += 1
-            return None
-        shift = adaptive.reuse_dilation_radius(cam, ang, tr, scene.NEAR,
-                                               margin=1.0)
-        if shift == 0:
-            rgb = entry.rgb
-            valid = np.ones((cam.height * cam.width,), bool)
-            vf = 1.0
-        else:
-            rgb, _acc, _depth, valid_j = warp_lib.warp_image(
-                entry.rgb, entry.acc, entry.depth, entry.cam, cam)
-            valid = np.asarray(valid_j)
-            vf = float(valid.mean())
-            if vf < self.rcfg.min_valid_fraction:
-                self.low_valid_misses += 1
-                self.misses += 1
-                return None
-        self.hits += 1
-        entry.reuses_since_render += 1
-        entry.last_used = self._tick()
-        return WarpedRadiance(rgb, valid, vf)
+        return commit_lookup(self, plan_lookup(self, cam, acfg))
 
     # -------------------------------------------------------------- store
     def store(self, cam, acfg: ASDRConfig, rgb, acc, depth):
@@ -140,6 +122,88 @@ class RadianceCache(PoseKeyedCache):
             entry.rgb, entry.acc, entry.depth = rgb, acc, depth
             entry.reuses_since_render = 0
             entry.last_used = clock
+            entry.version += 1
             return
         self._append_with_eviction(_RadianceEntry(cam, acfg, rgb, acc, depth,
                                                   last_used=clock))
+
+
+# --------------------------------------------------------------- planning
+#
+# The radiance lookup split the same way as framecache.probe: a PURE plan
+# stage the serving engine may run speculatively (double-buffered
+# admission), and a commit stage — the only mutating one — applied at the
+# deterministic admission point.  Unlike the probe, the warp itself is
+# part of the DECISION (the low-valid-fraction miss needs the warped
+# validity mask), so plan_lookup computes it; a prepared plan whose
+# ``basis`` still matches hands its arrays over without re-warping.
+
+@dataclasses.dataclass
+class RadiancePlan:
+    """A pure Phase-II-reuse decision.
+
+    kind "hit" carries the warped frame; kind "miss" carries the reason
+    ("no_match" | "refresh" | "low_valid") so commit books the right
+    counter.
+    """
+    kind: str
+    reason: str | None = None
+    entry: object | None = None
+    warped: WarpedRadiance | None = None
+    basis: tuple | None = None
+
+    @property
+    def full_hit(self) -> bool:
+        return self.kind == "hit" and self.warped.full_hit
+
+
+def plan_lookup(cache: RadianceCache | None, cam, acfg: ASDRConfig,
+                prepared: RadiancePlan | None = None) -> RadiancePlan:
+    """Decide (and, for hits, execute) the warp for this pose.  Pure:
+    mutates nothing — re-run at admission to revalidate, where a still-
+    matching ``prepared`` plan donates its warped arrays."""
+    if cache is None:
+        return RadiancePlan("miss", "no_match")
+    match = cache._match(cam, acfg)
+    if match is None:
+        return RadiancePlan("miss", "no_match")
+    entry, ang, tr = match
+    k = cache.rcfg.refresh_every
+    if k > 0 and entry.reuses_since_render >= k:
+        return RadiancePlan("miss", "refresh", entry)
+    shift = adaptive.reuse_dilation_radius(cam, ang, tr, scene.NEAR,
+                                           margin=1.0)
+    basis = (id(entry), entry.version, shift == 0)
+    if (prepared is not None and prepared.warped is not None
+            and prepared.basis == basis):
+        warped = prepared.warped
+    elif shift == 0:
+        warped = WarpedRadiance(
+            entry.rgb, np.ones((cam.height * cam.width,), bool), 1.0)
+    else:
+        rgb, _acc, _depth, valid_j = warp_lib.warp_image(
+            entry.rgb, entry.acc, entry.depth, entry.cam, cam)
+        valid = np.asarray(valid_j)
+        warped = WarpedRadiance(rgb, valid, float(valid.mean()))
+    if shift != 0 and warped.valid_fraction < cache.rcfg.min_valid_fraction:
+        return RadiancePlan("miss", "low_valid", entry, warped, basis)
+    return RadiancePlan("hit", None, entry, warped, basis)
+
+
+def commit_lookup(cache: RadianceCache | None,
+                  plan: RadiancePlan) -> WarpedRadiance | None:
+    """Apply the plan's bookkeeping; returns the warp to composite over
+    (None = render fully).  The only mutating stage."""
+    if cache is None:
+        return None
+    if plan.kind == "miss":
+        if plan.reason == "refresh":
+            cache.refreshes += 1
+        elif plan.reason == "low_valid":
+            cache.low_valid_misses += 1
+        cache.misses += 1
+        return None
+    cache.hits += 1
+    plan.entry.reuses_since_render += 1
+    plan.entry.last_used = cache._tick()
+    return plan.warped

@@ -76,16 +76,29 @@ def render_asdr_image_cached(fns: FieldFns, acfg: ASDRConfig, cam,
 
     Returns (image (H,W,3), stats).  With fc=None this is exactly
     ``pipeline.render_asdr_image`` (modulo the always-on opacity sort key).
-    Stats gain: probe_reused, radiance_reused, rays_marched, rays_total,
-    warp_valid_fraction, scene_block_hits, scene_block_misses.
+    Stats gain: probe_reused, probe_skipped, radiance_reused, rays_marched,
+    rays_total, warp_valid_fraction, scene_block_hits, scene_block_misses.
+
+    Same radiance-first admission ordering as the serving engine: the
+    radiance lookup runs BEFORE Phase I, and a full warp hit (every pixel
+    valid) skips the probe outright — the skip is booked explicitly on
+    the probe cache so its reuse fraction and staleness bounds stay
+    coherent (``ProbeCache.note_skip``).
     """
     H, W = cam.height, cam.width
     R = H * W
     fc = fc or FrameCache()
-    maps, probe_reused = cached_probe_maps(
-        fns, acfg, cam, fc.probe, probe_key)
-
     warped = fc.radiance.lookup(cam, acfg) if fc.radiance is not None else None
+    probe_skipped = warped is not None and warped.full_hit
+    if probe_skipped:
+        # zero disoccluded rays: nobody reads the count/opacity maps, so
+        # Phase I is pure waste — skip it without aging the probe cache
+        if fc.probe is not None:
+            fc.probe.note_skip()
+        maps, probe_reused = None, False
+    else:
+        maps, probe_reused = cached_probe_maps(
+            fns, acfg, cam, fc.probe, probe_key)
     o, d = scene.camera_rays(cam)
 
     if warped is None:
@@ -116,10 +129,16 @@ def render_asdr_image_cached(fns: FieldFns, acfg: ASDRConfig, cam,
                 fns, acfg, o_p, d_p, c_p, op_p, fc.scene, fc.scene_id)
             stats = dict(stats)
             img_flat[march_idx] = np.asarray(rgb[: march_idx.size])
+        # rays delivered straight from the warp count as REUSED compute
+        # at the fixed-march baseline rate (the baseline_samples
+        # convention) — zero-march frames must not vanish from the split
+        stats["samples_reused"] = (int(stats.get("samples_reused", 0))
+                                   + (R - march_idx.size) * acfg.ns_full)
         rays_marched, valid_fraction = int(march_idx.size), warped.valid_fraction
 
-    stats["probe_samples"] = maps.cost
+    stats["probe_samples"] = 0 if maps is None else maps.cost
     stats["probe_reused"] = probe_reused
+    stats["probe_skipped"] = probe_skipped
     stats["radiance_reused"] = warped is not None
     stats["rays_marched"] = rays_marched
     stats["rays_total"] = R

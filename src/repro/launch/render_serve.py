@@ -159,7 +159,8 @@ def _concrete(args):
         radiance=None if args.no_radiance else RadianceReuseConfig(),
         scenecache=(SceneCacheConfig(
             byte_budget=int(args.scenecache_mb * (1 << 20)))
-            if args.scenecache_mb > 0 else None)))
+            if args.scenecache_mb > 0 else None),
+        prefetch=args.prefetch))
 
     reqs = []
     for i in range(args.poses):
@@ -175,7 +176,13 @@ def _concrete(args):
     print(f"[render_serve] {len(done)} frames {args.size}x{args.size} in "
           f"{dt:.2f}s = {len(done)/dt:.2f} fps")
     print(f"  reused-probe fraction : {st['reused_probe_fraction']:.2f} "
-          f"({st['probe_hits']} hits / {st['probe_misses']} probes)")
+          f"({st['probe_hits']} hits + {st['probe_skips']} skips / "
+          f"{st['probe_misses']} probes; "
+          f"{st['full_radiance_hits']} full radiance hits)")
+    stall = np.asarray([r.stats["admit_stall_s"] for r in done]) * 1e3
+    print(f"  admission stall       : p50 {np.percentile(stall, 50):.1f} ms  "
+          f"p99 {np.percentile(stall, 99):.1f} ms "
+          f"(prefetch {args.prefetch}, {st['misprepares']} misprepares)")
     print(f"  radiance reuse        : {st['reused_radiance_fraction']:.2f} "
           f"of frames, rays marched "
           f"{100 * st['rays_marched_fraction']:.1f}% of total")
@@ -208,6 +215,9 @@ def main():
     ap.add_argument("--blocks-per-batch", type=int, default=16)
     ap.add_argument("--no-radiance", action="store_true",
                     help="disable warped-radiance reuse (probe reuse stays)")
+    ap.add_argument("--prefetch", type=int, default=2,
+                    help="Stage-A admission lookahead depth (0 = fully "
+                         "synchronous admission)")
     ap.add_argument("--scenecache-mb", type=float, default=0.0,
                     help="enable scene-space block reuse with this byte "
                          "budget in MB (0 = off)")

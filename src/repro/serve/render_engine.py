@@ -20,6 +20,15 @@ Cross-frame reuse goes through ``repro.framecache``:
     disoccluded rays and composites them over the warp — most rays skip
     the field network entirely.
 
+Admission is RADIANCE-FIRST and double-buffered: the radiance lookup
+runs before Phase I, so a full warp hit (zero disoccluded rays) skips
+the probe outright (booked via ``ProbeCache.note_skip``), and Stage A of
+admission (``_prepare`` — the plans plus their probe/warp device work)
+is speculated for queued requests while the round's march batch is in
+flight, with all cache bookkeeping committed only when a slot is
+actually consumed (``_admit``) — so rendered frames and counters are
+bit-identical at every ``RenderServeConfig.prefetch`` depth.
+
 Scene-space block reuse (``repro.scenecache``, opt-in via
 ``RenderServeConfig.scenecache`` or a shared ``SceneBlockCache`` passed
 to the constructor) sits below both: every pooled block carries a key
@@ -54,8 +63,9 @@ import numpy as np
 from ..core import pipeline, scene
 from ..core.fields import FieldFns
 from ..core.pipeline import ASDRConfig
-from ..framecache.probe import (ProbeCache, ProbeMaps, ProbeReuseConfig,
-                                cached_probe_maps)
+from ..framecache import probe as fc_probe
+from ..framecache import radiance as fc_radiance
+from ..framecache.probe import ProbeCache, ProbeMaps, ProbeReuseConfig
 from ..framecache.radiance import RadianceCache, RadianceReuseConfig
 from ..scenecache import SceneBlockCache, SceneCacheConfig
 from ..scenecache import key as scenecache_key
@@ -88,6 +98,13 @@ class RenderServeConfig:
     # that is how several engines over one scene share a single store.
     scenecache: Optional[SceneCacheConfig] = None
     probe_seed: Optional[int] = None   # None = deterministic midpoint probe
+    # Stage-A lookahead: up to this many QUEUED requests have their
+    # radiance lookup + probe speculated each round while the dispatched
+    # march is still in flight (0 = fully synchronous admission).  All
+    # cache bookkeeping commits at admission regardless, so rendered
+    # frames and counters are bit-identical at every prefetch depth —
+    # speculation only moves the device work earlier.
+    prefetch: int = 2
 
 
 @dataclasses.dataclass
@@ -100,6 +117,17 @@ class RenderRequest:
     latency_s: float = 0.0
 
 
+@dataclasses.dataclass
+class _Prepared:
+    """Stage-A speculation for one queued request (see _prepare): pure
+    plans plus their executed device work, awaiting admission commit."""
+    req: RenderRequest
+    rplan: Optional["fc_radiance.RadiancePlan"]
+    pplan: Optional["fc_probe.ProbePlan"]
+    maps: Optional[ProbeMaps]
+    prep_s: float
+
+
 class _Slot:
     """A live request: its sorted-block layout and result buffers.
 
@@ -109,17 +137,20 @@ class _Slot:
     """
 
     def __init__(self, req: RenderRequest, rays, order, budgets, pad: int,
-                 maps: ProbeMaps, reused: bool, block_size: int,
+                 maps: Optional[ProbeMaps], reused: bool, block_size: int,
                  march_idx: Optional[np.ndarray] = None,
                  base_rgb: Optional[np.ndarray] = None,
-                 warp_valid_fraction: float = 0.0):
+                 warp_valid_fraction: float = 0.0,
+                 probe_skipped: bool = False,
+                 t_enqueue: Optional[float] = None):
         self.req = req
         self.rays = rays                 # padded (origins, dirs) of marched rays
         self.order = order
         self.budgets = budgets
         self.pad = pad
-        self.maps = maps
+        self.maps = maps                 # None on a full radiance hit (skip)
         self.reused = reused
+        self.probe_skipped = probe_skipped
         self.block_size = block_size
         self.march_idx = march_idx
         self.base_rgb = base_rgb
@@ -132,7 +163,12 @@ class _Slot:
         self.cached_blocks = 0        # delivered from the scene store
         self.cached_chunks = 0
         self.pending = n_blocks
-        self.t0 = time.time()
+        # latency clock starts at ENQUEUE (render() entry), not slot
+        # construction — latency_s must cover queue wait + admission
+        # (probe/warp) + march end-to-end under the double-buffered path
+        self.t0 = time.time() if t_enqueue is None else t_enqueue
+        self.admission_s = 0.0        # total Stage-A + Stage-B work time
+        self.admit_stall_s = 0.0      # blocking Stage-B time at admission
 
     def emit_blocks(self, origins, dirs):
         """(slot, block_index, o (B,3), d (B,3), budget) work items."""
@@ -183,9 +219,16 @@ class _Slot:
             rays_marched = int(self.march_idx.size)
         req.image = img_flat.reshape(H, W, 3)
         req.latency_s = time.time() - self.t0
+        # rays delivered straight from the warp: had they marched, the
+        # fixed-budget baseline would have spent ns_full samples each —
+        # the same convention baseline_samples uses — so zero-march
+        # frames report reused compute instead of silently vanishing
+        # from the samples split
+        warp_rays = 0 if self.march_idx is None else R - rays_marched
         req.stats = {
-            "probe_samples": self.maps.cost,
+            "probe_samples": 0 if self.maps is None else self.maps.cost,
             "probe_reused": self.reused,
+            "probe_skipped": self.probe_skipped,
             "radiance_reused": self.march_idx is not None,
             "rays_marched": rays_marched,
             "rays_total": R,
@@ -198,12 +241,14 @@ class _Slot:
                 (int(self.chunks.sum()) - self.cached_chunks)
                 * self.block_size * acfg.chunk,
             "samples_reused": self.cached_chunks
-            * self.block_size * acfg.chunk,
+            * self.block_size * acfg.chunk + warp_rays * acfg.ns_full,
             "scene_block_hits": self.cached_blocks,
             # padded ray count, matching render_adaptive's stats — the
             # numerator includes the pad rays' chunks, so the denominator
             # must too or the fraction inflates (and can exceed 1.0)
             "baseline_samples": Rp * acfg.ns_full,
+            "admission_s": self.admission_s,
+            "admit_stall_s": self.admit_stall_s,
         }
         return req
 
@@ -236,6 +281,11 @@ class RenderServingEngine:
         self.rays_marched = 0
         self.rays_total = 0
         self.scene_blocks_hit = 0
+        self.admissions = 0
+        self.full_radiance_hits = 0   # admissions that skipped Phase I
+        self.misprepares = 0          # speculated Stage-A work discarded
+        self.samples_processed = 0
+        self.samples_reused = 0
 
     # ---------------------------------------------------------------- march
     def _batched_march(self, scene_id: str):
@@ -253,35 +303,131 @@ class RenderServingEngine:
         return _MARCH_CACHE[key]
 
     # ---------------------------------------------------------------- admit
-    def _admit(self, req: RenderRequest) -> _Slot:
+    #
+    # Admission is a two-stage, radiance-first pipeline:
+    #
+    #   Stage A (_prepare) — PURE speculation, run ahead of need for
+    #     queued requests while the dispatched march is in flight:
+    #     radiance plan first (warp included), and ONLY on a non-full
+    #     hit a probe plan + its device execution.  No cache mutates.
+    #   Stage B (_admit) — the scheduling round consumes a slot: every
+    #     plan is revalidated against the CURRENT cache state and the
+    #     bookkeeping commits here, so admission decisions — and hence
+    #     rendered frames and counters — are bit-identical at every
+    #     prefetch depth; a stale speculation is simply recomputed
+    #     (counted in ``misprepares``).
+    #
+    # Ordering is the bugfix: the radiance lookup runs BEFORE Phase I,
+    # so a full warp hit (zero disoccluded rays) never pays the probe it
+    # would immediately discard — the skip is booked explicitly via
+    # ProbeCache.note_skip so reuse fractions and staleness bounds stay
+    # coherent.
+
+    def _probe_key(self, req: RenderRequest):
+        return (None if self.rcfg.probe_seed is None
+                else jax.random.PRNGKey(self.rcfg.probe_seed + req.rid))
+
+    def _prepare(self, req: RenderRequest) -> "_Prepared":
+        """Stage A: speculate the admission's device work (radiance warp,
+        probe/warp maps) without touching any cache — dispatchable while
+        live requests are still marching."""
+        t0 = time.time()
+        acfg = self.acfg
+        rad = self.radiance_caches.get(req.scene)
+        rplan = (fc_radiance.plan_lookup(rad, req.cam, acfg)
+                 if rad is not None else None)
+        pplan = maps = None
+        if rplan is None or not rplan.full_hit:
+            cache = self.probe_caches.get(req.scene)
+            pplan = fc_probe.plan_probe(cache, req.cam, acfg)
+            maps = fc_probe.execute_probe_plan(
+                self.fields[req.scene], acfg, req.cam, pplan,
+                self._probe_key(req),
+                rcfg=cache.rcfg if cache is not None else None)
+        return _Prepared(req, rplan, pplan, maps, time.time() - t0)
+
+    def _admit(self, req: RenderRequest,
+               prepared: Optional["_Prepared"] = None,
+               t_enqueue: Optional[float] = None) -> _Slot:
+        """Stage B: commit the admission against current cache state."""
+        t0 = time.time()
         acfg = self.acfg
         fns = self.fields[req.scene]
-        cache = self.probe_caches.get(req.scene)
-        key = (None if self.rcfg.probe_seed is None
-               else jax.random.PRNGKey(self.rcfg.probe_seed + req.rid))
-        maps, reused = cached_probe_maps(fns, acfg, req.cam, cache, key)
-        o, d = scene.camera_rays(req.cam)
-        counts, opacity = maps.counts, maps.opacity
+        self.admissions += 1
 
+        # radiance FIRST: a full warp hit delivers without ever probing
         rad = self.radiance_caches.get(req.scene)
-        warped = rad.lookup(req.cam, acfg) if rad is not None else None
+        warped = None
+        if rad is not None:
+            sp_rplan = prepared.rplan if prepared is not None else None
+            rplan = fc_radiance.plan_lookup(rad, req.cam, acfg,
+                                            prepared=sp_rplan)
+            if (sp_rplan is not None and sp_rplan.warped is not None
+                    and sp_rplan.basis != rplan.basis):
+                # the speculated warp's source entry changed (rebase /
+                # eviction) between Stage A and admission — re-warped
+                self.misprepares += 1
+            warped = fc_radiance.commit_lookup(rad, rplan)
+
+        cache = self.probe_caches.get(req.scene)
+        probe_skipped = warped is not None and warped.full_hit
+        if probe_skipped:
+            if cache is not None:
+                cache.note_skip()
+            self.full_radiance_hits += 1
+            if prepared is not None and prepared.maps is not None:
+                # speculated a probe for a frame that turned out fully
+                # warp-served (its source finished after Stage A ran)
+                self.misprepares += 1
+            maps, reused = None, False
+        else:
+            pplan = fc_probe.plan_probe(cache, req.cam, acfg)
+            if (prepared is not None and prepared.pplan is not None
+                    and prepared.pplan.basis == pplan.basis):
+                maps = prepared.maps
+            else:
+                if prepared is not None:
+                    self.misprepares += 1
+                maps = fc_probe.execute_probe_plan(
+                    fns, acfg, req.cam, pplan, self._probe_key(req),
+                    rcfg=cache.rcfg if cache is not None else None)
+            reused = fc_probe.commit_probe_plan(cache, req.cam, acfg,
+                                                pplan, maps)
+
         march_idx = base_rgb = None
         vf = 0.0
         if warped is not None:
             march_idx = np.flatnonzero(~warped.valid)
             base_rgb = np.asarray(warped.rgb)
             vf = warped.valid_fraction
-            sel = jnp.asarray(march_idx, jnp.int32)
-            o, d = o[sel], d[sel]
-            counts, opacity = counts[sel], opacity[sel]
+        if maps is None:
+            # full radiance hit: zero blocks — finalizes on the round it
+            # was admitted, marching nothing and having probed nothing
+            rays = (jnp.zeros((0, 3)), jnp.zeros((0, 3)))
+            order = np.zeros((0,), np.int64)
+            budgets = np.zeros((0,), np.int64)
+            pad = 0
+        else:
+            o, d = scene.camera_rays(req.cam)
+            counts, opacity = maps.counts, maps.opacity
+            if march_idx is not None:
+                sel = jnp.asarray(march_idx, jnp.int32)
+                o, d = o[sel], d[sel]
+                counts, opacity = counts[sel], opacity[sel]
+            o, d, counts, opacity, pad = pipeline.pad_rays_to_blocks(
+                acfg, o, d, counts, opacity)
+            order_j, budgets_j = pipeline.block_sort(acfg, counts, opacity)
+            rays = (o, d)
+            order, budgets = np.asarray(order_j), np.asarray(budgets_j)
 
-        o, d, counts, opacity, pad = pipeline.pad_rays_to_blocks(
-            acfg, o, d, counts, opacity)
-        order, budgets = pipeline.block_sort(acfg, counts, opacity)
-        return _Slot(req, (o, d), np.asarray(order), np.asarray(budgets),
-                     pad, maps, reused, acfg.block_size,
-                     march_idx=march_idx, base_rgb=base_rgb,
-                     warp_valid_fraction=vf)
+        slot = _Slot(req, rays, order, budgets, pad, maps, reused,
+                     acfg.block_size, march_idx=march_idx, base_rgb=base_rgb,
+                     warp_valid_fraction=vf, probe_skipped=probe_skipped,
+                     t_enqueue=t_enqueue)
+        slot.admit_stall_s = time.time() - t0
+        slot.admission_s = slot.admit_stall_s + (
+            prepared.prep_s if prepared is not None else 0.0)
+        return slot
 
     def _keyed_items(self, slot: _Slot) -> List[tuple]:
         """The slot's work items, extended to (..., key, cell) — blocks
@@ -345,23 +491,35 @@ class RenderServingEngine:
         different requests of the same scene.  A radiance-warped frame
         with no disoccluded rays contributes zero blocks and finalizes on
         the round it was admitted.
+
+        Double buffering: after the round's march batch is DISPATCHED
+        (async on device) and before its outputs are fetched, Stage A
+        (_prepare) speculates the admission work of up to ``prefetch``
+        queued requests — probing/warping of queued requests overlaps
+        marching of live ones, and the slot-filling loop consumes the
+        pre-admitted work with only the commit left to do.
         """
         rcfg = self.rcfg
         B = self.acfg.block_size
+        t_enqueue = time.time()    # latency clock: queue wait counts
         queue = list(requests)
         live: List[_Slot] = []
         pool: List[tuple] = []   # undispatched (slot, bi, o, d, budget)
         done: List[RenderRequest] = []
+        ready: Dict[int, _Prepared] = {}   # id(req) -> Stage-A speculation
 
         while queue or live:
             while queue and len(live) < rcfg.slots:
-                slot = self._admit(queue.pop(0))
+                req = queue.pop(0)
+                slot = self._admit(req, prepared=ready.pop(id(req), None),
+                                   t_enqueue=t_enqueue)
                 live.append(slot)
                 pool.extend(self._keyed_items(slot))
 
             if self.scenecache is not None and pool:
                 pool = self._sweep_pool(pool)
 
+            marched = None
             if pool:
                 # one batch per round: the largest-budget scene group
                 # first, so batches stay budget-homogeneous across requests
@@ -397,11 +555,21 @@ class RenderServingEngine:
                                             (B, 1))] * n_pad)
                 budgets = jnp.asarray(
                     [it[4] for it in batch] + [1] * n_pad, jnp.int32)
-                rgb, acc, depth, chunks = march(o_b, d_b, budgets)
-                rgb = np.asarray(rgb)
-                acc = np.asarray(acc)
-                depth = np.asarray(depth)
-                chunks = np.asarray(chunks)
+                # dispatch only — device arrays are fetched after the
+                # Stage-A prefetch below has been overlapped with them
+                marched = (batch, followers, n_pad,
+                           march(o_b, d_b, budgets))
+
+            # Stage-A prefetch: speculate admissions for the queue head
+            # while the dispatched march is in flight (clamped: a
+            # negative prefetch must mean "off", not a near-full slice)
+            for req in queue[:max(rcfg.prefetch, 0)]:
+                if id(req) not in ready:
+                    ready[id(req)] = self._prepare(req)
+
+            if marched is not None:
+                batch, followers, n_pad, out = marched
+                rgb, acc, depth, chunks = (np.asarray(a) for a in out)
                 for i, it in enumerate(batch):
                     it[0].deliver(it[1], rgb[i], acc[i], depth[i], chunks[i])
                     if it[5] is not None:
@@ -429,6 +597,8 @@ class RenderServingEngine:
         self.frames += 1
         self.rays_marched += req.stats["rays_marched"]
         self.rays_total += req.stats["rays_total"]
+        self.samples_processed += req.stats["samples_processed"]
+        self.samples_reused += req.stats["samples_reused"]
         # only fully-rendered frames feed the radiance cache (framecache
         # safety invariant: warps never chain).  The stored depth is the
         # MARCH's per-ray termination depth — always pose-aligned (so even
@@ -458,11 +628,28 @@ class RenderServingEngine:
             "rays_marched_fraction": (
                 self.rays_marched / max(self.rays_total, 1)),
         }
+        out["admissions"] = self.admissions
+        out["full_radiance_hits"] = self.full_radiance_hits
+        out["misprepares"] = self.misprepares
+        out["samples_processed"] = self.samples_processed
+        out["samples_reused"] = self.samples_reused
         hits = sum(c.hits for c in self.probe_caches.values())
         misses = sum(c.misses for c in self.probe_caches.values())
+        skips = sum(c.skips for c in self.probe_caches.values())
         out["probe_hits"] = hits
         out["probe_misses"] = misses
-        out["reused_probe_fraction"] = hits / max(hits + misses, 1)
+        # skips are admissions that never needed Phase I (full radiance
+        # hit) — they paid zero probe samples, so the reuse fraction
+        # counts them with the hits; with probe reuse ENABLED,
+        # probes + skips == admissions holds as misses + hits + skips ==
+        # admissions (every admission either probed [miss/refresh],
+        # reused maps [hit], or skipped).  The ledger is the probe
+        # caches' own: with reuse=None nothing is booked and the
+        # fraction reads 0.0, not a fake 1.0 (full_radiance_hits still
+        # counts engine-wide skips in that config).
+        out["probe_skips"] = skips
+        out["reused_probe_fraction"] = (
+            (hits + skips) / max(hits + misses + skips, 1))
         out["probe_refreshes"] = sum(
             c.refreshes for c in self.probe_caches.values())
         r_hits = sum(c.hits for c in self.radiance_caches.values())

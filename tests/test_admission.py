@@ -1,0 +1,244 @@
+"""Radiance-first, double-buffered admission pipeline invariants.
+
+The ISSUE-4 test requirements: a full radiance hit skips Phase I
+bit-identically to the always-probe path, rendered frames and counters
+are deterministic across prefetch depths 0/1/2, the admission counters
+satisfy probes + skips == admissions, and the probe-skip path never ages
+probe entries (the staleness-bookkeeping regression) — plus the
+zero-march samples split and end-to-end latency coverage.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import fields, pipeline, scene
+from repro import framecache
+from repro.framecache import probe as fc_probe
+from repro.framecache import radiance as fc_radiance
+from repro.serve.render_engine import (RenderRequest, RenderServeConfig,
+                                       RenderServingEngine)
+
+ACFG = pipeline.ASDRConfig(ns_full=48, probe_stride=4, candidates=(8, 16, 32),
+                           block_size=64, chunk=16, sort_by_opacity=False)
+SIZE = 16
+R = SIZE * SIZE
+
+
+def cam_at(theta, phi=0.5):
+    return scene.look_at_camera(SIZE, SIZE, theta=theta, phi=phi)
+
+
+@pytest.fixture(scope="module")
+def flds():
+    return {"mic": fields.analytic_field_fns(scene.make_scene("mic"))}
+
+
+def reuse_config(prefetch=0, probe_refresh=0, radiance_refresh=0):
+    return RenderServeConfig(
+        slots=2, blocks_per_batch=4,
+        reuse=fc_probe.ProbeReuseConfig(refresh_every=probe_refresh),
+        radiance=fc_radiance.RadianceReuseConfig(
+            refresh_every=radiance_refresh),
+        prefetch=prefetch)
+
+
+# ------------------------------------------------------- full-hit skip-probe
+def test_full_hit_skips_probe_bit_identity(flds):
+    """A replayed pose is a full radiance hit: it must skip Phase I
+    entirely (zero probe samples) yet deliver the always-probe engine's
+    frame bit-exactly."""
+    eng = RenderServingEngine(flds, ACFG, dataclasses.replace(
+        reuse_config(), slots=1))
+    done = {r.rid: r for r in eng.render(
+        [RenderRequest(rid=i, scene="mic", cam=cam_at(0.7))
+         for i in range(3)])}
+    always = RenderServingEngine(flds, ACFG, RenderServeConfig(
+        slots=2, blocks_per_batch=4, reuse=None, radiance=None))
+    ref = always.render([RenderRequest(rid=9, scene="mic",
+                                       cam=cam_at(0.7))])[0]
+    assert not done[0].stats["probe_skipped"]
+    for rid in (1, 2):
+        st = done[rid].stats
+        assert st["probe_skipped"] and not st["probe_reused"]
+        assert st["probe_samples"] == 0 and st["rays_marched"] == 0
+        np.testing.assert_array_equal(done[rid].image, ref.image)
+    st = eng.engine_stats()
+    assert st["probe_skips"] == 2 and st["full_radiance_hits"] == 2
+    cache = eng.probe_caches["mic"]
+    assert cache.skips == 2 and cache.hits == 0 and cache.misses == 1
+
+
+def test_counter_invariant_probes_plus_skips_equal_admissions(flds):
+    """Every admission either probed (miss/refresh), reused maps (hit),
+    or skipped Phase I behind a full warp hit — the three ledgers must
+    sum to admissions exactly, at any prefetch depth."""
+    for prefetch in (0, 2):
+        eng = RenderServingEngine(flds, ACFG, reuse_config(prefetch))
+        reqs = [RenderRequest(rid=i, scene="mic",
+                              cam=cam_at(0.7 + 0.05 * (i % 3)))
+                for i in range(7)]
+        eng.render(reqs)
+        st = eng.engine_stats()
+        assert (st["probe_hits"] + st["probe_misses"] + st["probe_skips"]
+                == st["admissions"] == len(reqs))
+        cache = eng.probe_caches["mic"]
+        assert cache.skips == st["probe_skips"]
+        assert (cache.no_probe_fraction
+                == pytest.approx(st["reused_probe_fraction"]))
+
+
+# ------------------------------------------------------------- determinism
+def test_determinism_across_prefetch_depths(flds):
+    """Prefetch only moves Stage-A device work earlier: frames AND all
+    admission counters must be bit-identical at depths 0/1/2 — including
+    requests whose radiance source finishes between their speculation
+    and their admission (the revalidation path)."""
+    # poses repeat after 3 requests with slots=2, so laps 2+ requests are
+    # speculated while their lap-1 sources are still marching
+    def traj():
+        return [RenderRequest(rid=i, scene="mic",
+                              cam=cam_at(0.7 + 0.05 * (i % 3)))
+                for i in range(9)]
+
+    runs = {}
+    for prefetch in (0, 1, 2):
+        eng = RenderServingEngine(flds, ACFG, reuse_config(prefetch))
+        done = {r.rid: r for r in eng.render(traj())}
+        runs[prefetch] = (done, eng.engine_stats())
+    done0, st0 = runs[0]
+    for prefetch in (1, 2):
+        done_p, st_p = runs[prefetch]
+        for rid in done0:
+            np.testing.assert_array_equal(done0[rid].image, done_p[rid].image)
+            assert (done0[rid].stats["probe_skipped"]
+                    == done_p[rid].stats["probe_skipped"])
+            assert (done0[rid].stats["rays_marched"]
+                    == done_p[rid].stats["rays_marched"])
+        for key in ("admissions", "probe_hits", "probe_misses", "probe_skips",
+                    "full_radiance_hits", "rays_marched", "samples_processed",
+                    "samples_reused", "probe_refreshes"):
+            assert st0[key] == st_p[key], (key, st0[key], st_p[key])
+    # the synchronous run never speculates, so it can never misprepare
+    assert st0["misprepares"] == 0
+
+
+def test_prefetch_speculation_is_used_on_fresh_trajectories(flds):
+    """On a trajectory of distinct fresh poses the speculated probes must
+    survive revalidation (fresh plans share the ("probe",) basis), not be
+    recomputed at admission."""
+    eng = RenderServingEngine(flds, ACFG, RenderServeConfig(
+        slots=2, blocks_per_batch=4,
+        reuse=fc_probe.ProbeReuseConfig(max_angle_deg=0.01,
+                                        max_translation=1e-4),
+        radiance=None, prefetch=2))
+    reqs = [RenderRequest(rid=i, scene="mic", cam=cam_at(0.6 + 0.1 * i))
+            for i in range(6)]
+    done = eng.render(reqs)
+    assert len(done) == 6
+    assert eng.engine_stats()["misprepares"] == 0
+
+
+def test_no_probe_cache_does_not_fake_reuse_fraction(flds):
+    """With probe reuse DISABLED but radiance on, every miss frame pays a
+    full fresh probe — reused_probe_fraction must read 0.0 (the probe
+    ledger is the caches' own, and there is no cache), not 1.0 off
+    engine-side skip counts; full_radiance_hits still records the skips."""
+    eng = RenderServingEngine(flds, ACFG, RenderServeConfig(
+        slots=1, blocks_per_batch=4, reuse=None,
+        radiance=fc_radiance.RadianceReuseConfig(refresh_every=0)))
+    done = {r.rid: r for r in eng.render(
+        [RenderRequest(rid=i, scene="mic", cam=cam_at(0.7))
+         for i in range(3)])}
+    st = eng.engine_stats()
+    assert st["probe_hits"] == st["probe_misses"] == st["probe_skips"] == 0
+    assert st["reused_probe_fraction"] == 0.0
+    assert st["full_radiance_hits"] == 2
+    assert done[1].stats["probe_skipped"] and done[2].stats["probe_skipped"]
+
+
+# ------------------------------------------------- skip-aware staleness
+def test_probe_skips_do_not_age_entries_or_force_refreshes(flds):
+    """Regression: full-radiance-hit frames used to count as probe-cache
+    hits, aging the entry and periodically paying a FULL refresh probe
+    for maps nobody reads.  Skips must leave refreshes and entry age
+    untouched."""
+    eng = RenderServingEngine(flds, ACFG, dataclasses.replace(
+        reuse_config(probe_refresh=2), slots=1))
+    eng.render([RenderRequest(rid=i, scene="mic", cam=cam_at(0.7))
+                for i in range(6)])
+    cache = eng.probe_caches["mic"]
+    # rid 0: fresh probe; rids 1-5: full radiance hits -> skips only
+    assert cache.misses == 1 and cache.skips == 5 and cache.hits == 0
+    assert cache.refreshes == 0, "skip path paid a refresh probe"
+    assert cache._entries[0].reuses_since_probe == 0, \
+        "skip path aged the probe entry"
+
+
+def test_staleness_still_enforced_on_consumed_reuses(flds):
+    """Skips must not weaken the real bound: once maps ARE consumed
+    (partial hits), refresh_every still forces a re-probe on schedule."""
+    fns = flds["mic"]
+    cache = fc_probe.ProbeCache(fc_probe.ProbeReuseConfig(refresh_every=2))
+    fc_probe.cached_probe_maps(fns, ACFG, cam_at(0.7), cache)   # miss
+    cache.note_skip()                                           # full hit
+    cache.note_skip()
+    assert cache._entries[0].reuses_since_probe == 0
+    for _ in range(2):                                          # consumed
+        _, reused = fc_probe.cached_probe_maps(fns, ACFG, cam_at(0.7), cache)
+        assert reused
+    _, reused = fc_probe.cached_probe_maps(fns, ACFG, cam_at(0.7), cache)
+    assert not reused and cache.refreshes == 1                  # k-th reuse
+
+
+def test_single_image_path_skips_probe_on_full_hit(flds):
+    """framecache.render_asdr_image_cached gets the same radiance-first
+    ordering as the engine."""
+    fns = flds["mic"]
+    fc = framecache.make_frame_cache(
+        probe_cfg=fc_probe.ProbeReuseConfig(refresh_every=2),
+        radiance_cfg=fc_radiance.RadianceReuseConfig(refresh_every=0))
+    img1, st1 = framecache.render_asdr_image_cached(fns, ACFG, cam_at(0.7), fc)
+    img2, st2 = framecache.render_asdr_image_cached(fns, ACFG, cam_at(0.7), fc)
+    assert not st1["probe_skipped"] and st2["probe_skipped"]
+    assert st2["probe_samples"] == 0 and st2["rays_marched"] == 0
+    assert st2["samples_reused"] == R * ACFG.ns_full
+    np.testing.assert_array_equal(img1, img2)
+    assert fc.probe.skips == 1 and fc.probe.hits == 0
+    assert fc.probe._entries[0].reuses_since_probe == 0
+
+
+# ----------------------------------------------------- stats and latency
+def test_zero_march_frames_report_samples_reused(flds):
+    """Satellite: a full-radiance-hit frame spends nothing and reuses
+    everything — samples_processed 0, samples_reused at the baseline
+    rate — and engine_stats aggregates the split."""
+    eng = RenderServingEngine(flds, ACFG, dataclasses.replace(
+        reuse_config(), slots=1))
+    done = {r.rid: r for r in eng.render(
+        [RenderRequest(rid=i, scene="mic", cam=cam_at(0.7))
+         for i in range(2)])}
+    st0, st1 = done[0].stats, done[1].stats
+    assert st0["samples_reused"] == 0 and st0["samples_processed"] > 0
+    assert st1["samples_processed"] == 0
+    assert st1["samples_reused"] == R * ACFG.ns_full
+    agg = eng.engine_stats()
+    assert agg["samples_processed"] == st0["samples_processed"]
+    assert agg["samples_reused"] == st1["samples_reused"]
+
+
+def test_latency_covers_queue_wait_and_admission(flds):
+    """latency_s must run from render() entry (queue wait included): with
+    one slot, the second request's latency strictly contains the first
+    request's march."""
+    eng = RenderServingEngine(flds, ACFG, RenderServeConfig(
+        slots=1, blocks_per_batch=4, reuse=None, radiance=None))
+    # warm the march cache so latency is march time, not compile time
+    eng.render([RenderRequest(rid=9, scene="mic", cam=cam_at(0.9))])
+    done = {r.rid: r for r in eng.render(
+        [RenderRequest(rid=0, scene="mic", cam=cam_at(0.7)),
+         RenderRequest(rid=1, scene="mic", cam=cam_at(0.8))])}
+    assert done[1].latency_s > done[0].latency_s
+    for r in done.values():
+        assert r.latency_s >= r.stats["admission_s"] >= 0.0
+        assert r.stats["admission_s"] >= r.stats["admit_stall_s"] >= 0.0

@@ -1,4 +1,13 @@
-"""Serving engine: batched generation, greedy rollout correctness."""
+"""Serving engine: batched generation, greedy rollout correctness.
+
+Two tiers (ROADMAP item — rejoin the fast tier):
+
+  * fast (default run) — a micro LM config compiled in a few seconds
+    exercises the full slot/prefill/decode machinery on every push;
+  * slow (nightly ``make test-full``) — the same assertions against the
+    minitron smoke config, whose heavier prefill+decode compile is what
+    exiled this file from the fast tier in the first place.
+"""
 import dataclasses
 
 import jax
@@ -8,25 +17,39 @@ import pytest
 
 import repro.configs as configs
 from repro.models import lm, transformer as tfm
+from repro.models.config import ModelConfig
 from repro.serve.engine import Request, ServeConfig, ServingEngine
 
-# Full LM prefill+decode rollouts — heavy compile; the fast tier covers
-# serving via tests/test_render_serve.py (same slot/pool machinery).
-pytestmark = pytest.mark.slow
+# small enough to compile prefill + per-length forward rollouts in
+# seconds on CPU, big enough to have real heads/GQA/gating
+MICRO = ModelConfig(
+    name="serve-micro", family="dense",
+    n_layers=2, d_model=32, n_heads=2, n_kv_heads=1, head_dim=16,
+    d_ff=64, vocab=64,
+    act="silu", tie_embeddings=False, dtype="float32",
+)
 
 
-@pytest.fixture(scope="module")
-def engine():
-    cfg = dataclasses.replace(configs.get_smoke("minitron-8b"),
-                              dtype="float32")
+def _build_engine(cfg):
     api = lm.build(cfg, remat_policy=None)
     values = api.init(jax.random.PRNGKey(0))
     eng = ServingEngine(api, values, ServeConfig(max_seq=64, slots=2))
     return cfg, api, values, eng
 
 
-def test_batched_generation_completes(engine):
-    cfg, api, values, eng = engine
+@pytest.fixture(scope="module")
+def engine():
+    return _build_engine(MICRO)
+
+
+@pytest.fixture(scope="module")
+def engine_smoke():
+    return _build_engine(dataclasses.replace(
+        configs.get_smoke("minitron-8b"), dtype="float32"))
+
+
+def check_batched_generation_completes(built):
+    cfg, api, values, eng = built
     rng = np.random.default_rng(0)
     reqs = [Request(rid=i, prompt=rng.integers(0, cfg.vocab, size=8),
                     max_new=6) for i in range(5)]
@@ -37,10 +60,10 @@ def test_batched_generation_completes(engine):
         assert (r.out >= 0).all() and (r.out < cfg.vocab).all()
 
 
-def test_greedy_decode_matches_forward_rollout(engine):
+def check_greedy_decode_matches_forward_rollout(built):
     """Engine's greedy generation must equal argmax rollout through the
     full forward pass (teacher-forcing the generated tokens)."""
-    cfg, api, values, eng = engine
+    cfg, api, values, eng = built
     prompt = np.asarray([5, 9, 2, 7], dtype=np.int32)
     req = Request(rid=0, prompt=prompt, max_new=5)
     eng.generate([req])
@@ -52,3 +75,23 @@ def test_greedy_decode_matches_forward_rollout(engine):
         toks.append(int(jnp.argmax(logits[0, -1])))
     want = np.asarray(toks[len(prompt):])
     np.testing.assert_array_equal(req.out, want)
+
+
+# ------------------------------------------------------------- fast tier
+def test_batched_generation_completes(engine):
+    check_batched_generation_completes(engine)
+
+
+def test_greedy_decode_matches_forward_rollout(engine):
+    check_greedy_decode_matches_forward_rollout(engine)
+
+
+# ---------------------------------------------------- nightly (test-full)
+@pytest.mark.slow
+def test_batched_generation_completes_smoke_config(engine_smoke):
+    check_batched_generation_completes(engine_smoke)
+
+
+@pytest.mark.slow
+def test_greedy_decode_matches_forward_rollout_smoke_config(engine_smoke):
+    check_greedy_decode_matches_forward_rollout(engine_smoke)
