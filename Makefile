@@ -5,8 +5,8 @@ PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test test-full lint bench-serve bench-serve-sweep \
-        bench-serve-latency bench-scenecache bench-scenecache-budgets \
-        dryrun-serve
+        bench-serve-latency bench-serve-workers bench-scenecache \
+        bench-scenecache-budgets dryrun-serve
 
 test:
 	$(PY) -m pytest -x -q
@@ -15,9 +15,11 @@ test-full:
 	$(PY) -m pytest -m "" -q
 
 # ruff > pyflakes > the ast-based fallback in tools/lint.py (this
-# container bakes in neither linter; CI installs ruff)
+# container bakes in neither linter; CI installs ruff), plus the
+# file-size budget check (the serve facade must stay a thin loop)
 lint:
 	$(PY) tools/lint.py src tests benchmarks examples tools
+	$(PY) tools/check_sizes.py
 
 bench-serve:
 	$(PY) benchmarks/render_serve.py
@@ -27,6 +29,9 @@ bench-serve-sweep:
 
 bench-serve-latency:
 	$(PY) benchmarks/render_serve.py --latency
+
+bench-serve-workers:
+	$(PY) benchmarks/render_serve.py --workers
 
 bench-scenecache:
 	$(PY) benchmarks/scene_cache.py

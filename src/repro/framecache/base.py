@@ -9,8 +9,25 @@ Subclasses provide entry objects with ``cam`` / ``acfg`` / ``last_used``
 attributes and an ``rcfg`` carrying ``max_angle_deg``, ``max_translation``
 and ``max_entries``.  Host-side bookkeeping only (pure python, one lookup
 per request); the maps themselves stay on device.
+
+Thread-safety contract (the serving engine's speculative executor runs
+plan/execute stages on worker threads):
+
+  * every MUTATION of cache state — counters, the entry list, and any
+    entry field including its ``version`` stamp — happens under
+    ``self.lock``, and only the engine thread commits;
+  * plan stages acquire ``self.lock`` just long enough to match an entry
+    and SNAPSHOT everything execution will read (array refs + version);
+    execution then runs lock-free on the snapshot;
+  * entries are rebased by field REASSIGNMENT (``entry.maps = new``,
+    never in-place array mutation) with the version bump in the same
+    critical section, so a snapshot taken under the lock can never be
+    torn: its arrays and its version stamp always belong to the same
+    rebase generation.
 """
 from __future__ import annotations
+
+import threading
 
 import numpy as np
 
@@ -26,6 +43,9 @@ class PoseKeyedCache:
         self.hits = 0
         self.misses = 0
         self.refreshes = 0
+        # guards ALL mutation and the plan stages' entry-state snapshots
+        # (see module docstring).  RLock: commit paths re-enter via _store.
+        self.lock = threading.RLock()
 
     def __len__(self):
         return len(self._entries)

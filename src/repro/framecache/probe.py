@@ -119,7 +119,8 @@ class ProbeCache(PoseKeyedCache):
         ``refresh_every`` CONSUMED reuses between probes", and
         ``hits + misses + skips`` equals admissions exactly.
         """
-        self.skips += 1
+        with self.lock:
+            self.skips += 1
 
     @property
     def no_probe_fraction(self) -> float:
@@ -152,14 +153,13 @@ def _fresh_probe(fns: FieldFns, acfg: ASDRConfig, cam, probe_key) -> ProbeMaps:
     return ProbeMaps(counts, opacity, depth, cost)
 
 
-def _warped_maps(entry: _ProbeEntry, cam, acfg: ASDRConfig,
+def _warped_maps(src: ProbeMaps, src_cam, cam, acfg: ASDRConfig,
                  rcfg: ProbeReuseConfig) -> ProbeMaps:
-    """Entry's maps reprojected to the requesting pose."""
-    src = entry.maps
+    """A snapshot's maps reprojected to the requesting pose."""
     H, W = cam.height, cam.width
-    tgt, ok, dist = warp_lib.forward_warp(entry.cam, cam, src.depth)
+    tgt, ok, dist = warp_lib.forward_warp(src_cam, cam, src.depth)
     counts, _cvalid = warp_lib.warp_count_map(
-        src.counts, src.depth, entry.cam, cam, acfg.ns_full,
+        src.counts, src.depth, src_cam, cam, acfg.ns_full,
         margin=rcfg.warp_margin, projection=(tgt, ok, dist))
     sidx, valid = warp_lib.nearest_source(tgt, ok, dist, H * W)
     # disoccluded pixels: opacity 1.0 sorts them with the expensive rays
@@ -195,90 +195,104 @@ class ProbePlan:
     kind: "fresh" (no usable entry), "reuse" (serve from ``entry`` in
     ``mode`` exact/warp/dilate), or "refresh" (entry matched but stale or
     past the dilation cap — probe now and rebase it).
+
+    ``src_maps``/``src_cam`` are the entry state SNAPSHOT execution reads,
+    captured atomically under the cache lock at plan time: the live entry
+    may be rebased (fields reassigned, version bumped) by a commit on the
+    engine thread while a worker executes this plan, but the snapshot
+    stays internally consistent and the ``basis`` version stamp flags the
+    result stale at commit.
     """
     kind: str
     entry: object | None = None
     mode: str = "probe"        # reuse flavor: "exact" | "warp" | "dilate"
     radius: int = 0            # dilate-mode dilation radius
     basis: tuple = ("probe",)  # fingerprint of the inputs execution reads
+    src_maps: ProbeMaps | None = None
+    src_cam: object | None = None
 
 
 def plan_probe(cache: ProbeCache | None, cam, acfg: ASDRConfig) -> ProbePlan:
     """Decide how this admission gets its Phase-I maps.  Pure: reads the
-    cache, mutates nothing — safe to run speculatively and re-run at
-    commit time to revalidate a prepared plan."""
+    cache, mutates nothing — safe to run speculatively (from any thread)
+    and re-run at commit time to revalidate a prepared plan.  The entry
+    read is a consistent snapshot taken under the cache lock."""
     if cache is None:
         return ProbePlan("fresh")
-    match = cache._match(cam, acfg)
-    if match is None:
-        return ProbePlan("fresh")
-    entry, ang, tr = match
-    rcfg = cache.rcfg
-    k = rcfg.refresh_every
-    stale = k > 0 and entry.reuses_since_probe >= k
-    # worst-case pixel displacement of the delta (margin 1.0 = the
-    # true bound): 0 means no content crossed a pixel boundary and
-    # the maps transfer bit-exactly, warp or no warp
-    shift = adaptive.reuse_dilation_radius(cam, ang, tr, scene.NEAR,
-                                           margin=1.0)
-    if rcfg.warp:
-        usable, radius = not stale, 0
-    else:
-        radius = adaptive.reuse_dilation_radius(
-            cam, ang, tr, scene.NEAR, margin=rcfg.dilate_margin,
-        ) if rcfg.dilate_margin > 0 else 0
-        usable = radius <= rcfg.dilate_cap and not stale
-    if not usable:
-        # re-probe at the CURRENT pose and rebase the entry: either a
-        # scheduled refresh (k-th consumed reuse) or — in dilation mode —
-        # a pose delta whose conservative radius overflows dilate_cap
-        return ProbePlan("refresh", entry)
-    mode = "exact" if shift == 0 else ("warp" if rcfg.warp else "dilate")
-    return ProbePlan("reuse", entry, mode, radius,
-                     basis=(mode, id(entry), entry.version, radius))
+    with cache.lock:
+        match = cache._match(cam, acfg)
+        if match is None:
+            return ProbePlan("fresh")
+        entry, ang, tr = match
+        rcfg = cache.rcfg
+        k = rcfg.refresh_every
+        stale = k > 0 and entry.reuses_since_probe >= k
+        # worst-case pixel displacement of the delta (margin 1.0 = the
+        # true bound): 0 means no content crossed a pixel boundary and
+        # the maps transfer bit-exactly, warp or no warp
+        shift = adaptive.reuse_dilation_radius(cam, ang, tr, scene.NEAR,
+                                               margin=1.0)
+        if rcfg.warp:
+            usable, radius = not stale, 0
+        else:
+            radius = adaptive.reuse_dilation_radius(
+                cam, ang, tr, scene.NEAR, margin=rcfg.dilate_margin,
+            ) if rcfg.dilate_margin > 0 else 0
+            usable = radius <= rcfg.dilate_cap and not stale
+        if not usable:
+            # re-probe at the CURRENT pose and rebase the entry: either a
+            # scheduled refresh (k-th consumed reuse) or — in dilation
+            # mode — a pose delta whose radius overflows dilate_cap
+            return ProbePlan("refresh", entry)
+        mode = "exact" if shift == 0 else ("warp" if rcfg.warp else "dilate")
+        return ProbePlan("reuse", entry, mode, radius,
+                         basis=(mode, id(entry), entry.version, radius),
+                         src_maps=entry.maps, src_cam=entry.cam)
 
 
 def execute_probe_plan(fns: FieldFns, acfg: ASDRConfig, cam,
                        plan: ProbePlan, probe_key=None,
                        rcfg: ProbeReuseConfig | None = None) -> ProbeMaps:
-    """Run the device work the plan calls for.  Pure — dispatchable while
-    an earlier march is still in flight."""
+    """Run the device work the plan calls for.  Pure, and touches only
+    the plan's snapshot (never the live entry) — dispatchable on a worker
+    thread while an earlier march is still in flight."""
     if plan.kind in ("fresh", "refresh"):
         return _fresh_probe(fns, acfg, cam, probe_key)
-    entry = plan.entry
     if plan.mode == "exact":
-        return dataclasses.replace(entry.maps, cost=0)
+        return dataclasses.replace(plan.src_maps, cost=0)
     if plan.mode == "warp":
-        return _warped_maps(entry, cam, acfg, rcfg)
+        return _warped_maps(plan.src_maps, plan.src_cam, cam, acfg, rcfg)
     counts = adaptive.dilate_count_map(
-        entry.maps.counts, (cam.height, cam.width), plan.radius,
+        plan.src_maps.counts, (cam.height, cam.width), plan.radius,
         border_fill=acfg.ns_full)
     # depth=None: the entry's depth is in the CACHED pose's pixel
     # grid and this mode (by definition) does not warp — see
     # ProbeMaps docstring
-    return ProbeMaps(counts, entry.maps.opacity, None, 0)
+    return ProbeMaps(counts, plan.src_maps.opacity, None, 0)
 
 
 def commit_probe_plan(cache: ProbeCache | None, cam, acfg: ASDRConfig,
                       plan: ProbePlan, maps: ProbeMaps) -> bool:
     """Apply the plan's bookkeeping; returns reused.  The only stage that
     mutates the cache, so all aging/stores happen at one deterministic
-    point (admission) regardless of how early the maps were computed."""
+    point (admission, engine thread) regardless of how early — or on
+    which thread — the maps were computed."""
     if cache is None:
         return False
-    if plan.kind == "reuse":
-        cache.hits += 1
-        plan.entry.reuses_since_probe += 1
-        plan.entry.last_used = cache._tick()
-        return True
-    if plan.kind == "refresh":
-        cache.refreshes += 1
+    with cache.lock:
+        if plan.kind == "reuse":
+            cache.hits += 1
+            plan.entry.reuses_since_probe += 1
+            plan.entry.last_used = cache._tick()
+            return True
+        if plan.kind == "refresh":
+            cache.refreshes += 1
+            cache.misses += 1
+            cache._store(cam, acfg, maps, replacing=plan.entry)
+            return False
         cache.misses += 1
-        cache._store(cam, acfg, maps, replacing=plan.entry)
+        cache._store(cam, acfg, maps)
         return False
-    cache.misses += 1
-    cache._store(cam, acfg, maps)
-    return False
 
 
 def cached_probe_maps(fns: FieldFns, acfg: ASDRConfig, cam,

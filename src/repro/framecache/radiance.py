@@ -112,20 +112,26 @@ class RadianceCache(PoseKeyedCache):
 
     # -------------------------------------------------------------- store
     def store(self, cam, acfg: ASDRConfig, rgb, acc, depth):
-        """Cache a FULLY-rendered frame (never a warped composite)."""
-        clock = self._tick()
-        match = self._match(cam, acfg)
-        if match is not None:        # rebase the nearby entry (refresh)
-            entry, _, _ = match
-            entry.cam = cam
-            entry.acfg = acfg
-            entry.rgb, entry.acc, entry.depth = rgb, acc, depth
-            entry.reuses_since_render = 0
-            entry.last_used = clock
-            entry.version += 1
-            return
-        self._append_with_eviction(_RadianceEntry(cam, acfg, rgb, acc, depth,
-                                                  last_used=clock))
+        """Cache a FULLY-rendered frame (never a warped composite).
+
+        A rebase reassigns the entry's array fields and bumps its version
+        in one critical section — concurrent plan snapshots (taken under
+        the same lock) therefore always see arrays and version of ONE
+        generation (never a torn entry)."""
+        with self.lock:
+            clock = self._tick()
+            match = self._match(cam, acfg)
+            if match is not None:    # rebase the nearby entry (refresh)
+                entry, _, _ = match
+                entry.cam = cam
+                entry.acfg = acfg
+                entry.rgb, entry.acc, entry.depth = rgb, acc, depth
+                entry.reuses_since_render = 0
+                entry.last_used = clock
+                entry.version += 1
+                return
+            self._append_with_eviction(
+                _RadianceEntry(cam, acfg, rgb, acc, depth, last_used=clock))
 
 
 # --------------------------------------------------------------- planning
@@ -161,28 +167,36 @@ def plan_lookup(cache: RadianceCache | None, cam, acfg: ASDRConfig,
                 prepared: RadiancePlan | None = None) -> RadiancePlan:
     """Decide (and, for hits, execute) the warp for this pose.  Pure:
     mutates nothing — re-run at admission to revalidate, where a still-
-    matching ``prepared`` plan donates its warped arrays."""
+    matching ``prepared`` plan donates its warped arrays.
+
+    Thread contract: the entry state (arrays + version) is snapshotted
+    atomically under the cache lock; the warp itself — the expensive
+    device work — runs OUTSIDE the lock on the snapshot, so worker-thread
+    speculation never serializes against engine-thread commits."""
     if cache is None:
         return RadiancePlan("miss", "no_match")
-    match = cache._match(cam, acfg)
-    if match is None:
-        return RadiancePlan("miss", "no_match")
-    entry, ang, tr = match
-    k = cache.rcfg.refresh_every
-    if k > 0 and entry.reuses_since_render >= k:
-        return RadiancePlan("miss", "refresh", entry)
-    shift = adaptive.reuse_dilation_radius(cam, ang, tr, scene.NEAR,
-                                           margin=1.0)
-    basis = (id(entry), entry.version, shift == 0)
+    with cache.lock:
+        match = cache._match(cam, acfg)
+        if match is None:
+            return RadiancePlan("miss", "no_match")
+        entry, ang, tr = match
+        k = cache.rcfg.refresh_every
+        if k > 0 and entry.reuses_since_render >= k:
+            return RadiancePlan("miss", "refresh", entry)
+        shift = adaptive.reuse_dilation_radius(cam, ang, tr, scene.NEAR,
+                                               margin=1.0)
+        basis = (id(entry), entry.version, shift == 0)
+        src_rgb, src_acc, src_depth = entry.rgb, entry.acc, entry.depth
+        src_cam = entry.cam
     if (prepared is not None and prepared.warped is not None
             and prepared.basis == basis):
         warped = prepared.warped
     elif shift == 0:
         warped = WarpedRadiance(
-            entry.rgb, np.ones((cam.height * cam.width,), bool), 1.0)
+            src_rgb, np.ones((cam.height * cam.width,), bool), 1.0)
     else:
         rgb, _acc, _depth, valid_j = warp_lib.warp_image(
-            entry.rgb, entry.acc, entry.depth, entry.cam, cam)
+            src_rgb, src_acc, src_depth, src_cam, cam)
         valid = np.asarray(valid_j)
         warped = WarpedRadiance(rgb, valid, float(valid.mean()))
     if shift != 0 and warped.valid_fraction < cache.rcfg.min_valid_fraction:
@@ -193,17 +207,19 @@ def plan_lookup(cache: RadianceCache | None, cam, acfg: ASDRConfig,
 def commit_lookup(cache: RadianceCache | None,
                   plan: RadiancePlan) -> WarpedRadiance | None:
     """Apply the plan's bookkeeping; returns the warp to composite over
-    (None = render fully).  The only mutating stage."""
+    (None = render fully).  The only mutating stage — engine thread only,
+    under the cache lock."""
     if cache is None:
         return None
-    if plan.kind == "miss":
-        if plan.reason == "refresh":
-            cache.refreshes += 1
-        elif plan.reason == "low_valid":
-            cache.low_valid_misses += 1
-        cache.misses += 1
-        return None
-    cache.hits += 1
-    plan.entry.reuses_since_render += 1
-    plan.entry.last_used = cache._tick()
-    return plan.warped
+    with cache.lock:
+        if plan.kind == "miss":
+            if plan.reason == "refresh":
+                cache.refreshes += 1
+            elif plan.reason == "low_valid":
+                cache.low_valid_misses += 1
+            cache.misses += 1
+            return None
+        cache.hits += 1
+        plan.entry.reuses_since_render += 1
+        plan.entry.last_used = cache._tick()
+        return plan.warped

@@ -160,7 +160,7 @@ def _concrete(args):
         scenecache=(SceneCacheConfig(
             byte_budget=int(args.scenecache_mb * (1 << 20)))
             if args.scenecache_mb > 0 else None),
-        prefetch=args.prefetch))
+        prefetch=args.prefetch, workers=args.workers))
 
     reqs = []
     for i in range(args.poses):
@@ -182,7 +182,8 @@ def _concrete(args):
     stall = np.asarray([r.stats["admit_stall_s"] for r in done]) * 1e3
     print(f"  admission stall       : p50 {np.percentile(stall, 50):.1f} ms  "
           f"p99 {np.percentile(stall, 99):.1f} ms "
-          f"(prefetch {args.prefetch}, {st['misprepares']} misprepares)")
+          f"(prefetch {args.prefetch}, workers {args.workers}, "
+          f"{st['misprepares']} misprepares)")
     print(f"  radiance reuse        : {st['reused_radiance_fraction']:.2f} "
           f"of frames, rays marched "
           f"{100 * st['rays_marched_fraction']:.1f}% of total")
@@ -218,6 +219,10 @@ def main():
     ap.add_argument("--prefetch", type=int, default=2,
                     help="Stage-A admission lookahead depth (0 = fully "
                          "synchronous admission)")
+    ap.add_argument("--workers", type=int, default=0,
+                    help="Stage-A executor worker threads (0 = synchronous "
+                         "executor; N overlaps probe/warp device work with "
+                         "the in-flight march on N threads)")
     ap.add_argument("--scenecache-mb", type=float, default=0.0,
                     help="enable scene-space block reuse with this byte "
                          "budget in MB (0 = off)")

@@ -15,9 +15,14 @@ share hits and bounded memory.
               deterministic LRU;
   render.py — render_adaptive_cached, the single-image consumer
               (framecache/render.py); the serving engine pools the same
-              lookups across requests (serve/render_engine.py).
+              lookups across requests (serve/render_engine.py);
+  serial.py — stable to_bytes/from_bytes layouts for keys and entries —
+              the wire format an external/sharded multi-host store
+              exchanges (keys are stable digests, so they shard).
 """
 from .key import acfg_token, block_keys  # noqa: F401
 from .render import render_adaptive_cached  # noqa: F401
+from .serial import (entry_from_bytes, entry_to_bytes,  # noqa: F401
+                     key_from_bytes, key_to_bytes)
 from .store import (BlockOutput, SceneBlockCache,  # noqa: F401
                     SceneCacheConfig)

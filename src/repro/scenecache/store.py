@@ -156,6 +156,29 @@ class SceneBlockCache:
         self._drop_bookkeeping(e)
         self.evictions += 1
 
+    # ------------------------------------------------------ serialization
+    def dump_entry(self, key: bytes) -> Optional[bytes]:
+        """The resident entry as a stable byte record (serial.py), or
+        None if the key is not resident.  Does not count as a hit or
+        touch recency — dumping is replication, not consumption."""
+        e = self._entries.get(key)
+        if e is None:
+            return None
+        from . import serial
+        return serial.entry_to_bytes(key, e.cell, e.out)
+
+    def load_entry(self, data: bytes) -> Optional[bytes]:
+        """Insert a serialized entry (e.g. fetched from a peer shard);
+        returns its key, or None if the entry can never fit this cache's
+        byte budget (store's rejection — the caller must not assume the
+        key is resident).  Goes through ``store`` so the byte budget and
+        eviction order hold exactly as for a locally marched block."""
+        from . import serial
+        key, cell, out = serial.entry_from_bytes(data)
+        stored = self.store(key, cell, out.rgb, out.acc, out.depth,
+                            out.chunks)
+        return key if stored else None
+
     def clear(self):
         """Drop everything — required after a scene's field is retrained
         or reloaded under the same id (keys carry the scene id, not the

@@ -1,3 +1,4 @@
 from .engine import ServeConfig, ServingEngine
 from .render_engine import (RenderRequest, RenderServeConfig,
                             RenderServingEngine)
+from .executor import SyncExecutor, ThreadedExecutor, make_executor

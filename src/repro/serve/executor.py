@@ -1,0 +1,133 @@
+"""Pluggable Stage-A execution backends for the serving pipeline.
+
+The executor contract (see serve/README.md):
+
+  * ``submit(key, fn)`` — schedule ``fn()`` (a Stage-A ``prepare``
+    closure: plans + probe/warp device work + pad/sort layout) for
+    ``key``.  Idempotent: a key already submitted and not yet taken is
+    NOT resubmitted.
+  * ``take(key)`` — the finished result, blocking if still in flight;
+    None if the key was never submitted (the engine then prepares
+    inline).  Engine thread only.
+  * ``close()`` — release worker resources.
+
+Backends move WHERE and WHEN the speculation executes; they never change
+WHAT is committed — Stage B revalidates every plan against current cache
+state on the engine thread, so rendered frames and the deterministic
+counters are bit-identical across backends (gated by
+tests/test_executor.py and the ``--workers`` benchmark).
+
+``SyncExecutor`` (workers=0, the default) runs ``fn`` inline at submit
+time on the engine thread — byte-for-byte the pre-executor engine: the
+speculation overlaps only the HOST-side gap while the dispatched march
+is in flight.  ``ThreadedExecutor`` runs it on a worker pool and blocks
+each worker until the result's device buffers are READY, so probe/warp
+device time genuinely overlaps march device time and the engine thread
+never waits on speculated device work it could have overlapped.
+"""
+from __future__ import annotations
+
+import os
+import threading
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import Callable, Dict, Optional
+
+import jax
+
+
+class SyncExecutor:
+    """Inline (engine-thread) Stage-A execution — the default backend."""
+
+    workers = 0
+
+    def __init__(self):
+        self._done: Dict = {}
+
+    def submit(self, key, fn: Callable):
+        if key not in self._done:
+            self._done[key] = fn()
+
+    def take(self, key):
+        return self._done.pop(key, None)
+
+    def reset(self):
+        """Drop pending speculation (end of a render() call): results are
+        keyed by id(request), and a key must never outlive the call that
+        submitted it — a later call's request can reuse the id."""
+        self._done.clear()
+
+    def close(self):
+        self._done.clear()
+
+
+class ThreadedExecutor:
+    """Worker-thread Stage-A execution.
+
+    Workers run the prepare closure AND wait on its device buffers
+    (``block_until_ready``), so the device work completes off the engine
+    thread.  Commits still happen only on the engine thread in admission
+    order — ``take`` blocks until the worker finishes, and Stage B
+    revalidates the result, so worker scheduling can never reorder or
+    alter commits.
+
+    ``max_concurrent`` bounds how many speculations EXECUTE at once
+    (queued submissions wait on a semaphore, FIFO): worker count is an
+    API/capacity property, but useful execution concurrency is a HOST
+    property — on a 2-core CPU container, four concurrent probe/warp
+    executions would fight the in-flight march (and each other) for the
+    same ALUs and triple tail latency instead of hiding it.  The default
+    leaves one core's worth of concurrency for the engine thread + march.
+    On a multi-stream accelerator host, pass workers explicitly sized to
+    the streams and the cap follows.
+    """
+
+    def __init__(self, workers: int, max_concurrent: Optional[int] = None):
+        assert workers > 0
+        self.workers = workers
+        if max_concurrent is None:
+            max_concurrent = min(workers,
+                                 max(1, (os.cpu_count() or 2) - 1))
+        self.max_concurrent = max_concurrent
+        self._sem = threading.Semaphore(max_concurrent)
+        self._pool = ThreadPoolExecutor(
+            max_workers=workers, thread_name_prefix="serve-stage-a")
+        self._futs: Dict[object, Future] = {}
+
+    def _run(self, fn: Callable):
+        with self._sem:
+            out = fn()
+            ready = getattr(out, "block_until_ready", None)
+            if ready is not None:
+                ready()
+        return out
+
+    def submit(self, key, fn: Callable):
+        if key not in self._futs:
+            self._futs[key] = self._pool.submit(self._run, fn)
+
+    def take(self, key):
+        fut = self._futs.pop(key, None)
+        return fut.result() if fut is not None else None
+
+    def reset(self):
+        """Drop pending speculation (see SyncExecutor.reset).  Unstarted
+        futures are cancelled; running ones finish on their worker and
+        are discarded."""
+        for fut in self._futs.values():
+            fut.cancel()
+        self._futs.clear()
+
+    def close(self):
+        self._pool.shutdown(wait=False)
+        self._futs.clear()
+
+
+def make_executor(workers: int):
+    """The backend for a worker count: 0 = synchronous (bit-identical
+    default), n > 0 = a ThreadedExecutor with n workers."""
+    return ThreadedExecutor(workers) if workers > 0 else SyncExecutor()
+
+
+def block_until_ready(*arrays):
+    """Wait until every (possibly-None, possibly-host) array is ready."""
+    jax.block_until_ready([a for a in arrays if a is not None])

@@ -1,0 +1,248 @@
+"""Block pooling layer: pad/sort layouts, batching, dedup, the march cache.
+
+Owns every device SHAPE decision of the serving pipeline:
+
+  * ``build_layout`` — a request's rays padded to whole blocks and
+    budget-sorted (``pipeline.pad_rays_to_blocks`` + ``block_sort``).
+    Stage-A code: the admission layer calls it speculatively (prefetch /
+    worker threads) keyed on the plan bases, so the Stage-B commit never
+    performs pad/sort device work (``tests/test_executor.py`` instruments
+    this invariant).
+  * ``BlockPool`` — the per-``render()`` pool of undispatched blocks from
+    all live slots: scene-store admission/sweep delivery, budget-sorted
+    batch selection, in-batch key dedup, fixed-size batch padding, and
+    the dispatch/collect split the engine overlaps Stage A with.
+  * the module-level jitted-march LRU shared across engine instances.
+
+Invariant owned here: batches have a fixed block count
+(``blocks_per_batch``); the trailing partial batch is padded with
+unit-budget dummy blocks so each scene compiles exactly ONE batched
+march, and budget-descending selection keeps batches budget-homogeneous
+(what launch/render_serve.py relies on to shard a batch over the
+``data`` mesh axis without stragglers).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from functools import partial
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import pipeline, scene
+from ..scenecache import key as scenecache_key
+
+# jitted batched marches shared across engine instances: keyed by the
+# (FieldFns, ASDRConfig) pair (both hashable), so an engine restart or a
+# parallel engine over the same scene reuses the compiled executable.
+# LRU-bounded: a reloaded/retrained scene makes fresh FieldFns closures,
+# and without eviction the stale executables (and the params their
+# closures capture) would pile up for the process lifetime.
+# NOTE: the march closes over fns — fine for analytic fields (no arrays);
+# an NGP-backed production path should pass params as jit ARGS instead,
+# which is exactly what launch/render_serve.build_pooled_march_cell does.
+_MARCH_CACHE: OrderedDict = OrderedDict()
+_MARCH_CACHE_MAX = 32
+
+
+def batched_march(fns, acfg):
+    """One jitted (N, B)-block march per (field, config) — LRU-shared.
+
+    Engine thread only (the OrderedDict is not locked): executors run
+    Stage-A probe/warp work off-thread, never the pooled march."""
+    key = (fns, acfg)
+    if key not in _MARCH_CACHE:
+        march = partial(pipeline._march_block, fns, acfg)
+        _MARCH_CACHE[key] = jax.jit(
+            lambda o, d, b: jax.lax.map(lambda a: march(*a), (o, d, b)))
+        while len(_MARCH_CACHE) > _MARCH_CACHE_MAX:
+            _MARCH_CACHE.popitem(last=False)
+    _MARCH_CACHE.move_to_end(key)
+    return _MARCH_CACHE[key]
+
+
+@dataclasses.dataclass
+class BlockLayout:
+    """A request's padded, budget-sorted block geometry plus its
+    radiance-warp composition inputs — everything Stage B needs to build
+    a slot without touching device shapes.
+
+    ``march_idx`` selects the disoccluded rays the slot actually marches
+    (None = all rays); ``base_rgb`` is the warped cached frame those rays
+    composite over.  A full radiance hit has zero blocks and an empty
+    ``march_idx``.
+    """
+    rays: tuple                  # padded (origins, dirs) of marched rays
+    order: np.ndarray
+    budgets: np.ndarray
+    pad: int
+    march_idx: Optional[np.ndarray] = None
+    base_rgb: Optional[np.ndarray] = None
+    valid_fraction: float = 0.0
+
+
+def build_layout(acfg, cam, maps, warped) -> BlockLayout:
+    """Pad + budget-sort one request's marched rays (Stage-A device work).
+
+    ``maps`` None means a full radiance hit: zero blocks, the frame is
+    delivered entirely from ``warped``.  With a partial ``warped`` only
+    the disoccluded rays enter the block layout.
+    """
+    march_idx = base_rgb = None
+    vf = 0.0
+    if warped is not None:
+        march_idx = np.flatnonzero(~warped.valid)
+        base_rgb = np.asarray(warped.rgb)
+        vf = warped.valid_fraction
+    if maps is None:
+        rays = (jnp.zeros((0, 3)), jnp.zeros((0, 3)))
+        order = np.zeros((0,), np.int64)
+        budgets = np.zeros((0,), np.int64)
+        pad = 0
+    else:
+        o, d = scene.camera_rays(cam)
+        counts, opacity = maps.counts, maps.opacity
+        if march_idx is not None:
+            sel = jnp.asarray(march_idx, jnp.int32)
+            o, d = o[sel], d[sel]
+            counts, opacity = counts[sel], opacity[sel]
+        o, d, counts, opacity, pad = pipeline.pad_rays_to_blocks(
+            acfg, o, d, counts, opacity)
+        order_j, budgets_j = pipeline.block_sort(acfg, counts, opacity)
+        rays = (o, d)
+        order, budgets = np.asarray(order_j), np.asarray(budgets_j)
+    return BlockLayout(rays, order, budgets, pad, march_idx, base_rgb, vf)
+
+
+class BlockPool:
+    """The per-render() pool of undispatched blocks across live slots.
+
+    Items are (slot, block_index, o, d, budget, key, cell) tuples —
+    key/cell are None with the scene tier off, and the pooled-march path
+    is then byte-for-byte the pre-scenecache behavior.
+    """
+
+    def __init__(self, acfg, blocks_per_batch: int, scenecache, counters):
+        self.acfg = acfg
+        self.blocks_per_batch = blocks_per_batch
+        self.scenecache = scenecache
+        self.counters = counters
+        self.items: List[tuple] = []
+
+    def __len__(self) -> int:
+        return len(self.items)
+
+    # ------------------------------------------------------------ admit
+    def add_slot(self, slot):
+        """Pool a freshly admitted slot's blocks.  Blocks already
+        resident in the scene store deliver HERE (their one counted
+        lookup) and never enter the pool."""
+        items = list(slot.emit_blocks(*slot.rays))
+        if self.scenecache is None or not items:
+            self.items.extend(it + (None, None) for it in items)
+            return
+        o_np = np.stack([np.asarray(it[2]) for it in items])
+        d_np = np.stack([np.asarray(it[3]) for it in items])
+        buds = np.asarray([it[4] for it in items])
+        kcs = scenecache_key.block_keys(
+            self.scenecache.cfg, slot.req.scene, self.acfg, o_np, d_np, buds)
+        for it, kc in zip(items, kcs):
+            out = self.scenecache.lookup(kc[0])
+            if out is None:
+                self.items.append(it + kc)
+            else:
+                it[0].deliver(it[1], out.rgb, out.acc, out.depth,
+                              out.chunks, cached=True)
+                self.counters.scene_blocks_hit += 1
+
+    def sweep(self):
+        """Deliver every pooled block whose key BECAME resident; keep the
+        rest.
+
+        Runs once per scheduling round, so a block marched (and stored)
+        for one request satisfies an identical block another client
+        pooled in the SAME round — cross-request sharing without any
+        inter-slot coordination.  Pool items already recorded their miss
+        at admission, so these re-checks don't count misses (hits do).
+        """
+        if self.scenecache is None or not self.items:
+            return
+        rest = []
+        for it in self.items:
+            out = (self.scenecache.lookup(it[5], count_miss=False)
+                   if it[5] is not None else None)
+            if out is None:
+                rest.append(it)
+            else:
+                it[0].deliver(it[1], out.rgb, out.acc, out.depth,
+                              out.chunks, cached=True)
+                self.counters.scene_blocks_hit += 1
+        self.items = rest
+
+    # --------------------------------------------------------- dispatch
+    def dispatch(self, march_for):
+        """Assemble and DISPATCH one batch (device-async); returns an
+        in-flight handle for ``collect``, or None with an empty pool.
+
+        One batch per round, drawn from the largest-budget scene group so
+        batches stay budget-homogeneous across requests.  ``march_for``
+        maps a scene id to its jitted batched march.
+        """
+        if not self.items:
+            return None
+        self.items.sort(key=lambda it: -it[4])
+        scene_id = self.items[0][0].req.scene
+        batch = [it for it in self.items
+                 if it[0].req.scene == scene_id][:self.blocks_per_batch]
+        taken = set(map(id, batch))
+        self.items = [it for it in self.items if id(it) not in taken]
+
+        # in-batch dedup: identical keys selected together (two clients
+        # admitted the same round) march once; followers receive the
+        # leader's outputs
+        followers: List[tuple] = []
+        if self.scenecache is not None:
+            uniq, seen = [], {}
+            for it in batch:
+                if it[5] is not None and it[5] in seen:
+                    followers.append((it, seen[it[5]]))
+                else:
+                    if it[5] is not None:
+                        seen[it[5]] = len(uniq)
+                    uniq.append(it)
+            batch = uniq
+
+        B = self.acfg.block_size
+        N = self.blocks_per_batch
+        n_pad = N - len(batch)
+        o_b = jnp.stack([it[2] for it in batch]
+                        + [jnp.zeros((B, 3))] * n_pad)
+        d_b = jnp.stack([it[3] for it in batch]
+                        + [jnp.tile(jnp.asarray([[0., 0., 1.]]),
+                                    (B, 1))] * n_pad)
+        budgets = jnp.asarray([it[4] for it in batch] + [1] * n_pad,
+                              jnp.int32)
+        # dispatch only — device arrays are fetched in collect(), after
+        # the engine has overlapped Stage-A speculation with them
+        return (batch, followers, n_pad,
+                march_for(scene_id)(o_b, d_b, budgets))
+
+    def collect(self, inflight):
+        """Fetch a dispatched batch and deliver/store its outputs."""
+        batch, followers, n_pad, out = inflight
+        rgb, acc, depth, chunks = (np.asarray(a) for a in out)
+        for i, it in enumerate(batch):
+            it[0].deliver(it[1], rgb[i], acc[i], depth[i], chunks[i])
+            if it[5] is not None:
+                self.scenecache.store(it[5], it[6], rgb[i], acc[i],
+                                      depth[i], int(chunks[i]))
+        for it, li in followers:
+            it[0].deliver(it[1], rgb[li], acc[li], depth[li],
+                          chunks[li], cached=True)
+            self.counters.scene_blocks_hit += 1
+        self.counters.batches += 1
+        self.counters.blocks_marched += len(batch)
+        self.counters.pad_blocks += n_pad

@@ -1,256 +1,50 @@
-"""Batched multi-view render serving engine with cross-frame reuse.
+"""Batched multi-view render serving engine — the pipeline facade.
 
 The render analogue of serve/engine.py's slot-based LM engine: render
-requests (camera pose + scene) occupy ``slots``; every scheduling round the
-Phase-II blocks of ALL live requests are pooled, sorted by sample budget,
-and marched through a single jitted batched ``_march_block`` — so MXU/VPU
-utilization depends only on the pooled block stream, not on which request
-each block belongs to (continuous batching for rays).
+requests (camera pose + scene) occupy ``slots``; every scheduling round
+the Phase-II blocks of ALL live requests are pooled, sorted by sample
+budget, and marched through a single jitted batched march — continuous
+batching for rays.  Cross-frame reuse goes through ``repro.framecache``
+(warped probe maps, warped radiance), cross-user block reuse through
+``repro.scenecache``.
 
-Cross-frame reuse goes through ``repro.framecache``:
+This module is deliberately SMALL (make lint fails if it regrows past
+250 lines): it owns only the scheduling loop and the public surface.
+The pipeline lives in four layers — see serve/README.md:
 
-  * Phase I — ``framecache.probe``: a request whose pose is within the
-    configured angular/translation distance of a previously probed pose
-    gets that pose's count/opacity/depth maps reprojected by the pose
-    delta (warped, disocclusions filled conservatively), so most frames
-    of a smooth trajectory pay zero probe cost.
-  * Phase II — ``framecache.radiance`` (opt-in via
-    ``RenderServeConfig.radiance``): a finished frame within the radiance
-    radius is warped to the requesting pose; the slot marches ONLY the
-    disoccluded rays and composites them over the warp — most rays skip
-    the field network entirely.
+  * ``admission``  — Stage-A speculation (plans + probe/warp device work
+    + pad/sort layout) and the Stage-B commit (revalidate, book, slot);
+  * ``pool``       — block pooling, batch assembly, in-batch dedup,
+    scene-store delivery, the shared jitted-march LRU;
+  * ``executor``   — WHERE Stage A executes: inline (workers=0, the
+    bit-identical default) or on worker threads that overlap probe
+    device time with the in-flight march;
+  * ``stats``      — counters and aggregate reporting.
 
-Admission is RADIANCE-FIRST and double-buffered: the radiance lookup
-runs before Phase I, so a full warp hit (zero disoccluded rays) skips
-the probe outright (booked via ``ProbeCache.note_skip``), and Stage A of
-admission (``_prepare`` — the plans plus their probe/warp device work)
-is speculated for queued requests while the round's march batch is in
-flight, with all cache bookkeeping committed only when a slot is
-actually consumed (``_admit``) — so rendered frames and counters are
-bit-identical at every ``RenderServeConfig.prefetch`` depth.
-
-Scene-space block reuse (``repro.scenecache``, opt-in via
-``RenderServeConfig.scenecache`` or a shared ``SceneBlockCache`` passed
-to the constructor) sits below both: every pooled block carries a key
-derived from its quantized voxel footprint + view bucket; blocks whose
-key is resident in the shared byte-budgeted store skip the march and
-composite directly, and marched blocks populate it — so N concurrent
-users of one scene share hits and bounded memory instead of N per-pose
-LRUs.  ``scenecache=None`` (default) leaves the pooled-march path
-bit-identical to the pre-scenecache engine.
-
-Batches have a fixed block count (``blocks_per_batch``); the trailing
-partial batch is padded with unit-budget dummy blocks, so each scene
-compiles exactly one batched march.  Budget-descending order keeps batches
-budget-homogeneous — the property launch/render_serve.py relies on to
-shard a batch's blocks over the ``data`` mesh axis without stragglers.
-
-Single-device in this container; launch/render_serve.py lowers the same
-pooled march sharded over the production mesh.
+Invariant spanning all layers: speculation (any thread, any depth) only
+moves device work earlier — commits happen on the engine thread in
+admission order, so rendered frames and the deterministic counters are
+bit-identical at every ``prefetch`` depth and ``workers`` count.
 """
 from __future__ import annotations
 
-import dataclasses
 import time
-from collections import OrderedDict
 from functools import partial
 from typing import Dict, List, Optional
 
-import jax
 import jax.numpy as jnp
-import numpy as np
 
-from ..core import pipeline, scene
 from ..core.fields import FieldFns
 from ..core.pipeline import ASDRConfig
-from ..framecache import probe as fc_probe
-from ..framecache import radiance as fc_radiance
 from ..framecache.probe import ProbeCache, ProbeMaps, ProbeReuseConfig
 from ..framecache.radiance import RadianceCache, RadianceReuseConfig
-from ..scenecache import SceneBlockCache, SceneCacheConfig
-from ..scenecache import key as scenecache_key
+from ..scenecache import SceneBlockCache
+from . import admission, executor as executor_lib, pool as pool_lib
+from . import stats as stats_lib
+from .admission import RenderRequest, RenderServeConfig  # noqa: F401
 
-
-# jitted batched marches shared across engine instances: keyed by the
-# (FieldFns, ASDRConfig) pair (both hashable), so an engine restart or a
-# parallel engine over the same scene reuses the compiled executable.
-# LRU-bounded: a reloaded/retrained scene makes fresh FieldFns closures,
-# and without eviction the stale executables (and the params their
-# closures capture) would pile up for the process lifetime.
-# NOTE: the march closes over fns — fine for analytic fields (no arrays);
-# an NGP-backed production path should pass params as jit ARGS instead,
-# which is exactly what launch/render_serve.build_pooled_march_cell does.
-_MARCH_CACHE: OrderedDict = OrderedDict()
-_MARCH_CACHE_MAX = 32
-
-
-@dataclasses.dataclass(frozen=True)
-class RenderServeConfig:
-    slots: int = 4
-    blocks_per_batch: int = 16
-    reuse: Optional[ProbeReuseConfig] = ProbeReuseConfig()
-    # warped-radiance reuse is opt-in: None keeps the engine bit-identical
-    # to the single-image pipeline (the identity tests rely on this)
-    radiance: Optional[RadianceReuseConfig] = None
-    # scene-space block reuse (repro.scenecache) is likewise opt-in: None
-    # leaves the pooled-march path untouched.  An explicit SceneBlockCache
-    # instance passed to the engine constructor overrides this config —
-    # that is how several engines over one scene share a single store.
-    scenecache: Optional[SceneCacheConfig] = None
-    probe_seed: Optional[int] = None   # None = deterministic midpoint probe
-    # Stage-A lookahead: up to this many QUEUED requests have their
-    # radiance lookup + probe speculated each round while the dispatched
-    # march is still in flight (0 = fully synchronous admission).  All
-    # cache bookkeeping commits at admission regardless, so rendered
-    # frames and counters are bit-identical at every prefetch depth —
-    # speculation only moves the device work earlier.
-    prefetch: int = 2
-
-
-@dataclasses.dataclass
-class RenderRequest:
-    rid: int
-    scene: str                         # key into the engine's field table
-    cam: scene.Camera
-    image: Optional[np.ndarray] = None   # (H, W, 3) on completion
-    stats: Dict = dataclasses.field(default_factory=dict)
-    latency_s: float = 0.0
-
-
-@dataclasses.dataclass
-class _Prepared:
-    """Stage-A speculation for one queued request (see _prepare): pure
-    plans plus their executed device work, awaiting admission commit."""
-    req: RenderRequest
-    rplan: Optional["fc_radiance.RadiancePlan"]
-    pplan: Optional["fc_probe.ProbePlan"]
-    maps: Optional[ProbeMaps]
-    prep_s: float
-
-
-class _Slot:
-    """A live request: its sorted-block layout and result buffers.
-
-    With radiance reuse, ``march_idx`` selects the disoccluded rays the
-    slot actually marches (None = all rays) and ``base_rgb`` holds the
-    warped cached frame the marched rays composite over.
-    """
-
-    def __init__(self, req: RenderRequest, rays, order, budgets, pad: int,
-                 maps: Optional[ProbeMaps], reused: bool, block_size: int,
-                 march_idx: Optional[np.ndarray] = None,
-                 base_rgb: Optional[np.ndarray] = None,
-                 warp_valid_fraction: float = 0.0,
-                 probe_skipped: bool = False,
-                 t_enqueue: Optional[float] = None):
-        self.req = req
-        self.rays = rays                 # padded (origins, dirs) of marched rays
-        self.order = order
-        self.budgets = budgets
-        self.pad = pad
-        self.maps = maps                 # None on a full radiance hit (skip)
-        self.reused = reused
-        self.probe_skipped = probe_skipped
-        self.block_size = block_size
-        self.march_idx = march_idx
-        self.base_rgb = base_rgb
-        self.warp_valid_fraction = warp_valid_fraction
-        n_blocks = budgets.shape[0]
-        self.rgb = np.zeros((n_blocks, block_size, 3), np.float32)
-        self.acc = np.zeros((n_blocks, block_size), np.float32)
-        self.depth = np.zeros((n_blocks, block_size), np.float32)
-        self.chunks = np.zeros((n_blocks,), np.int64)
-        self.cached_blocks = 0        # delivered from the scene store
-        self.cached_chunks = 0
-        self.pending = n_blocks
-        # latency clock starts at ENQUEUE (render() entry), not slot
-        # construction — latency_s must cover queue wait + admission
-        # (probe/warp) + march end-to-end under the double-buffered path
-        self.t0 = time.time() if t_enqueue is None else t_enqueue
-        self.admission_s = 0.0        # total Stage-A + Stage-B work time
-        self.admit_stall_s = 0.0      # blocking Stage-B time at admission
-
-    def emit_blocks(self, origins, dirs):
-        """(slot, block_index, o (B,3), d (B,3), budget) work items."""
-        B = self.block_size
-        o_s = origins[self.order].reshape(-1, B, 3)
-        d_s = dirs[self.order].reshape(-1, B, 3)
-        for bi in range(self.budgets.shape[0]):
-            yield (self, bi, o_s[bi], d_s[bi], int(self.budgets[bi]))
-
-    def deliver(self, bi: int, rgb, acc, depth, chunks, cached: bool = False):
-        self.rgb[bi] = rgb
-        self.acc[bi] = acc
-        self.depth[bi] = depth
-        self.chunks[bi] = chunks
-        if cached:
-            self.cached_blocks += 1
-            self.cached_chunks += int(chunks)
-        self.pending -= 1
-
-    def finalize(self, acfg: ASDRConfig) -> RenderRequest:
-        req = self.req
-        H, W = req.cam.height, req.cam.width
-        R = H * W
-        Rp = self.order.shape[0]
-        if Rp:
-            inv = np.zeros((Rp,), np.int64)
-            inv[np.asarray(self.order)] = np.arange(Rp)
-            flat = self.rgb.reshape(Rp, 3)[inv]
-            acc_flat = self.acc.reshape(Rp)[inv]
-            depth_flat = self.depth.reshape(Rp)[inv]
-        else:
-            flat = np.zeros((0, 3), np.float32)
-            acc_flat = np.zeros((0,), np.float32)
-            depth_flat = np.zeros((0,), np.float32)
-        if self.march_idx is None:
-            img_flat = flat[:R]
-            self.acc_full = acc_flat[:R]
-            # the march's per-ray termination depth: what the radiance
-            # cache warps this frame with (sharper than the probe's
-            # stride-d proxy at depth edges)
-            self.depth_full = depth_flat[:R]
-            rays_marched = R
-        else:
-            img_flat = self.base_rgb.copy()
-            img_flat[self.march_idx] = flat[: self.march_idx.size]
-            self.acc_full = None       # warped frames are never re-cached
-            self.depth_full = None
-            rays_marched = int(self.march_idx.size)
-        req.image = img_flat.reshape(H, W, 3)
-        req.latency_s = time.time() - self.t0
-        # rays delivered straight from the warp: had they marched, the
-        # fixed-budget baseline would have spent ns_full samples each —
-        # the same convention baseline_samples uses — so zero-march
-        # frames report reused compute instead of silently vanishing
-        # from the samples split
-        warp_rays = 0 if self.march_idx is None else R - rays_marched
-        req.stats = {
-            "probe_samples": 0 if self.maps is None else self.maps.cost,
-            "probe_reused": self.reused,
-            "probe_skipped": self.probe_skipped,
-            "radiance_reused": self.march_idx is not None,
-            "rays_marched": rays_marched,
-            "rays_total": R,
-            "warp_valid_fraction": self.warp_valid_fraction,
-            # compute actually spent: scene-store hits replay stored
-            # outputs without marching, so their chunks count as REUSED
-            # samples, not processed ones — the compute-fraction metrics
-            # must show the scene tier's savings
-            "samples_processed":
-                (int(self.chunks.sum()) - self.cached_chunks)
-                * self.block_size * acfg.chunk,
-            "samples_reused": self.cached_chunks
-            * self.block_size * acfg.chunk + warp_rays * acfg.ns_full,
-            "scene_block_hits": self.cached_blocks,
-            # padded ray count, matching render_adaptive's stats — the
-            # numerator includes the pad rays' chunks, so the denominator
-            # must too or the fraction inflates (and can exceed 1.0)
-            "baseline_samples": Rp * acfg.ns_full,
-            "admission_s": self.admission_s,
-            "admit_stall_s": self.admit_stall_s,
-        }
-        return req
+__all__ = ["RenderRequest", "RenderServeConfig", "RenderServingEngine",
+           "ProbeReuseConfig", "RadianceReuseConfig", "ProbeMaps"]
 
 
 class RenderServingEngine:
@@ -273,210 +67,26 @@ class RenderServingEngine:
         if scenecache is None and rcfg.scenecache is not None:
             scenecache = SceneBlockCache(rcfg.scenecache)
         self.scenecache = scenecache
-        # engine counters (across render() calls)
-        self.frames = 0
-        self.batches = 0
-        self.blocks_marched = 0
-        self.pad_blocks = 0
-        self.rays_marched = 0
-        self.rays_total = 0
-        self.scene_blocks_hit = 0
-        self.admissions = 0
-        self.full_radiance_hits = 0   # admissions that skipped Phase I
-        self.misprepares = 0          # speculated Stage-A work discarded
-        self.samples_processed = 0
-        self.samples_reused = 0
+        # engine counters (across render() calls) — see serve/stats.py
+        self.counters = stats_lib.EngineCounters()
+        self.executor = executor_lib.make_executor(rcfg.workers)
 
-    # ---------------------------------------------------------------- march
-    def _batched_march(self, scene_id: str):
-        """One jitted (N, B)-block march per scene — N = blocks_per_batch."""
-        fns = self.fields[scene_id]
-        key = (fns, self.acfg)
-        if key not in _MARCH_CACHE:
-            march = partial(pipeline._march_block, fns, self.acfg)
-            _MARCH_CACHE[key] = jax.jit(
-                lambda o, d, b: jax.lax.map(lambda a: march(*a), (o, d, b))
-            )
-            while len(_MARCH_CACHE) > _MARCH_CACHE_MAX:
-                _MARCH_CACHE.popitem(last=False)
-        _MARCH_CACHE.move_to_end(key)
-        return _MARCH_CACHE[key]
+    # counter back-compat: eng.blocks_marched etc. read through to the
+    # stats layer (only consulted when normal attribute lookup fails)
+    def __getattr__(self, name):
+        if name in stats_lib.COUNTER_FIELDS:
+            return getattr(self.counters, name)
+        raise AttributeError(name)
 
-    # ---------------------------------------------------------------- admit
-    #
-    # Admission is a two-stage, radiance-first pipeline:
-    #
-    #   Stage A (_prepare) — PURE speculation, run ahead of need for
-    #     queued requests while the dispatched march is in flight:
-    #     radiance plan first (warp included), and ONLY on a non-full
-    #     hit a probe plan + its device execution.  No cache mutates.
-    #   Stage B (_admit) — the scheduling round consumes a slot: every
-    #     plan is revalidated against the CURRENT cache state and the
-    #     bookkeeping commits here, so admission decisions — and hence
-    #     rendered frames and counters — are bit-identical at every
-    #     prefetch depth; a stale speculation is simply recomputed
-    #     (counted in ``misprepares``).
-    #
-    # Ordering is the bugfix: the radiance lookup runs BEFORE Phase I,
-    # so a full warp hit (zero disoccluded rays) never pays the probe it
-    # would immediately discard — the skip is booked explicitly via
-    # ProbeCache.note_skip so reuse fractions and staleness bounds stay
-    # coherent.
+    def close(self):
+        """Release executor workers (no-op for the sync backend)."""
+        self.executor.close()
 
     def _probe_key(self, req: RenderRequest):
-        return (None if self.rcfg.probe_seed is None
-                else jax.random.PRNGKey(self.rcfg.probe_seed + req.rid))
+        return admission.probe_key_for(self.rcfg, req)
 
-    def _prepare(self, req: RenderRequest) -> "_Prepared":
-        """Stage A: speculate the admission's device work (radiance warp,
-        probe/warp maps) without touching any cache — dispatchable while
-        live requests are still marching."""
-        t0 = time.time()
-        acfg = self.acfg
-        rad = self.radiance_caches.get(req.scene)
-        rplan = (fc_radiance.plan_lookup(rad, req.cam, acfg)
-                 if rad is not None else None)
-        pplan = maps = None
-        if rplan is None or not rplan.full_hit:
-            cache = self.probe_caches.get(req.scene)
-            pplan = fc_probe.plan_probe(cache, req.cam, acfg)
-            maps = fc_probe.execute_probe_plan(
-                self.fields[req.scene], acfg, req.cam, pplan,
-                self._probe_key(req),
-                rcfg=cache.rcfg if cache is not None else None)
-        return _Prepared(req, rplan, pplan, maps, time.time() - t0)
-
-    def _admit(self, req: RenderRequest,
-               prepared: Optional["_Prepared"] = None,
-               t_enqueue: Optional[float] = None) -> _Slot:
-        """Stage B: commit the admission against current cache state."""
-        t0 = time.time()
-        acfg = self.acfg
-        fns = self.fields[req.scene]
-        self.admissions += 1
-
-        # radiance FIRST: a full warp hit delivers without ever probing
-        rad = self.radiance_caches.get(req.scene)
-        warped = None
-        if rad is not None:
-            sp_rplan = prepared.rplan if prepared is not None else None
-            rplan = fc_radiance.plan_lookup(rad, req.cam, acfg,
-                                            prepared=sp_rplan)
-            if (sp_rplan is not None and sp_rplan.warped is not None
-                    and sp_rplan.basis != rplan.basis):
-                # the speculated warp's source entry changed (rebase /
-                # eviction) between Stage A and admission — re-warped
-                self.misprepares += 1
-            warped = fc_radiance.commit_lookup(rad, rplan)
-
-        cache = self.probe_caches.get(req.scene)
-        probe_skipped = warped is not None and warped.full_hit
-        if probe_skipped:
-            if cache is not None:
-                cache.note_skip()
-            self.full_radiance_hits += 1
-            if prepared is not None and prepared.maps is not None:
-                # speculated a probe for a frame that turned out fully
-                # warp-served (its source finished after Stage A ran)
-                self.misprepares += 1
-            maps, reused = None, False
-        else:
-            pplan = fc_probe.plan_probe(cache, req.cam, acfg)
-            if (prepared is not None and prepared.pplan is not None
-                    and prepared.pplan.basis == pplan.basis):
-                maps = prepared.maps
-            else:
-                if prepared is not None:
-                    self.misprepares += 1
-                maps = fc_probe.execute_probe_plan(
-                    fns, acfg, req.cam, pplan, self._probe_key(req),
-                    rcfg=cache.rcfg if cache is not None else None)
-            reused = fc_probe.commit_probe_plan(cache, req.cam, acfg,
-                                                pplan, maps)
-
-        march_idx = base_rgb = None
-        vf = 0.0
-        if warped is not None:
-            march_idx = np.flatnonzero(~warped.valid)
-            base_rgb = np.asarray(warped.rgb)
-            vf = warped.valid_fraction
-        if maps is None:
-            # full radiance hit: zero blocks — finalizes on the round it
-            # was admitted, marching nothing and having probed nothing
-            rays = (jnp.zeros((0, 3)), jnp.zeros((0, 3)))
-            order = np.zeros((0,), np.int64)
-            budgets = np.zeros((0,), np.int64)
-            pad = 0
-        else:
-            o, d = scene.camera_rays(req.cam)
-            counts, opacity = maps.counts, maps.opacity
-            if march_idx is not None:
-                sel = jnp.asarray(march_idx, jnp.int32)
-                o, d = o[sel], d[sel]
-                counts, opacity = counts[sel], opacity[sel]
-            o, d, counts, opacity, pad = pipeline.pad_rays_to_blocks(
-                acfg, o, d, counts, opacity)
-            order_j, budgets_j = pipeline.block_sort(acfg, counts, opacity)
-            rays = (o, d)
-            order, budgets = np.asarray(order_j), np.asarray(budgets_j)
-
-        slot = _Slot(req, rays, order, budgets, pad, maps, reused,
-                     acfg.block_size, march_idx=march_idx, base_rgb=base_rgb,
-                     warp_valid_fraction=vf, probe_skipped=probe_skipped,
-                     t_enqueue=t_enqueue)
-        slot.admit_stall_s = time.time() - t0
-        slot.admission_s = slot.admit_stall_s + (
-            prepared.prep_s if prepared is not None else 0.0)
-        return slot
-
-    def _keyed_items(self, slot: _Slot) -> List[tuple]:
-        """The slot's work items, extended to (..., key, cell) — blocks
-        already resident in the scene store deliver HERE (their one
-        counted lookup) and never enter the pool.
-
-        With the scene tier off both fields are None and the pooled-march
-        path below is byte-for-byte the pre-scenecache behavior.
-        """
-        items = list(slot.emit_blocks(*slot.rays))
-        if self.scenecache is None or not items:
-            return [it + (None, None) for it in items]
-        o_np = np.stack([np.asarray(it[2]) for it in items])
-        d_np = np.stack([np.asarray(it[3]) for it in items])
-        buds = np.asarray([it[4] for it in items])
-        kcs = scenecache_key.block_keys(
-            self.scenecache.cfg, slot.req.scene, self.acfg, o_np, d_np, buds)
-        pending = []
-        for it, kc in zip(items, kcs):
-            out = self.scenecache.lookup(kc[0])
-            if out is None:
-                pending.append(it + kc)
-            else:
-                it[0].deliver(it[1], out.rgb, out.acc, out.depth,
-                              out.chunks, cached=True)
-                self.scene_blocks_hit += 1
-        return pending
-
-    def _sweep_pool(self, pool: List[tuple]) -> List[tuple]:
-        """Deliver every pooled block whose key BECAME resident; keep the
-        rest.
-
-        Runs once per scheduling round, so a block marched (and stored)
-        for one request satisfies an identical block another client
-        pooled in the SAME round — cross-request sharing without any
-        inter-slot coordination.  Pool items already recorded their miss
-        at admission, so these re-checks don't count misses (hits do).
-        """
-        rest = []
-        for it in pool:
-            out = (self.scenecache.lookup(it[5], count_miss=False)
-                   if it[5] is not None else None)
-            if out is None:
-                rest.append(it)
-            else:
-                it[0].deliver(it[1], out.rgb, out.acc, out.depth,
-                              out.chunks, cached=True)
-                self.scene_blocks_hit += 1
-        return rest
+    def _march_for(self, scene_id: str):
+        return pool_lib.batched_march(self.fields[scene_id], self.acfg)
 
     # ---------------------------------------------------------------- serve
     def render(self, requests: List[RenderRequest]) -> List[RenderRequest]:
@@ -493,95 +103,59 @@ class RenderServingEngine:
         the round it was admitted.
 
         Double buffering: after the round's march batch is DISPATCHED
-        (async on device) and before its outputs are fetched, Stage A
-        (_prepare) speculates the admission work of up to ``prefetch``
-        queued requests — probing/warping of queued requests overlaps
-        marching of live ones, and the slot-filling loop consumes the
-        pre-admitted work with only the commit left to do.
+        (async on device) and before its outputs are fetched, Stage A is
+        speculated for up to ``prefetch`` queued requests — inline here
+        (sync executor) or on worker threads — so probing/warping of
+        queued requests overlaps marching of live ones, and admission
+        consumes the prepared work with only the commit left to do.
         """
         rcfg = self.rcfg
-        B = self.acfg.block_size
         t_enqueue = time.time()    # latency clock: queue wait counts
         queue = list(requests)
-        live: List[_Slot] = []
-        pool: List[tuple] = []   # undispatched (slot, bi, o, d, budget)
+        live: List[admission.Slot] = []
         done: List[RenderRequest] = []
-        ready: Dict[int, _Prepared] = {}   # id(req) -> Stage-A speculation
+        pool = pool_lib.BlockPool(self.acfg, rcfg.blocks_per_batch,
+                                  self.scenecache, self.counters)
+        ex = self.executor
+        try:
+            return self._serve(queue, live, done, pool, ex, t_enqueue)
+        finally:
+            # speculation keys are id(request): they must never survive
+            # this call (a later call's request can reuse a freed id,
+            # and a mid-call exception would otherwise strand results)
+            ex.reset()
 
+    def _serve(self, queue, live, done, pool, ex, t_enqueue):
+        rcfg = self.rcfg
         while queue or live:
             while queue and len(live) < rcfg.slots:
                 req = queue.pop(0)
-                slot = self._admit(req, prepared=ready.pop(id(req), None),
-                                   t_enqueue=t_enqueue)
+                t0 = time.time()
+                prepared = ex.take(id(req))
+                speculated = prepared is not None
+                if prepared is None:     # never speculated: Stage A inline
+                    prepared = admission.prepare(self, req)
+                slot = admission.admit(self, req, prepared,
+                                       t_enqueue=t_enqueue)
+                # blocking admission time; speculated Stage-A work adds
+                # its (overlapped) duration to admission_s only
+                slot.admit_stall_s = time.time() - t0
+                slot.admission_s = slot.admit_stall_s + (
+                    prepared.prep_s if speculated else 0.0)
                 live.append(slot)
-                pool.extend(self._keyed_items(slot))
+                pool.add_slot(slot)
 
-            if self.scenecache is not None and pool:
-                pool = self._sweep_pool(pool)
-
-            marched = None
-            if pool:
-                # one batch per round: the largest-budget scene group
-                # first, so batches stay budget-homogeneous across requests
-                pool.sort(key=lambda it: -it[4])
-                scene_id = pool[0][0].req.scene
-                batch = [it for it in pool
-                         if it[0].req.scene == scene_id][:rcfg.blocks_per_batch]
-                taken = set(map(id, batch))
-                pool = [it for it in pool if id(it) not in taken]
-
-                # in-batch dedup: identical keys selected together (two
-                # clients admitted the same round) march once; followers
-                # receive the leader's outputs
-                followers: List[tuple] = []
-                if self.scenecache is not None:
-                    uniq, seen = [], {}
-                    for it in batch:
-                        if it[5] is not None and it[5] in seen:
-                            followers.append((it, seen[it[5]]))
-                        else:
-                            if it[5] is not None:
-                                seen[it[5]] = len(uniq)
-                            uniq.append(it)
-                    batch = uniq
-
-                march = self._batched_march(scene_id)
-                N = rcfg.blocks_per_batch
-                n_pad = N - len(batch)
-                o_b = jnp.stack([it[2] for it in batch]
-                                + [jnp.zeros((B, 3))] * n_pad)
-                d_b = jnp.stack([it[3] for it in batch]
-                                + [jnp.tile(jnp.asarray([[0., 0., 1.]]),
-                                            (B, 1))] * n_pad)
-                budgets = jnp.asarray(
-                    [it[4] for it in batch] + [1] * n_pad, jnp.int32)
-                # dispatch only — device arrays are fetched after the
-                # Stage-A prefetch below has been overlapped with them
-                marched = (batch, followers, n_pad,
-                           march(o_b, d_b, budgets))
+            pool.sweep()
+            inflight = pool.dispatch(self._march_for)
 
             # Stage-A prefetch: speculate admissions for the queue head
             # while the dispatched march is in flight (clamped: a
             # negative prefetch must mean "off", not a near-full slice)
             for req in queue[:max(rcfg.prefetch, 0)]:
-                if id(req) not in ready:
-                    ready[id(req)] = self._prepare(req)
+                ex.submit(id(req), partial(admission.prepare, self, req))
 
-            if marched is not None:
-                batch, followers, n_pad, out = marched
-                rgb, acc, depth, chunks = (np.asarray(a) for a in out)
-                for i, it in enumerate(batch):
-                    it[0].deliver(it[1], rgb[i], acc[i], depth[i], chunks[i])
-                    if it[5] is not None:
-                        self.scenecache.store(it[5], it[6], rgb[i], acc[i],
-                                              depth[i], int(chunks[i]))
-                for it, li in followers:
-                    it[0].deliver(it[1], rgb[li], acc[li], depth[li],
-                                  chunks[li], cached=True)
-                    self.scene_blocks_hit += 1
-                self.batches += 1
-                self.blocks_marched += len(batch)
-                self.pad_blocks += n_pad
+            if inflight is not None:
+                pool.collect(inflight)
 
             still = []
             for slot in live:
@@ -592,13 +166,9 @@ class RenderServingEngine:
             live = still
         return done
 
-    def _finalize(self, slot: _Slot) -> RenderRequest:
+    def _finalize(self, slot: admission.Slot) -> RenderRequest:
         req = slot.finalize(self.acfg)
-        self.frames += 1
-        self.rays_marched += req.stats["rays_marched"]
-        self.rays_total += req.stats["rays_total"]
-        self.samples_processed += req.stats["samples_processed"]
-        self.samples_reused += req.stats["samples_reused"]
+        self.counters.note_finalized(req.stats)
         # only fully-rendered frames feed the radiance cache (framecache
         # safety invariant: warps never chain).  The stored depth is the
         # MARCH's per-ray termination depth — always pose-aligned (so even
@@ -616,53 +186,5 @@ class RenderServingEngine:
 
     # ---------------------------------------------------------------- stats
     def engine_stats(self) -> Dict:
-        out = {
-            "frames": self.frames,
-            "batches": self.batches,
-            "blocks_marched": self.blocks_marched,
-            "pad_block_fraction": (
-                self.pad_blocks / max(self.blocks_marched + self.pad_blocks, 1)
-            ),
-            "rays_marched": self.rays_marched,
-            "rays_total": self.rays_total,
-            "rays_marched_fraction": (
-                self.rays_marched / max(self.rays_total, 1)),
-        }
-        out["admissions"] = self.admissions
-        out["full_radiance_hits"] = self.full_radiance_hits
-        out["misprepares"] = self.misprepares
-        out["samples_processed"] = self.samples_processed
-        out["samples_reused"] = self.samples_reused
-        hits = sum(c.hits for c in self.probe_caches.values())
-        misses = sum(c.misses for c in self.probe_caches.values())
-        skips = sum(c.skips for c in self.probe_caches.values())
-        out["probe_hits"] = hits
-        out["probe_misses"] = misses
-        # skips are admissions that never needed Phase I (full radiance
-        # hit) — they paid zero probe samples, so the reuse fraction
-        # counts them with the hits; with probe reuse ENABLED,
-        # probes + skips == admissions holds as misses + hits + skips ==
-        # admissions (every admission either probed [miss/refresh],
-        # reused maps [hit], or skipped).  The ledger is the probe
-        # caches' own: with reuse=None nothing is booked and the
-        # fraction reads 0.0, not a fake 1.0 (full_radiance_hits still
-        # counts engine-wide skips in that config).
-        out["probe_skips"] = skips
-        out["reused_probe_fraction"] = (
-            (hits + skips) / max(hits + misses + skips, 1))
-        out["probe_refreshes"] = sum(
-            c.refreshes for c in self.probe_caches.values())
-        r_hits = sum(c.hits for c in self.radiance_caches.values())
-        r_miss = sum(c.misses for c in self.radiance_caches.values())
-        out["radiance_hits"] = r_hits
-        out["radiance_misses"] = r_miss
-        out["reused_radiance_fraction"] = r_hits / max(r_hits + r_miss, 1)
-        # scene-space block tier: hit rate over blocks that needed output
-        # (delivered from the shared store vs actually marched; pad blocks
-        # excluded from both sides)
-        out["scene_block_hits"] = self.scene_blocks_hit
-        out["scene_block_hit_rate"] = self.scene_blocks_hit / max(
-            self.scene_blocks_hit + self.blocks_marched, 1)
-        if self.scenecache is not None:
-            out["scenecache"] = self.scenecache.stats()
-        return out
+        return stats_lib.engine_stats(self.counters, self.probe_caches,
+                                      self.radiance_caches, self.scenecache)

@@ -1,0 +1,117 @@
+"""Counters and aggregate reporting — the serving pipeline's ledger layer.
+
+Every number the engine exposes lives in one of two places:
+
+  * ``EngineCounters`` — plain integers accumulated across ``render()``
+    calls.  Mutated ONLY on the engine thread (admission commits and
+    batch collection), so they need no lock and stay deterministic at
+    every prefetch depth and worker count — the executor determinism
+    tests gate on them.  ``misprepares`` is the single deliberate
+    exception to cross-config determinism: it counts speculation that
+    aged out between Stage A and commit, which depends on speculation
+    TIMING (prefetch depth, worker scheduling) by design.
+  * per-cache ledgers (probe/radiance/scenecache) — owned by the caches
+    themselves; ``engine_stats`` only reads them.
+
+This module owns the invariant arithmetic: probe hits + misses + skips
+== admissions, reused fractions, pad fractions, the samples split.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+
+@dataclasses.dataclass
+class EngineCounters:
+    """Engine-thread-only counters, accumulated across render() calls."""
+    frames: int = 0
+    batches: int = 0
+    blocks_marched: int = 0
+    pad_blocks: int = 0
+    rays_marched: int = 0
+    rays_total: int = 0
+    scene_blocks_hit: int = 0
+    admissions: int = 0
+    full_radiance_hits: int = 0   # admissions that skipped Phase I
+    misprepares: int = 0          # speculated Stage-A work discarded
+    samples_processed: int = 0
+    samples_reused: int = 0
+
+    def note_finalized(self, req_stats: Dict):
+        """Fold one finalized request's per-frame stats into the ledger."""
+        self.frames += 1
+        self.rays_marched += req_stats["rays_marched"]
+        self.rays_total += req_stats["rays_total"]
+        self.samples_processed += req_stats["samples_processed"]
+        self.samples_reused += req_stats["samples_reused"]
+
+
+COUNTER_FIELDS = frozenset(f.name for f in
+                           dataclasses.fields(EngineCounters))
+
+# engine_stats() keys that must be identical across executors at any
+# worker count / prefetch depth: everything decided at commit time
+# (engine thread, admission order).  ``misprepares`` is deliberately
+# absent — it counts speculation that aged out between Stage A and
+# commit, which depends on speculation timing by design.  The executor
+# determinism tests and the --workers benchmark gate both consume this.
+DETERMINISTIC_COUNTERS = (
+    "frames", "admissions", "probe_hits", "probe_misses", "probe_skips",
+    "probe_refreshes", "full_radiance_hits", "radiance_hits",
+    "radiance_misses", "rays_marched", "rays_total", "samples_processed",
+    "samples_reused", "blocks_marched")
+
+
+def engine_stats(counters: EngineCounters, probe_caches: Dict,
+                 radiance_caches: Dict, scenecache) -> Dict:
+    """The engine's aggregate stats dict (the public ``engine_stats()``)."""
+    c = counters
+    out = {
+        "frames": c.frames,
+        "batches": c.batches,
+        "blocks_marched": c.blocks_marched,
+        "pad_block_fraction": (
+            c.pad_blocks / max(c.blocks_marched + c.pad_blocks, 1)),
+        "rays_marched": c.rays_marched,
+        "rays_total": c.rays_total,
+        "rays_marched_fraction": c.rays_marched / max(c.rays_total, 1),
+        "admissions": c.admissions,
+        "full_radiance_hits": c.full_radiance_hits,
+        "misprepares": c.misprepares,
+        "samples_processed": c.samples_processed,
+        "samples_reused": c.samples_reused,
+    }
+    hits = sum(pc.hits for pc in probe_caches.values())
+    misses = sum(pc.misses for pc in probe_caches.values())
+    skips = sum(pc.skips for pc in probe_caches.values())
+    out["probe_hits"] = hits
+    out["probe_misses"] = misses
+    # skips are admissions that never needed Phase I (full radiance
+    # hit) — they paid zero probe samples, so the reuse fraction
+    # counts them with the hits; with probe reuse ENABLED,
+    # probes + skips == admissions holds as misses + hits + skips ==
+    # admissions (every admission either probed [miss/refresh],
+    # reused maps [hit], or skipped).  The ledger is the probe
+    # caches' own: with reuse=None nothing is booked and the
+    # fraction reads 0.0, not a fake 1.0 (full_radiance_hits still
+    # counts engine-wide skips in that config).
+    out["probe_skips"] = skips
+    out["reused_probe_fraction"] = (
+        (hits + skips) / max(hits + misses + skips, 1))
+    out["probe_refreshes"] = sum(
+        pc.refreshes for pc in probe_caches.values())
+    r_hits = sum(rc.hits for rc in radiance_caches.values())
+    r_miss = sum(rc.misses for rc in radiance_caches.values())
+    out["radiance_hits"] = r_hits
+    out["radiance_misses"] = r_miss
+    out["reused_radiance_fraction"] = r_hits / max(r_hits + r_miss, 1)
+    # scene-space block tier: hit rate over blocks that needed output
+    # (delivered from the shared store vs actually marched; pad blocks
+    # excluded from both sides)
+    out["scene_block_hits"] = c.scene_blocks_hit
+    out["scene_block_hit_rate"] = c.scene_blocks_hit / max(
+        c.scene_blocks_hit + c.blocks_marched, 1)
+    if scenecache is not None:
+        out["scenecache"] = scenecache.stats()
+    return out

@@ -1,0 +1,248 @@
+"""Pluggable-executor pipeline invariants (serve/{admission,pool,executor}).
+
+ISSUE-5 test requirements: same frame bytes and identical deterministic
+counters for workers {0, 1, 4} x prefetch {0, 2} on a replay trajectory;
+commit ordering preserved under an adversarial slow-probe stub (worker
+completion order inverted vs admission order); the Stage-B commit section
+performs NO pad/sort device work (instrumented); the framecache entry
+snapshot/lock contract never shows a torn entry to an off-thread plan;
+and the render_engine facade stays within its size budget.
+"""
+import dataclasses
+import sys
+import threading
+import time
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.core import fields, pipeline, scene
+from repro.framecache import probe as fc_probe
+from repro.framecache import radiance as fc_radiance
+from repro.serve import admission, executor as executor_lib
+from repro.serve import pool as pool_lib
+from repro.serve.render_engine import (RenderRequest, RenderServeConfig,
+                                       RenderServingEngine)
+# counters decided at commit time (engine thread, admission order) — must
+# match across executors; misprepares is timing-dependent by design
+from repro.serve.stats import DETERMINISTIC_COUNTERS
+
+ACFG = pipeline.ASDRConfig(ns_full=48, probe_stride=4, candidates=(8, 16, 32),
+                           block_size=64, chunk=16, sort_by_opacity=False)
+SIZE = 16
+
+
+def cam_at(theta, phi=0.5):
+    return scene.look_at_camera(SIZE, SIZE, theta=theta, phi=phi)
+
+
+@pytest.fixture(scope="module")
+def flds():
+    return {"mic": fields.analytic_field_fns(scene.make_scene("mic"))}
+
+
+def serve_cfg(workers=0, prefetch=2, slots=2):
+    return RenderServeConfig(
+        slots=slots, blocks_per_batch=4,
+        reuse=fc_probe.ProbeReuseConfig(refresh_every=0),
+        radiance=fc_radiance.RadianceReuseConfig(refresh_every=0),
+        prefetch=prefetch, workers=workers)
+
+
+def replay_traj(n=8):
+    # poses repeat every 3 requests: laps 2+ exercise warp reuse, full
+    # radiance hits, AND speculation racing the in-flight sources
+    return [RenderRequest(rid=i, scene="mic", cam=cam_at(0.7 + 0.05 * (i % 3)))
+            for i in range(n)]
+
+
+# ----------------------------------------------------------- determinism
+def test_workers_determinism(flds):
+    """Executors move WHERE Stage A runs, never WHAT commits: frames and
+    all commit-determined counters must be bit-identical for
+    workers {0, 1, 4} x prefetch {0, 2} on the replay trajectory."""
+    runs = {}
+    for workers in (0, 1, 4):
+        for prefetch in (0, 2):
+            eng = RenderServingEngine(flds, ACFG,
+                                      serve_cfg(workers, prefetch))
+            done = {r.rid: r for r in eng.render(replay_traj())}
+            runs[(workers, prefetch)] = (done, eng.engine_stats())
+            eng.close()
+    ref_done, ref_st = runs[(0, 0)]
+    for key, (done, st) in runs.items():
+        for rid in ref_done:
+            np.testing.assert_array_equal(
+                ref_done[rid].image, done[rid].image,
+                err_msg=f"frame {rid} differs at workers,prefetch={key}")
+        for c in DETERMINISTIC_COUNTERS:
+            assert ref_st[c] == st[c], (key, c, ref_st[c], st[c])
+    # the fully synchronous run can never misprepare
+    assert ref_st["misprepares"] == 0
+
+
+def test_commit_ordering_under_adversarial_slow_probe(flds, monkeypatch):
+    """Commits happen on the engine thread in ADMISSION order even when
+    worker completion order is inverted: the earliest-submitted probe is
+    stubbed slowest, so later speculations finish first — finish order,
+    frames, and counters must still match the synchronous run."""
+    real_execute = fc_probe.execute_probe_plan
+    lock = threading.Lock()
+    seen = {"n": 0}
+
+    def slow_execute(fns, acfg, cam, plan, probe_key=None, rcfg=None):
+        with lock:
+            i = seen["n"]
+            seen["n"] += 1
+        if plan.kind in ("fresh", "refresh"):
+            time.sleep(0.12 if i < 2 else 0.0)   # earliest probes slowest
+        return real_execute(fns, acfg, cam, plan, probe_key=probe_key,
+                            rcfg=rcfg)
+
+    # distinct fresh poses: every admission pays a probe, all speculated
+    def traj():
+        return [RenderRequest(rid=i, scene="mic", cam=cam_at(0.55 + 0.1 * i))
+                for i in range(6)]
+
+    cfg = RenderServeConfig(
+        slots=1, blocks_per_batch=4,
+        reuse=fc_probe.ProbeReuseConfig(max_angle_deg=0.01,
+                                        max_translation=1e-4),
+        radiance=None, prefetch=4, workers=0)
+    eng_s = RenderServingEngine(flds, ACFG, cfg)
+    done_s = eng_s.render(traj())
+
+    monkeypatch.setattr(fc_probe, "execute_probe_plan", slow_execute)
+    eng_t = RenderServingEngine(flds, ACFG,
+                                dataclasses.replace(cfg, workers=4))
+    done_t = eng_t.render(traj())
+    eng_t.close()
+
+    assert [r.rid for r in done_t] == [r.rid for r in done_s]
+    by_rid = {r.rid: r for r in done_s}
+    for r in done_t:
+        np.testing.assert_array_equal(r.image, by_rid[r.rid].image)
+    st_s, st_t = eng_s.engine_stats(), eng_t.engine_stats()
+    for c in DETERMINISTIC_COUNTERS:
+        assert st_s[c] == st_t[c], (c, st_s[c], st_t[c])
+
+
+# ------------------------------------------------- Stage-B instrumentation
+def test_stage_b_commit_performs_no_pad_sort(flds, monkeypatch):
+    """The tentpole invariant: pad/sort (and layout building generally)
+    is Stage-A work — it must never execute inside the commit section,
+    at any prefetch depth."""
+    calls = {"pad": 0, "sort": 0, "layout": 0, "in_commit": 0}
+    real_pad = pipeline.pad_rays_to_blocks
+    real_sort = pipeline.block_sort
+    real_layout = pool_lib.build_layout
+
+    def pad(*a, **kw):
+        calls["pad"] += 1
+        calls["in_commit"] += admission.commit_active()
+        return real_pad(*a, **kw)
+
+    def sort(*a, **kw):
+        calls["sort"] += 1
+        calls["in_commit"] += admission.commit_active()
+        return real_sort(*a, **kw)
+
+    def layout(*a, **kw):
+        calls["layout"] += 1
+        calls["in_commit"] += admission.commit_active()
+        return real_layout(*a, **kw)
+
+    monkeypatch.setattr(pipeline, "pad_rays_to_blocks", pad)
+    monkeypatch.setattr(pipeline, "block_sort", sort)
+    monkeypatch.setattr(pool_lib, "build_layout", layout)
+
+    for prefetch in (0, 2):
+        eng = RenderServingEngine(flds, ACFG, serve_cfg(0, prefetch))
+        eng.render(replay_traj(6))
+    assert calls["pad"] > 0 and calls["sort"] > 0 and calls["layout"] > 0
+    assert calls["in_commit"] == 0, \
+        f"pad/sort ran inside the Stage-B commit section: {calls}"
+
+
+# ----------------------------------------------------- snapshot integrity
+def test_plan_snapshot_never_torn_under_concurrent_rebase(flds):
+    """Satellite regression: a plan's entry snapshot (arrays + version)
+    must be internally consistent even while the engine thread rebases
+    the entry.  Entry generation g writes value g into every map — a
+    torn snapshot would mix generations."""
+    cache = fc_probe.ProbeCache(fc_probe.ProbeReuseConfig(refresh_every=0))
+    cam = cam_at(0.7)
+
+    def maps_of(gen):
+        return fc_probe.ProbeMaps(np.full((4,), gen, np.int32),
+                                  np.full((4,), gen, np.float32),
+                                  np.full((4,), gen, np.float32), 0)
+
+    with cache.lock:
+        cache._store(cam, ACFG, maps_of(0))
+    entry = cache._entries[0]
+    stop = threading.Event()
+    torn = []
+
+    def reader():
+        while not stop.is_set():
+            plan = fc_probe.plan_probe(cache, cam, ACFG)
+            if plan.kind != "reuse":
+                continue
+            m = plan.src_maps
+            gens = {int(m.counts[0]), int(m.opacity[0]), int(m.depth[0])}
+            if len(gens) != 1:
+                torn.append(gens)
+            # version stamp must belong to the same generation
+            if plan.basis[2] != int(m.counts[0]):
+                torn.append(("version", plan.basis[2], int(m.counts[0])))
+
+    threads = [threading.Thread(target=reader) for _ in range(4)]
+    for t in threads:
+        t.start()
+    for gen in range(1, 300):
+        # engine-thread rebase: reassign fields + bump version under lock
+        # (the commit path for a refresh plan)
+        fc_probe.commit_probe_plan(cache, cam, ACFG,
+                                   fc_probe.ProbePlan("refresh", entry),
+                                   maps_of(gen))
+    stop.set()
+    for t in threads:
+        t.join()
+    assert not torn, f"observed torn entry snapshots: {torn[:5]}"
+    assert entry.version == 299
+
+
+# ------------------------------------------------------------- unit tests
+def test_executor_contract():
+    ran = []
+    sync = executor_lib.make_executor(0)
+    assert isinstance(sync, executor_lib.SyncExecutor)
+    sync.submit("a", lambda: ran.append(1) or "r1")
+    sync.submit("a", lambda: ran.append(2) or "r2")   # idempotent
+    assert ran == [1]
+    assert sync.take("a") == "r1"
+    assert sync.take("a") is None                     # taken once
+    assert sync.take("never") is None
+
+    thr = executor_lib.make_executor(2)
+    assert isinstance(thr, executor_lib.ThreadedExecutor)
+    thr.submit("k", lambda: time.sleep(0.05) or "slow")
+    thr.submit("k", lambda: "dup")                    # idempotent
+    assert thr.take("k") == "slow"                    # blocks until done
+    assert thr.take("k") is None
+    assert thr.take("never") is None
+    thr.close()
+
+
+def test_render_engine_facade_size_budget():
+    """The fast tier fails if serve/render_engine.py regrows past its
+    line budget (same check make lint runs via tools/check_sizes.py)."""
+    tools = Path(__file__).resolve().parent.parent / "tools"
+    sys.path.insert(0, str(tools))
+    try:
+        import check_sizes
+        assert check_sizes.violations() == []
+    finally:
+        sys.path.remove(str(tools))

@@ -319,3 +319,77 @@ def test_engine_stats_expose_scenecache(setup):
     assert sc["entries"] == 4 and sc["resident_bytes"] > 0
     assert sc["resident_bytes"] <= sc["byte_budget"]
     assert st["scene_block_hit_rate"] == 0.0
+
+
+# ---------------------------------------------------------- serialization
+def test_key_bytes_round_trip():
+    """key_to_bytes/from_bytes must reproduce (digest, cell) exactly —
+    the wire format an external/sharded store exchanges."""
+    rng = np.random.default_rng(3)
+    o, d = _block(rng)
+    (key, cell), = block_keys(CFG, "mic", ACFG, o, d, np.asarray([32]))
+    buf = scenecache.key_to_bytes(key, cell)
+    key2, cell2 = scenecache.key_from_bytes(buf)
+    assert key2 == key and cell2 == cell
+    assert isinstance(buf, bytes)
+    # byte layout is stable: same inputs, same bytes (no process state)
+    assert scenecache.key_to_bytes(key, cell) == buf
+
+
+def test_entry_bytes_round_trip_and_store_load():
+    """A dumped resident entry reloads bit-exactly into another store,
+    through the normal byte-budgeted store path."""
+    rng = np.random.default_rng(4)
+    B = ACFG.block_size
+    src = SceneBlockCache(SceneCacheConfig(byte_budget=1 << 20))
+    o, d = _block(rng, B=B)
+    (key, cell), = block_keys(src.cfg, "mic", ACFG, o, d, np.asarray([24]))
+    rgb, acc, depth = (rng.uniform(size=(B, 3)).astype(np.float32),
+                       rng.uniform(size=(B,)).astype(np.float32),
+                       rng.uniform(size=(B,)).astype(np.float32))
+    src.store(key, cell, rgb, acc, depth, 3)
+    data = src.dump_entry(key)
+    assert data is not None and src.dump_entry(b"absent") is None
+
+    # an entry that can never fit is REJECTED, not silently "loaded"
+    tiny = SceneBlockCache(SceneCacheConfig(byte_budget=64))
+    assert tiny.load_entry(data) is None and len(tiny) == 0
+
+    dst = SceneBlockCache(SceneCacheConfig(byte_budget=1 << 20))
+    assert dst.load_entry(data) == key
+    out = dst.lookup(key)
+    np.testing.assert_array_equal(out.rgb, rgb)
+    np.testing.assert_array_equal(out.acc, acc)
+    np.testing.assert_array_equal(out.depth, depth)
+    assert out.chunks == 3
+    assert dst.resident_bytes() <= dst.cfg.byte_budget
+    # round-trip at the record level too
+    k2, c2, o2 = scenecache.entry_from_bytes(data)
+    assert k2 == key and c2 == cell
+    np.testing.assert_array_equal(o2.depth, depth)
+
+
+def test_serial_rejects_foreign_and_truncated_records():
+    rng = np.random.default_rng(5)
+    o, d = _block(rng)
+    (key, cell), = block_keys(CFG, "mic", ACFG, o, d, np.asarray([8]))
+    buf = scenecache.key_to_bytes(key, cell)
+    with pytest.raises(ValueError):
+        scenecache.key_from_bytes(b"XXXX" + buf[4:])
+    with pytest.raises(ValueError):
+        scenecache.entry_from_bytes(buf)           # key record, not entry
+    with pytest.raises(ValueError):
+        scenecache.key_from_bytes(buf + b"\x00")   # trailing garbage
+    # truncation anywhere must surface as the documented ValueError,
+    # never a bare struct.error
+    ent = scenecache.entry_to_bytes(key, cell,
+                                    scenecache.BlockOutput(
+                                        np.zeros((4, 3), np.float32),
+                                        np.zeros((4,), np.float32),
+                                        np.zeros((4,), np.float32), 1))
+    for cut in (5, len(buf) // 2, len(buf) - 3):
+        with pytest.raises(ValueError):
+            scenecache.key_from_bytes(buf[:cut])
+    for cut in (5, len(buf) // 2, len(ent) // 2, len(ent) - 7):
+        with pytest.raises(ValueError):
+            scenecache.entry_from_bytes(ent[:cut])
