@@ -4,12 +4,19 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-full lint bench-serve bench-serve-sweep \
+.PHONY: test test-fleet test-full lint bench-serve bench-serve-sweep \
         bench-serve-latency bench-serve-workers bench-scenecache \
-        bench-scenecache-budgets dryrun-serve
+        bench-scenecache-budgets bench-fleet dryrun-serve
 
 test:
 	$(PY) -m pytest -x -q
+
+# multi-device fleet lane: jax locks the device count at init, so these
+# tests need their own interpreter with forced host devices (cheap CPU
+# stand-in for a multi-chip host; see tests/test_fleet.py)
+test-fleet:
+	XLA_FLAGS="--xla_force_host_platform_device_count=4$(if $(XLA_FLAGS), $(XLA_FLAGS))" \
+	$(PY) -m pytest -x -q -m fleet
 
 test-full:
 	$(PY) -m pytest -m "" -q
@@ -38,6 +45,11 @@ bench-scenecache:
 
 bench-scenecache-budgets:
 	$(PY) benchmarks/scene_cache.py --budgets
+
+# N engine replicas x one shared sharded scenecache (the script forces
+# 4 host devices itself when XLA_FLAGS doesn't already pin a count)
+bench-fleet:
+	$(PY) benchmarks/render_fleet.py
 
 dryrun-serve:
 	$(PY) -m repro.launch.render_serve --dryrun

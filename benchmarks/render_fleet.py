@@ -1,0 +1,225 @@
+"""Render-fleet benchmark: N engine replicas x one shared sharded cache.
+
+  PYTHONPATH=src python benchmarks/render_fleet.py          # via make bench-fleet
+
+The distributed-fleet workload (ROADMAP item): several RenderServingEngine
+replicas — each with Stage-A speculation placed on secondary devices via
+the DeviceExecutor — serve the SAME pose orbit concurrently against one
+shared ``ShardedSceneCache``.  The pose overlap is the point: replicas
+beyond the first should pull Phase-II block outputs from the shared store
+instead of re-marching them, exactly the multi-client scene-space reuse
+the cache exists for.
+
+Gates (per replica count in --replicas, all must hold for ok):
+
+  * every frame from every replica is BIT-IDENTICAL to a plain
+    single-engine synchronous run of the same pose (so the PSNR delta vs
+    that baseline is exactly 0.0 dB) — placement and sharding move where
+    work runs and where blocks live, never what commits;
+  * cross-replica reuse: at >= 2 replicas, replicas beyond the first
+    record scene_block_hits > 0 (their blocks came from the shared
+    store; laps=1 keeps within-replica hits out of the signal);
+  * every shard stays within its per-shard byte budget;
+  * aggregate fps (total frames / wall clock) >= 0.75x the single-sync
+    baseline fps.  On this 1-core container replicas CONTEND for the
+    same ALUs rather than overlapping, so aggregate throughput can only
+    reach parity via shared-store hits, not exceed it — the 0.75 floor
+    checks sharding/locking overhead stays small, not that a fleet
+    scales on hardware that cannot.
+
+The script forces 4 host devices itself (before the first jax import)
+when XLA_FLAGS does not already pin a count, mirroring the launcher's
+dry-run mode.  Rows append to out/bench/render_fleet.json.
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+_flags = os.environ.get("XLA_FLAGS", "")
+if "xla_force_host_platform_device_count" not in _flags:
+    # must precede the first jax import (jax locks device count on init)
+    os.environ["XLA_FLAGS"] = (
+        _flags + " --xla_force_host_platform_device_count=4").strip()
+
+import argparse
+import threading
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+import numpy as np
+
+from common import emit_rows as _emit_rows, serve_bench_acfg
+from repro.core import fields, scene
+from repro.scenecache import SceneCacheConfig, ShardedSceneCache
+from repro.serve import executor as executor_lib
+from repro.serve.render_engine import (RenderRequest, RenderServeConfig,
+                                       RenderServingEngine)
+
+
+def trajectory_requests(scene_name, poses, size, dtheta, offset):
+    return [RenderRequest(
+        rid=offset + i, scene=scene_name,
+        cam=scene.look_at_camera(size, size, theta=0.55 + dtheta * i,
+                                 phi=0.5))
+        for i in range(poses)]
+
+
+def run_fleet(flds, acfg, args, n_replicas):
+    """n_replicas engines over one shared sharded cache; returns
+    (frames per replica, wall seconds, engines, shared cache)."""
+    shared = ShardedSceneCache(
+        SceneCacheConfig(byte_budget=args.scenecache_mb << 20),
+        shards=args.shards)
+    cfg = RenderServeConfig(slots=2, blocks_per_batch=8,
+                            reuse=None, radiance=None,
+                            prefetch=2, devices=2)
+    engines = [RenderServingEngine(flds, acfg, cfg, scenecache=shared)
+               for _ in range(n_replicas)]
+    results = [None] * n_replicas
+
+    def worker(i):
+        # staggered start: replica i replays the orbit after replica
+        # i-1 has begun populating the shared store
+        time.sleep(0.25 * i)
+        reqs = []
+        for t in range(args.trajectories):
+            offset = (i * args.trajectories + t) * args.poses
+            reqs.extend(trajectory_requests(
+                args.scene, args.poses, args.size, args.dtheta, offset))
+        results[i] = engines[i].render(reqs)
+
+    threads = [threading.Thread(target=worker, args=(i,), daemon=True)
+               for i in range(n_replicas)]
+    t0 = time.time()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    wall = time.time() - t0
+    return results, wall, engines, shared
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scene", default="mic")
+    ap.add_argument("--poses", type=int, default=6,
+                    help="orbit length each trajectory replays")
+    ap.add_argument("--size", type=int, default=32)
+    ap.add_argument("--dtheta", type=float, default=0.04)
+    ap.add_argument("--trajectories", type=int, default=1,
+                    help="trajectories per replica (same orbit, fresh rids)")
+    ap.add_argument("--replicas", type=int, nargs="+", default=[1, 2, 4])
+    ap.add_argument("--scenecache-mb", type=int, default=8)
+    ap.add_argument("--shards", type=int, default=4)
+    args = ap.parse_args()
+
+    import jax
+    print(f"== render_fleet: {len(jax.devices())} devices, "
+          f"orbit {args.poses} poses x {args.trajectories} traj, "
+          f"{args.size}x{args.size}, scene={args.scene}, "
+          f"sharded cache {args.scenecache_mb} MB / {args.shards} shards ==")
+    field = scene.make_scene(args.scene)
+    flds = {args.scene: fields.analytic_field_fns(field)}
+    acfg = serve_bench_acfg()
+
+    # single synchronous no-cache engine: the bit-identity baseline AND
+    # the fps comparator (run_engine-style warm pass compiles the march
+    # into the shared module cache first, keeping clocks compile-free)
+    base_cfg = RenderServeConfig(slots=2, blocks_per_batch=8,
+                                 reuse=None, radiance=None)
+    base_reqs = trajectory_requests(args.scene, args.poses, args.size,
+                                    args.dtheta, 0)
+    warm = RenderServingEngine(flds, acfg, base_cfg)
+    warm.render([base_reqs[0]])
+    warm.close()
+    eng0 = RenderServingEngine(flds, acfg, base_cfg)
+    t0 = time.time()
+    ref_frames = eng0.render(list(base_reqs))
+    base_dt = time.time() - t0
+    eng0.close()
+    base_fps = len(ref_frames) / base_dt
+    ref = {r.rid % args.poses: r.image for r in ref_frames}
+    print(f"  baseline single sync engine : {base_fps:5.2f} fps "
+          f"({base_dt:.2f}s for {len(ref_frames)} frames)")
+
+    # warm the fleet path too: Stage-A jits compile per DEVICE, and the
+    # baseline warm pass only touched device 0 — one untimed fleet pass
+    # compiles probe/warp on both secondary devices (round-robin visits
+    # each) so the replicas=1 clock stays compile-free
+    _res, _w, wengs, wcache = run_fleet(flds, acfg, args, 1)
+    for e in wengs:
+        e.close()
+    wcache.close()
+
+    rows, all_ok = [], True
+    for n in args.replicas:
+        results, wall, engines, shared = run_fleet(flds, acfg, args, n)
+        frames = [r for res in results for r in res]
+        fps = len(frames) / wall
+
+        identical = all(
+            np.array_equal(r.image, ref[r.rid % args.poses])
+            for r in frames)
+        # 20*log10 of a zero max-abs-diff is exactly a 0.0 dB delta
+        max_abs = max(
+            float(np.max(np.abs(
+                np.asarray(r.image, np.float64)
+                - np.asarray(ref[r.rid % args.poses], np.float64))))
+            for r in frames)
+        cross_hits = sum(e.engine_stats()["scene_block_hits"]
+                         for e in engines[1:])
+        st = shared.stats()
+        budget_ok = all(b <= st["per_shard_budget"]
+                        for b in st["per_shard_resident_bytes"])
+        device_ok = all(
+            isinstance(e.executor, executor_lib.DeviceExecutor)
+            for e in engines)
+        for e in engines:
+            e.close()
+        shared.close()
+
+        fps_ok = fps >= 0.75 * base_fps
+        reuse_ok = (n < 2) or cross_hits > 0
+        ok = identical and budget_ok and device_ok and fps_ok and reuse_ok
+        all_ok &= ok
+        print(f"  replicas {n}: {fps:5.2f} fps aggregate "
+              f"({len(frames)} frames / {wall:.2f}s)  "
+              f"bit-identical {'yes' if identical else 'NO'} "
+              f"(max|diff| {max_abs:.1e} -> delta "
+              f"{'0.0' if identical else '>0'} dB)  "
+              f"cross-replica hits {cross_hits}  "
+              f"hit_rate {st['hit_rate']:.3f}  "
+              f"{'OK' if ok else 'FAIL'}")
+        rows.append({
+            "bench": "fleet", "scene": args.scene, "size": args.size,
+            "poses": args.poses, "trajectories": args.trajectories,
+            "replicas": n, "devices_per_replica": 2,
+            "shards": args.shards,
+            "scenecache_mb": args.scenecache_mb,
+            "fps_aggregate": fps, "fps_single_sync": base_fps,
+            "frames": len(frames),
+            "frames_identical": identical,
+            "psnr_delta_db": 0.0 if identical else float("inf"),
+            "cross_replica_hits": cross_hits,
+            "shared_hit_rate": st["hit_rate"],
+            "per_shard_resident_bytes": st["per_shard_resident_bytes"],
+            "per_shard_budget": st["per_shard_budget"],
+            "budget_ok": budget_ok,
+            "fps_floor_note": "0.75x single-sync floor: 1-core container "
+                              "— replicas contend, shared-store hits buy "
+                              "back the contention; the floor gates "
+                              "sharding overhead, not hardware scaling",
+            "ok": ok,
+        })
+    print(f"  acceptance (bit-identical frames -> 0.0 dB, cross-replica "
+          f"hits > 0 at >= 2 replicas, per-shard budgets hold, aggregate "
+          f"fps >= 0.75x single sync): {'OK' if all_ok else 'FAIL'}")
+    _emit_rows("render_fleet", rows)
+    return all_ok
+
+
+if __name__ == "__main__":
+    sys.exit(0 if main() else 1)

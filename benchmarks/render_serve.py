@@ -169,10 +169,25 @@ def run_replay(args):
         for r in full_hits)
     counters_ok = (st_r["probe_hits"] + st_r["probe_misses"]
                    + st_r["probe_skips"] == st_r["admissions"])
-    stall_r = np.asarray([r.stats["admit_stall_s"] for r in done_r]) * 1e3
-    stall_s = np.asarray([r.stats["admit_stall_s"] for r in done_s]) * 1e3
-    p99_r = float(np.percentile(stall_r, 99))
-    p99_s = float(np.percentile(stall_s, 99))
+    # timing gate over best-of-3 repetitions per side, like the workers
+    # gate: p99 over a short replay IS the max frame stall, and both
+    # configs only stall on lap-1 fresh probes (25-35 ms here), so a
+    # single-run comparison is one sample of a noisy extreme — the
+    # size-32 ok:false row in out/bench was exactly such an outlier
+    # (misprepares 0, both sides statistically identical across reps)
+    def stall_p99(done):
+        return float(np.percentile(np.asarray(
+            [r.stats["admit_stall_s"] for r in done]) * 1e3, 99))
+
+    p99s_r, p99s_s = [stall_p99(done_r)], [stall_p99(done_s)]
+    for _ in range(2):
+        d, _, e = run_engine(flds, acfg, reuse_cfg, traj())
+        p99s_r.append(stall_p99(d))
+        e.close()
+        d, _, e = run_engine(flds, acfg, sync_cfg, traj())
+        p99s_s.append(stall_p99(d))
+        e.close()
+    p99_r, p99_s = min(p99s_r), min(p99s_s)
     # "no worse" with a small epsilon + 10% headroom for timer noise
     admission_ok = p99_r <= p99_s * 1.10 + 0.5
     print(f"== render_serve replay: {args.poses}-pose orbit x {args.laps} "
@@ -229,6 +244,10 @@ def run_replay(args):
         "misprepares": st_r["misprepares"],
         "admission_stall_p99_ms_prefetch": p99_r,
         "admission_stall_p99_ms_sync": p99_s,
+        "stall_gate_note": "best-of-3 p99 per side; p99 over a short "
+                           "replay equals the max frame stall (lap-1 "
+                           "fresh probes on both sides), so single-run "
+                           "comparison is timer-noise dominated",
         "admission_ok": admission_ok,
         "prefetch_identical": prefetch_identical,
         "ok": (full_hit_zero_probe and counters_ok and admission_ok

@@ -144,7 +144,7 @@ def scenecache_smoke(size: int = 16, poses: int = 3, clients: int = 2,
 def _concrete(args):
     from repro.core import fields, pipeline, scene
     from repro.framecache import ProbeReuseConfig, RadianceReuseConfig
-    from repro.scenecache import SceneCacheConfig
+    from repro.scenecache import SceneCacheConfig, ShardedSceneCache
     from repro.serve.render_engine import (RenderRequest, RenderServeConfig,
                                            RenderServingEngine)
 
@@ -153,14 +153,19 @@ def _concrete(args):
         block_size=args.block, chunk=16, sort_by_opacity=True)
     flds = {s: fields.analytic_field_fns(scene.make_scene(s))
             for s in ("mic", "hotdog")}
+    # --shards > 1 shares one sharded store INSTANCE (the fleet form);
+    # otherwise the engine builds its own plain store from the config
+    sc_cfg = (SceneCacheConfig(byte_budget=int(args.scenecache_mb * (1 << 20)))
+              if args.scenecache_mb > 0 else None)
+    shared = (ShardedSceneCache(sc_cfg, shards=args.shards)
+              if sc_cfg is not None and args.shards > 1 else None)
     eng = RenderServingEngine(flds, acfg, RenderServeConfig(
         slots=args.slots, blocks_per_batch=args.blocks_per_batch,
         reuse=ProbeReuseConfig(),
         radiance=None if args.no_radiance else RadianceReuseConfig(),
-        scenecache=(SceneCacheConfig(
-            byte_budget=int(args.scenecache_mb * (1 << 20)))
-            if args.scenecache_mb > 0 else None),
-        prefetch=args.prefetch, workers=args.workers))
+        scenecache=None if shared is not None else sc_cfg,
+        prefetch=args.prefetch, workers=args.workers,
+        devices=args.devices), scenecache=shared)
 
     reqs = []
     for i in range(args.poses):
@@ -223,9 +228,18 @@ def main():
                     help="Stage-A executor worker threads (0 = synchronous "
                          "executor; N overlaps probe/warp device work with "
                          "the in-flight march on N threads)")
+    ap.add_argument("--devices", type=int, default=0,
+                    help="place Stage-A speculation on up to N secondary "
+                         "jax devices (0 = off; takes precedence over "
+                         "--workers; degrades to the synchronous executor "
+                         "on a single-device host)")
     ap.add_argument("--scenecache-mb", type=float, default=0.0,
                     help="enable scene-space block reuse with this byte "
                          "budget in MB (0 = off)")
+    ap.add_argument("--shards", type=int, default=1,
+                    help="shard the scene cache N ways (with "
+                         "--scenecache-mb; >1 uses the fleet-shared "
+                         "ShardedSceneCache routed by key bytes)")
     args = ap.parse_args()
     if args.dryrun:
         _dryrun(args.multi_pod)

@@ -18,11 +18,16 @@ share hits and bounded memory.
               lookups across requests (serve/render_engine.py);
   serial.py — stable to_bytes/from_bytes layouts for keys and entries —
               the wire format an external/sharded multi-host store
-              exchanges (keys are stable digests, so they shard).
+              exchanges (keys are stable digests, so they shard);
+  sharded.py— ShardedSceneCache: N shard stores routed by key bytes,
+              per-shard byte budgets + locks, async fetch futures joined
+              at the serving engine's pool sweep — the store the render
+              fleet's engine replicas share.
 """
 from .key import acfg_token, block_keys  # noqa: F401
 from .render import render_adaptive_cached  # noqa: F401
 from .serial import (entry_from_bytes, entry_to_bytes,  # noqa: F401
-                     key_from_bytes, key_to_bytes)
+                     key_from_bytes, key_to_bytes, peek_entry_key)
+from .sharded import ShardedSceneCache, shard_of  # noqa: F401
 from .store import (BlockOutput, SceneBlockCache,  # noqa: F401
                     SceneCacheConfig)

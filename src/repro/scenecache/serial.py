@@ -97,6 +97,23 @@ def entry_to_bytes(key: bytes, cell: tuple, out: BlockOutput) -> bytes:
     ])
 
 
+def peek_entry_key(buf: bytes) -> bytes:
+    """The key digest of a serialized entry WITHOUT decoding its arrays.
+
+    The sharded store routes wire records by key bytes (sharded.py), so
+    replication needs the key before it knows which shard's ``load_entry``
+    should decode the record.  Raises ValueError like the full parsers.
+    """
+    if buf[:4] != ENTRY_MAGIC:
+        raise ValueError(f"not a scenecache entry record "
+                         f"(magic {buf[:4]!r} != {ENTRY_MAGIC!r})")
+    try:
+        key, _cell, _off = _read_key(buf, 4)
+    except struct.error as e:
+        raise ValueError(f"truncated entry record: {e}") from e
+    return key
+
+
 def entry_from_bytes(buf: bytes) -> Tuple[bytes, tuple, BlockOutput]:
     """Inverse of ``entry_to_bytes``.  The arrays are fresh host copies
     (the record buffer is not aliased)."""

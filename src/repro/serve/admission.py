@@ -73,6 +73,14 @@ class RenderServeConfig:
     # overlaps march device time.  Commits stay on the engine thread in
     # admission order at any worker count.
     workers: int = 0
+    # Multi-device Stage-A placement (the fleet tier): n > 0 places
+    # speculation on up to n SECONDARY jax devices (jax.devices()[1:],
+    # round-robin per slot) while the pooled march owns device 0.
+    # Takes precedence over ``workers``; degrades to the synchronous
+    # executor on a single-device host (executor.make_executor).  Frames
+    # and deterministic counters stay bit-identical at any device count
+    # (tests/test_fleet.py).
+    devices: int = 0
 
 
 @dataclasses.dataclass

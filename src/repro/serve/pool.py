@@ -24,6 +24,7 @@ march, and budget-descending selection keeps batches budget-homogeneous
 from __future__ import annotations
 
 import dataclasses
+import threading
 from collections import OrderedDict
 from functools import partial
 from typing import List, Optional
@@ -41,27 +42,31 @@ from ..scenecache import key as scenecache_key
 # LRU-bounded: a reloaded/retrained scene makes fresh FieldFns closures,
 # and without eviction the stale executables (and the params their
 # closures capture) would pile up for the process lifetime.
+# Locked: a fleet runs engine REPLICAS on separate threads (one engine
+# thread each, benchmarks/render_fleet.py), and they share this cache.
 # NOTE: the march closes over fns — fine for analytic fields (no arrays);
 # an NGP-backed production path should pass params as jit ARGS instead,
 # which is exactly what launch/render_serve.build_pooled_march_cell does.
 _MARCH_CACHE: OrderedDict = OrderedDict()
 _MARCH_CACHE_MAX = 32
+_MARCH_CACHE_LOCK = threading.Lock()
 
 
 def batched_march(fns, acfg):
-    """One jitted (N, B)-block march per (field, config) — LRU-shared.
-
-    Engine thread only (the OrderedDict is not locked): executors run
-    Stage-A probe/warp work off-thread, never the pooled march."""
+    """One jitted (N, B)-block march per (field, config) — LRU-shared
+    across engine instances AND fleet replica threads (the lock covers
+    only the OrderedDict bookkeeping; jax.jit itself is thread-safe and
+    compilation happens lazily at the first call)."""
     key = (fns, acfg)
-    if key not in _MARCH_CACHE:
-        march = partial(pipeline._march_block, fns, acfg)
-        _MARCH_CACHE[key] = jax.jit(
-            lambda o, d, b: jax.lax.map(lambda a: march(*a), (o, d, b)))
-        while len(_MARCH_CACHE) > _MARCH_CACHE_MAX:
-            _MARCH_CACHE.popitem(last=False)
-    _MARCH_CACHE.move_to_end(key)
-    return _MARCH_CACHE[key]
+    with _MARCH_CACHE_LOCK:
+        if key not in _MARCH_CACHE:
+            march = partial(pipeline._march_block, fns, acfg)
+            _MARCH_CACHE[key] = jax.jit(
+                lambda o, d, b: jax.lax.map(lambda a: march(*a), (o, d, b)))
+            while len(_MARCH_CACHE) > _MARCH_CACHE_MAX:
+                _MARCH_CACHE.popitem(last=False)
+        _MARCH_CACHE.move_to_end(key)
+        return _MARCH_CACHE[key]
 
 
 @dataclasses.dataclass
@@ -167,13 +172,27 @@ class BlockPool:
         pooled in the SAME round — cross-request sharing without any
         inter-slot coordination.  Pool items already recorded their miss
         at admission, so these re-checks don't count misses (hits do).
+
+        This sweep is the fleet tier's ASYNC-FETCH JOIN POINT: against a
+        store exposing ``fetch_async`` (scenecache/sharded.py) the
+        re-checks fan out as one future per pooled block — concurrent
+        across shards, the stand-in for remote shard RPCs — and are
+        joined here before the round's dispatch.  Delivery order and
+        semantics are identical to the synchronous path; only the fetch
+        latency overlaps.
         """
         if self.scenecache is None or not self.items:
             return
+        fetch = getattr(self.scenecache, "fetch_async", None)
+        if fetch is not None:
+            futs = [fetch(it[5], count_miss=False)
+                    if it[5] is not None else None for it in self.items]
+            outs = [f.result() if f is not None else None for f in futs]
+        else:
+            outs = [self.scenecache.lookup(it[5], count_miss=False)
+                    if it[5] is not None else None for it in self.items]
         rest = []
-        for it in self.items:
-            out = (self.scenecache.lookup(it[5], count_miss=False)
-                   if it[5] is not None else None)
+        for it, out in zip(self.items, outs):
             if out is None:
                 rest.append(it)
             else:

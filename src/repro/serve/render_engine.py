@@ -16,9 +16,10 @@ The pipeline lives in four layers — see serve/README.md:
     + pad/sort layout) and the Stage-B commit (revalidate, book, slot);
   * ``pool``       — block pooling, batch assembly, in-batch dedup,
     scene-store delivery, the shared jitted-march LRU;
-  * ``executor``   — WHERE Stage A executes: inline (workers=0, the
-    bit-identical default) or on worker threads that overlap probe
-    device time with the in-flight march;
+  * ``executor``   — WHERE Stage A executes: inline (the bit-identical
+    default), on worker threads, or placed on secondary jax devices
+    (the fleet tier) — all overlap probe device time with the in-flight
+    march, which owns device 0;
   * ``stats``      — counters and aggregate reporting.
 
 Invariant spanning all layers: speculation (any thread, any depth) only
@@ -69,7 +70,8 @@ class RenderServingEngine:
         self.scenecache = scenecache
         # engine counters (across render() calls) — see serve/stats.py
         self.counters = stats_lib.EngineCounters()
-        self.executor = executor_lib.make_executor(rcfg.workers)
+        self.executor = executor_lib.make_executor(rcfg.workers,
+                                                   rcfg.devices)
 
     # counter back-compat: eng.blocks_marched etc. read through to the
     # stats layer (only consulted when normal attribute lookup fails)

@@ -215,25 +215,85 @@ def test_plan_snapshot_never_torn_under_concurrent_rebase(flds):
 
 
 # ------------------------------------------------------------- unit tests
-def test_executor_contract():
-    ran = []
-    sync = executor_lib.make_executor(0)
-    assert isinstance(sync, executor_lib.SyncExecutor)
-    sync.submit("a", lambda: ran.append(1) or "r1")
-    sync.submit("a", lambda: ran.append(2) or "r2")   # idempotent
-    assert ran == [1]
-    assert sync.take("a") == "r1"
-    assert sync.take("a") is None                     # taken once
-    assert sync.take("never") is None
+# Factories, not instances: each contract case needs a FRESH executor
+# (close() is part of the contract under test).  DeviceExecutor is
+# constructed over whatever devices exist — on the default single-device
+# lane that is [device 0], which exercises the identical contract; the
+# fleet lane re-runs the engine-level paths on real secondary devices.
+EXECUTOR_FACTORIES = {
+    "sync": lambda: executor_lib.SyncExecutor(),
+    "threaded": lambda: executor_lib.ThreadedExecutor(2),
+    "device": lambda: executor_lib.DeviceExecutor(
+        devices=list(__import__("jax").devices())),
+}
 
-    thr = executor_lib.make_executor(2)
-    assert isinstance(thr, executor_lib.ThreadedExecutor)
-    thr.submit("k", lambda: time.sleep(0.05) or "slow")
-    thr.submit("k", lambda: "dup")                    # idempotent
-    assert thr.take("k") == "slow"                    # blocks until done
-    assert thr.take("k") is None
-    assert thr.take("never") is None
-    thr.close()
+
+@pytest.mark.parametrize("kind", sorted(EXECUTOR_FACTORIES))
+def test_executor_contract(kind):
+    """The hardened contract, identical across ALL backends: idempotent
+    submit per key; blocking take; take of an unknown key is None; every
+    submitted key drains through take (no leaks); reset and close are
+    idempotent; submit after close raises."""
+    make = EXECUTOR_FACTORIES[kind]
+    ex = make()
+    ran = []
+    ex.submit("a", lambda: ran.append(1) or "r1")
+    ex.submit("a", lambda: ran.append(2) or "r2")     # idempotent
+    assert ex.take("a") == "r1"
+    assert ran == [1]
+    assert ex.take("a") is None                       # taken once
+    assert ex.take("never") is None
+    ex.submit("k", lambda: time.sleep(0.05) or "slow")
+    assert ex.take("k") == "slow"                     # blocks until done
+
+    # leak check: take drains every submitted key
+    keys = [f"key{i}" for i in range(5)]
+    for k in keys:
+        ex.submit(k, lambda k=k: f"v-{k}")
+    assert ex.pending() == len(keys)
+    assert [ex.take(k) for k in keys] == [f"v-{k}" for k in keys]
+    assert ex.pending() == 0
+
+    # reset idempotent; pending speculation dropped
+    ex.submit("r", lambda: "gone")
+    ex.reset()
+    ex.reset()
+    assert ex.pending() == 0 and ex.take("r") is None
+
+    # close idempotent; submit afterwards must raise
+    ex.close()
+    ex.close()
+    with pytest.raises(RuntimeError):
+        ex.submit("late", lambda: "x")
+    assert ex.take("late") is None
+
+
+def test_take_steals_queued_speculation():
+    """Stall regression (BENCH workers_gate row): the engine must never
+    block on speculation still QUEUED behind a busy worker — take()
+    cancels the unstarted future and runs the closure inline.  With one
+    execution slot, taking the second submission used to wait out the
+    first's sleep; stolen inline it returns immediately."""
+    ex = executor_lib.ThreadedExecutor(1, max_concurrent=1)
+    ex.submit("slow", lambda: time.sleep(2.0) or "slow")
+    ex.submit("fast", lambda: "fast")
+    t0 = time.time()
+    assert ex.take("fast") == "fast"
+    assert time.time() - t0 < 1.0, "take() waited behind queued work"
+    ex.close()
+
+
+def test_make_executor_single_device_fallback():
+    """devices>0 on this single-device host degrades to SyncExecutor
+    (the fleet lane covers the true multi-device selection)."""
+    import jax
+    assert jax.device_count() >= 1
+    ex = executor_lib.make_executor(0, devices=2)
+    if jax.device_count() == 1:
+        assert isinstance(ex, executor_lib.SyncExecutor)
+    else:
+        assert isinstance(ex, executor_lib.DeviceExecutor)
+    ex.close()
 
 
 def test_render_engine_facade_size_budget():

@@ -19,8 +19,9 @@ from repro.core import fields, pipeline, scene
 from repro.framecache import base as fc_base
 from repro.framecache import probe as fc_probe
 from repro.framecache import radiance as fc_radiance
-from repro.scenecache import (SceneBlockCache, SceneCacheConfig, block_keys,
-                              render_adaptive_cached)
+from repro.scenecache import (SceneBlockCache, SceneCacheConfig,
+                              ShardedSceneCache, block_keys,
+                              render_adaptive_cached, shard_of)
 from repro.serve.render_engine import (RenderRequest, RenderServeConfig,
                                        RenderServingEngine)
 
@@ -393,3 +394,105 @@ def test_serial_rejects_foreign_and_truncated_records():
     for cut in (5, len(buf) // 2, len(ent) // 2, len(ent) - 7):
         with pytest.raises(ValueError):
             scenecache.entry_from_bytes(ent[:cut])
+
+
+# ---------------------------------------------------------- sharded store
+def test_shard_routing_pure_and_stable():
+    """Routing is a pure function of the key bytes — stable across
+    instances, processes, and hosts.  The golden literals pin the exact
+    mapping (int.from_bytes(key[:8], 'little') % n): a routing change
+    would silently strand every replicated entry on the wrong shard."""
+    golden = [  # blake2b-16 digests of b"block-a/b/c"
+        (bytes.fromhex("ff4ae11015502c538ed2bf412a48081f"), 3, 6),
+        (bytes.fromhex("23cb8a0909dc5440836dec32520bad9c"), 3, 2),
+        (bytes.fromhex("6ec6f77cafee3e64332257d68a63d412"), 2, 1),
+    ]
+    for key, at4, at7 in golden:
+        assert shard_of(key, 4) == at4
+        assert shard_of(key, 7) == at7
+        assert shard_of(key, 1) == 0
+    # only the first 8 bytes route: the digest tail never moves an entry
+    k = golden[0][0]
+    assert shard_of(k, 4) == shard_of(k[:8] + b"\xff" * 8, 4)
+    # two independent caches agree on placement for arbitrary keys
+    a = ShardedSceneCache(SceneCacheConfig(byte_budget=1 << 20), shards=4)
+    b = ShardedSceneCache(SceneCacheConfig(byte_budget=1 << 20), shards=4)
+    rng = np.random.default_rng(7)
+    for _ in range(32):
+        key = rng.bytes(16)
+        assert a._shard(key) == b._shard(key) == shard_of(key, 4)
+        assert 0 <= shard_of(key, 4) < 4
+    a.close(), b.close()
+
+
+@settings(max_examples=5, deadline=None)
+@given(st.integers(min_value=0, max_value=10_000))
+def test_sharded_per_shard_budget_never_exceeded(seed):
+    """Property: after EVERY operation of an arbitrary store/lookup
+    sequence, each shard holds resident_bytes() <= byte_budget // n —
+    the per-shard bound, not just the global one."""
+    rng = np.random.default_rng(seed)
+    B = 16
+    entry_bytes = scenecache.BlockOutput(*_mk_out(rng, B), 0).nbytes
+    budget = int(entry_bytes * 3.5) * 2          # ~1.75 entries per shard
+    cache = ShardedSceneCache(SceneCacheConfig(byte_budget=budget), shards=2)
+    per = budget // 2
+    keys = [rng.bytes(16) for _ in range(10)]
+    for _ in range(60):
+        op = rng.integers(0, 3)
+        k = keys[rng.integers(0, len(keys))]
+        if op == 2:
+            cache.lookup(k)
+        else:
+            cache.store(k, ("s", int(rng.integers(0, 2))),
+                        *_mk_out(rng, B), int(rng.integers(1, 4)))
+        st_ = cache.stats()
+        assert all(b <= per for b in st_["per_shard_resident_bytes"])
+        assert cache.resident_bytes() <= budget
+        assert st_["per_shard_budget"] == per
+    cache.close()
+
+
+@settings(max_examples=3, deadline=None)
+@given(st.integers(min_value=0, max_value=10_000))
+def test_sharded_n1_union_equals_plain_semantics(seed):
+    """Property: at shards=1 the sharded store is observationally equal
+    to a plain SceneBlockCache — same lookup results, same stats on
+    every common key — for an arbitrary op sequence."""
+    rng = np.random.default_rng(seed)
+    B = 8
+    cfg = SceneCacheConfig(byte_budget=1 << 16)
+    plain = SceneBlockCache(cfg)
+    shard = ShardedSceneCache(cfg, shards=1)
+    keys = [rng.bytes(16) for _ in range(6)]
+    for _ in range(50):
+        op = rng.integers(0, 3)
+        k = keys[rng.integers(0, len(keys))]
+        if op == 2:
+            got_p = plain.lookup(k)
+            got_s = shard.lookup(k)
+            assert (got_p is None) == (got_s is None)
+            if got_p is not None:
+                np.testing.assert_array_equal(got_p.rgb, got_s.rgb)
+        else:
+            cell = ("s", int(rng.integers(0, 2)))
+            out = _mk_out(rng, B)
+            chunks = int(rng.integers(1, 4))
+            assert (plain.store(k, cell, *out, chunks)
+                    == shard.store(k, cell, *out, chunks))
+        sp, ss = plain.stats(), shard.stats()
+        for key in sp:
+            assert sp[key] == ss[key], (key, sp[key], ss[key])
+        assert len(plain) == len(shard)
+        assert plain.resident_bytes() == shard.resident_bytes()
+    # replication routes through the same wire format
+    for k in keys:
+        dp, ds = plain.dump_entry(k), shard.dump_entry(k)
+        assert (dp is None) == (ds is None)
+        if dp is not None:
+            assert dp == ds
+            fresh = ShardedSceneCache(cfg, shards=4)
+            assert fresh.load_entry(dp) == k
+            assert fresh.shards[shard_of(k, 4)].lookup(k) is not None
+            fresh.close()
+    shard.close()
