@@ -6,7 +6,7 @@ export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test test-fleet test-full lint bench-serve bench-serve-sweep \
         bench-serve-latency bench-serve-workers bench-scenecache \
-        bench-scenecache-budgets bench-fleet dryrun-serve
+        bench-scenecache-budgets bench-fleet bench-march dryrun-serve
 
 test:
 	$(PY) -m pytest -x -q
@@ -45,6 +45,11 @@ bench-scenecache:
 
 bench-scenecache-budgets:
 	$(PY) benchmarks/scene_cache.py --budgets
+
+# fused single-kernel march vs chunked reference: <=0.1 dB + speedup
+# >=1.0 gates on a trained NGP, plus the streaming-dispatch round gate
+bench-march:
+	$(PY) benchmarks/fused_march.py --quick
 
 # N engine replicas x one shared sharded scenecache (the script forces
 # 4 host devices itself when XLA_FLAGS doesn't already pin a count)

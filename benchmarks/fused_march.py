@@ -1,0 +1,160 @@
+"""Fused-march benchmark: single-kernel Phase II vs the chunked reference.
+
+  PYTHONPATH=src python benchmarks/fused_march.py [--quick]
+
+Two sections, both appending JSON rows to out/bench/fused_march.json:
+
+  * replay — a short trained-NGP trajectory marches its Phase-II blocks
+    through BOTH backends (the serving pool's jitted batched march, so
+    this times exactly what the engine launches).  Gates:
+      - per-frame |PSNR(ref) - PSNR(fused)| vs the fixed-96 baseline
+        <= 0.1 dB (the backend-seam quality contract),
+      - chunks_done identical on every frame (early-termination parity),
+      - fused speedup >= 1.0x on the marched wall time.
+  * engine — a >=8-slot serving run with the fused backend and
+    inflight_batches >= 2.  Gate: some round launched > 1 batch
+    (the streaming scheduler actually fills idle dispatch slots).
+
+The trained model (not the analytic field) exercises the real kernel
+path: hash tables + padded MLP stacks resident in the fused kernel.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from common import baseline_image, emit_rows, serve_bench_acfg, trained_model
+from repro.core import pipeline, rendering, scene
+from repro.kernels import ops
+from repro.serve import pool as pool_lib
+from repro.serve.render_engine import (RenderRequest, RenderServeConfig,
+                                       RenderServingEngine)
+
+MAX_PSNR_DELTA_DB = 0.1
+
+
+def _frame_blocks(fns, acfg, cam):
+    """One pose's Phase-II block tensors (o_b, d_b, budgets, order, R)."""
+    o, d = scene.camera_rays(cam)
+    counts, _ = pipeline.probe_phase(fns, acfg, cam)
+    o, d, counts, _, _ = pipeline.pad_rays_to_blocks(acfg, o, d, counts)
+    order, budgets = pipeline.block_sort(acfg, counts)
+    B = acfg.block_size
+    return (o[order].reshape(-1, B, 3), d[order].reshape(-1, B, 3),
+            budgets, order, cam.height * cam.width)
+
+
+def _image(rgb_s, order, R, hw):
+    inv = jnp.zeros_like(order).at[order].set(
+        jnp.arange(order.shape[0], dtype=order.dtype))
+    return np.asarray(rgb_s.reshape(-1, 3)[inv][:R].reshape(*hw, 3))
+
+
+def replay_section(args):
+    params, cfg = trained_model("lego", quick=args.quick)
+    fns = ops.field_fns(params, cfg)
+    acfg_r = serve_bench_acfg(block=args.block)
+    acfg_f = dataclasses.replace(acfg_r, march_backend="fused")
+    cams = [scene.look_at_camera(args.size, args.size,
+                                 theta=0.9 + 0.08 * i, phi=0.55)
+            for i in range(args.frames)]
+
+    march_r = pool_lib.batched_march(fns, acfg_r)
+    march_f = pool_lib.batched_march(fns, acfg_f)
+    rows, t_ref = [], {"reference": 0.0, "fused": 0.0}
+    worst = 0.0
+    for fi, cam in enumerate(cams):
+        o_b, d_b, budgets, order, R = _frame_blocks(fns, acfg_r, cam)
+        outs, times = {}, {}
+        for name, march in [("reference", march_r), ("fused", march_f)]:
+            jax.block_until_ready(march(o_b, d_b, budgets))  # compile warm
+            t0 = time.time()
+            outs[name] = jax.block_until_ready(march(o_b, d_b, budgets))
+            times[name] = (time.time() - t0) * 1e3
+            t_ref[name] += times[name]
+        assert np.array_equal(np.asarray(outs["reference"][3]),
+                              np.asarray(outs["fused"][3])), (
+            f"frame {fi}: chunks_done diverged")
+        hw = (cam.height, cam.width)
+        base = jnp.asarray(baseline_image(fns, cam))
+        img_r = _image(outs["reference"][0], order, R, hw)
+        img_f = _image(outs["fused"][0], order, R, hw)
+        p_r = float(rendering.psnr(jnp.asarray(img_r), base))
+        p_f = float(rendering.psnr(jnp.asarray(img_f), base))
+        worst = max(worst, abs(p_r - p_f))
+        print(f"  frame {fi}: ref {times['reference']:7.1f}ms "
+              f"fused {times['fused']:7.1f}ms  "
+              f"psnr {p_r:.2f}/{p_f:.2f} dB (|d|={abs(p_r - p_f):.4f})")
+        rows.append(dict(bench="fused_march", mode="replay", frame=fi,
+                         ref_ms=times["reference"], fused_ms=times["fused"],
+                         psnr_ref_db=p_r, psnr_fused_db=p_f,
+                         n_blocks=int(o_b.shape[0])))
+    speedup = t_ref["reference"] / max(t_ref["fused"], 1e-9)
+    print(f"  total: ref {t_ref['reference']:.0f}ms fused "
+          f"{t_ref['fused']:.0f}ms -> {speedup:.2f}x, "
+          f"worst |psnr delta| {worst:.4f} dB")
+    assert worst <= MAX_PSNR_DELTA_DB, (
+        f"GATE: fused psnr delta {worst:.4f} dB > {MAX_PSNR_DELTA_DB}")
+    assert speedup >= 1.0, f"GATE: fused speedup {speedup:.2f}x < 1.0x"
+    rows.append(dict(bench="fused_march", mode="replay_summary",
+                     speedup=speedup, worst_psnr_delta_db=worst,
+                     gate_ok=True))
+    return rows, fns
+
+
+def engine_section(args, fns):
+    acfg = dataclasses.replace(serve_bench_acfg(block=64),
+                               march_backend="fused")
+    eng = RenderServingEngine({"lego": fns}, acfg, RenderServeConfig(
+        slots=max(args.slots, 8), blocks_per_batch=4, reuse=None,
+        inflight_batches=max(args.inflight, 2)))
+    reqs = [RenderRequest(rid=i, scene="lego",
+                          cam=scene.look_at_camera(
+                              32, 32, theta=0.9 + 0.05 * i, phi=0.55))
+            for i in range(max(args.slots, 8))]
+    t0 = time.time()
+    eng.render(reqs)
+    wall = time.time() - t0
+    st = eng.engine_stats()
+    hist = st["batches_per_round"]
+    print(f"  engine: {len(reqs)} frames in {wall:.2f}s, "
+          f"march p50 {st['march_ms_p50']:.1f}ms, "
+          f"batches/round {hist}")
+    assert hist and max(hist) > 1, (
+        f"GATE: no multi-batch rounds at {len(reqs)} slots: {hist}")
+    return [dict(bench="fused_march", mode="engine", frames=len(reqs),
+                 wall_s=wall, march_ms_p50=st["march_ms_p50"],
+                 march_ms_p99=st["march_ms_p99"],
+                 batches_per_round={str(k): v for k, v in hist.items()},
+                 gate_ok=True)]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--frames", type=int, default=3)
+    ap.add_argument("--size", type=int, default=48)
+    ap.add_argument("--block", type=int, default=128)
+    ap.add_argument("--slots", type=int, default=8)
+    ap.add_argument("--inflight", type=int, default=2)
+    args = ap.parse_args()
+    print("[fused-march] replay: reference vs fused backend")
+    rows, fns = replay_section(args)
+    print("[fused-march] engine: streaming dispatch at "
+          f">={max(args.slots, 8)} slots")
+    rows += engine_section(args, fns)
+    emit_rows("fused_march", rows)
+    print("[fused-march] all gates OK")
+
+
+if __name__ == "__main__":
+    main()

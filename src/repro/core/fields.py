@@ -23,6 +23,12 @@ import jax.numpy as jnp
 class FieldFns(NamedTuple):
     density: Callable  # (N,3) -> (sigma (N,), geo (N,G))
     color: Callable    # (geo (N,G), dirs (N,3)) -> rgb (N,3)
+    # Optional fused-march resources (kernels.ops.FusedMarchResources).
+    # When present AND ASDRConfig.march_backend == "fused", Phase II runs
+    # the single-kernel streaming march (kernels/fused_march.py) instead
+    # of chunked density/color calls.  None everywhere else — analytic
+    # and pure-jnp fields keep the reference chunked march.
+    fused: object = None
 
 
 def analytic_field_fns(field) -> FieldFns:

@@ -46,6 +46,11 @@ class ASDRConfig:
     # (count, probe-interpolated opacity) groups saturating rays into the
     # same blocks so whole blocks exit early (EXPERIMENTS.md §Perf).
     sort_by_opacity: bool = False
+    # Phase-II march backend: "reference" = chunked density/color calls
+    # per chunk (this module), "fused" = single-kernel streaming march
+    # (kernels/fused_march.py) when the FieldFns carries fused-march
+    # resources (fields without them fall back to the reference march).
+    march_backend: str = "reference"
 
 
 def render_fixed_fns(
@@ -75,7 +80,8 @@ def render_fixed_fns(
     return rgb, aux
 
 
-def _march_block(fns: FieldFns, acfg: ASDRConfig, origins, dirs, budget):
+def _march_block(fns: FieldFns, acfg: ASDRConfig, origins, dirs, budget,
+                 density_only: bool = False):
     """March one block of rays with a traced per-block sample budget.
 
     origins/dirs: (B, 3); budget: traced int32 scalar.
@@ -83,6 +89,10 @@ def _march_block(fns: FieldFns, acfg: ASDRConfig, origins, dirs, budget):
     is the per-ray termination depth ``E[t] + (1 - acc) * FAR``, the
     full-resolution replacement for the probe's stride-d proxy depth
     (framecache warps register against it at depth edges).
+
+    With ``density_only`` (static) the color MLP never runs and rgb stays
+    zero — the march only produces acc/depth, for rays whose radiance is
+    served from the warp/radiance tiers (serve/README.md).
     """
     B = origins.shape[0]
     C = acfg.chunk
@@ -104,15 +114,16 @@ def _march_block(fns: FieldFns, acfg: ASDRConfig, origins, dirs, budget):
         sigma, geo = fns.density(flat)
         sigma = sigma.reshape(B, C)
         sigma = jnp.where(valid[None, :], sigma, 0.0)
-        geo = geo.reshape(B, C, -1)
 
-        # color-density decoupling within the chunk
-        a_idx = jnp.arange(0, C, acfg.group)
-        A = a_idx.shape[0]
-        geo_a = geo[:, a_idx].reshape(B * A, -1)
-        dirs_a = jnp.repeat(dirs, A, axis=0)
-        col_a = fns.color(geo_a, dirs_a).reshape(B, A, 3)
-        colors = decouple.interpolate_group_colors(col_a, acfg.group, C)
+        if not density_only:
+            geo = geo.reshape(B, C, -1)
+            # color-density decoupling within the chunk
+            a_idx = jnp.arange(0, C, acfg.group)
+            A = a_idx.shape[0]
+            geo_a = geo[:, a_idx].reshape(B * A, -1)
+            dirs_a = jnp.repeat(dirs, A, axis=0)
+            col_a = fns.color(geo_a, dirs_a).reshape(B, A, 3)
+            colors = decouple.interpolate_group_colors(col_a, acfg.group, C)
 
         alphas = rendering.alphas_from_sigmas(sigma, delta_t)
         one_m = jnp.clip(1.0 - alphas, 1e-10, 1.0)
@@ -121,7 +132,8 @@ def _march_block(fns: FieldFns, acfg: ASDRConfig, origins, dirs, budget):
         intra = jnp.cumsum(log_steps, axis=-1) - log_steps  # exclusive
         trans = jnp.exp(log_t[:, None] + intra)
         w = trans * alphas
-        rgb = rgb + jnp.sum(w[..., None] * colors, axis=1)
+        if not density_only:
+            rgb = rgb + jnp.sum(w[..., None] * colors, axis=1)
         acc = acc + jnp.sum(w, axis=-1)
         dep = dep + jnp.sum(w * ts[None, :], axis=-1)
         log_t = log_t + jnp.sum(log_steps, axis=-1)
@@ -138,9 +150,29 @@ def _march_block(fns: FieldFns, acfg: ASDRConfig, origins, dirs, budget):
     # an early-terminated ray leaves a negligible transmittance tail; the
     # (1 - acc) * FAR term pins true background rays to the far plane
     depth = dep + (1.0 - acc) * scene.FAR
-    if acfg.white_background:
+    if acfg.white_background and not density_only:
         rgb = rgb + (1.0 - acc[:, None])
     return rgb, acc, depth, ci
+
+
+def march_blocks(fns: FieldFns, acfg: ASDRConfig, o_b, d_b, budgets,
+                 density_only: bool = False):
+    """March a batch of blocks: o_b/d_b (N, B, 3), budgets (N,) int32 ->
+    (rgb (N,B,3), acc (N,B), depth (N,B), chunks (N,)).
+
+    The backend seam for Phase II: with ``march_backend == "fused"`` and a
+    FieldFns carrying fused-march resources (kernels.ops.field_fns), the
+    whole batch runs as ONE streaming Pallas kernel; otherwise each block
+    runs the chunked reference march above under ``lax.map``.  Both paths
+    honor the same while_loop early-termination contract (identical
+    chunks_done, budgets masked identically).
+    """
+    if acfg.march_backend == "fused" and fns.fused is not None:
+        from ..kernels import ops as _kops  # lazy: core stays kernel-free
+        return _kops.fused_march_blocks(
+            fns.fused, acfg, o_b, d_b, budgets, density_only=density_only)
+    march = partial(_march_block, fns, acfg, density_only=density_only)
+    return jax.lax.map(lambda args: march(*args), (o_b, d_b, budgets))
 
 
 def block_sort(acfg: ASDRConfig, counts, opacity=None):
@@ -201,10 +233,7 @@ def render_adaptive(fns: FieldFns, acfg: ASDRConfig, origins, dirs, counts,
     o_s = origins[order].reshape(-1, B, 3)
     d_s = dirs[order].reshape(-1, B, 3)
 
-    march = partial(_march_block, fns, acfg)
-    rgb_s, acc_s, depth_s, chunks = jax.lax.map(
-        lambda args: march(*args), (o_s, d_s, budgets)
-    )
+    rgb_s, acc_s, depth_s, chunks = march_blocks(fns, acfg, o_s, d_s, budgets)
     # unsort
     inv = jnp.zeros_like(order).at[order].set(jnp.arange(R, dtype=order.dtype))
     rgb = rgb_s.reshape(R, 3)[inv]

@@ -1,0 +1,253 @@
+"""Fused streaming-march Pallas kernel — Phase II as ONE kernel launch.
+
+The paper's CIM array wins (§5.3) come from keeping weights and sample
+streams in place: a sample is generated, encoded, pushed through the
+MLPs and composited without ever leaving the array.  The chunked
+reference march (core/pipeline._march_block) instead calls the encode /
+density / color kernels as separate jitted ops per chunk, so every
+per-sample encoding and geo feature round-trips through HBM between
+launches.  This kernel is the TPU port of the paper's dataflow: per
+block program it
+
+  1. generates the chunk's sample positions from the block's rays
+     (ray setup is in-register; only origins/dirs/budget are read),
+  2. hash-encodes them against the FULL table stack — all L levels are
+     co-resident in VMEM for the whole march (hash_encode.py streams
+     them once per level; here the march is long enough that residency
+     beats streaming, cf. fused_mlp.py's layout notes),
+  3. runs the density chain on every sample and the color chain on
+     every ``group``-th anchor only — §4.3's decoupling moves INSIDE
+     the kernel, so non-anchor colors are lerped in-register,
+  4. composites transmittance/rgb/acc/depth and carries the running
+     log-transmittance across chunks in a ``while_loop`` with the exact
+     early-termination contract of the reference march (same chunk
+     count, same budget masking).
+
+Per-sample features (encodings, geo, anchor colors) never exist outside
+the kernel.  The only HBM traffic per block is rays in (B x 8 x 2),
+per-ray SH in (B x 128, computed ONCE per ray instead of once per
+anchor-sample), and the packed (B x 8) result out.
+
+Data layout (prepared by ops.fused_march_blocks):
+  o / d    (N*B, PPAD) f32  — rays padded to 8 lanes, one block per
+                              grid step
+  sh       (N*B, P)    f32  — SH(dir) pre-placed at cols [G, G+S)
+  budgets  (N, 8)      i32  — col 0 = per-block sample budget
+  meta     (L, 8)      i32  — hash_encode.grid_meta rows
+  tables   (L, T, F)   f32  — resident for all grid steps
+  wd / wc  (n, P, P)   f32  — fused_mlp packed weights (sigma col
+                              permuted to lane G)
+  out      (N*B, 8)    f32  — [acc, r, g, b, depth, chunks, 0, 0]
+
+``with_color=False`` is the density-only march (serve/README.md
+"density-only march rule"): the color chain and lerp are skipped
+entirely and rgb reads 0 — acc/depth/chunks keep full parity with the
+reference density-only march.
+
+VMEM accounting (full config): tables 16 levels x 2^19 x 2 x 4 B = 64 MB
+exceeds a 16 MB VMEM — the production lowering streams table levels via
+double-buffered DMA (guide §17) or shards levels over cores; THIS
+container validates in interpret mode where residency is simulated, and
+the small test config (8 x 2^14 x 2 = 128 KB) fits outright.  Weights:
+(nd+nc) x 64 KB as in fused_mlp.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from ..core.hashgrid import PRIMES
+
+P = 128      # padded feature width (MXU lane width) — matches fused_mlp
+PPAD = 8     # padded ray row [x, y, z, 0...]    — matches hash_encode
+OUT_W = 8    # packed output lanes [acc, r, g, b, depth, chunks, 0, 0]
+
+
+def _relu(x):
+    return jnp.maximum(x, 0.0)
+
+
+def _trunc_exp(x):
+    return jnp.exp(jnp.clip(x, -15.0, 15.0))
+
+
+def _encode_points(flat, meta, tables, n_levels):
+    """In-register hash encode: (M, 3) points -> (M, L*F) features.
+
+    Same math as hash_encode._encode_kernel, but over the whole resident
+    table stack (static level unroll) instead of one level per grid step.
+    """
+    feats_per_level = []
+    for level in range(n_levels):
+        res = meta[level, 0]
+        is_dense = meta[level, 1]
+        rows = meta[level, 2]
+        table = tables[level]                              # (T, F)
+
+        scaled = flat * res.astype(jnp.float32)
+        base = jnp.clip(jnp.floor(scaled).astype(jnp.int32), 0, res - 1)
+        frac = scaled - base.astype(jnp.float32)           # (M, 3)
+
+        acc = jnp.zeros((flat.shape[0], table.shape[-1]), jnp.float32)
+        for c in range(8):
+            ox, oy, oz = (c >> 2) & 1, (c >> 1) & 1, c & 1
+            cx = (base[:, 0] + ox).astype(jnp.uint32)
+            cy = (base[:, 1] + oy).astype(jnp.uint32)
+            cz = (base[:, 2] + oz).astype(jnp.uint32)
+            stride = (res + 1).astype(jnp.uint32)
+            dense_idx = cx + stride * (cy + stride * cz)
+            h = cx * np.uint32(PRIMES[0])
+            h = h ^ (cy * np.uint32(PRIMES[1]))
+            h = h ^ (cz * np.uint32(PRIMES[2]))
+            hash_idx = h % rows.astype(jnp.uint32)
+            idx = jnp.where(is_dense > 0, dense_idx,
+                            hash_idx).astype(jnp.int32)
+            f = table[idx]                                 # (M, F) gather
+            wx = frac[:, 0] if ox else 1.0 - frac[:, 0]
+            wy = frac[:, 1] if oy else 1.0 - frac[:, 1]
+            wz = frac[:, 2] if oz else 1.0 - frac[:, 2]
+            acc = acc + f.astype(jnp.float32) * (wx * wy * wz)[:, None]
+        feats_per_level.append(acc)
+    return jnp.concatenate(feats_per_level, axis=-1)       # (M, L*F)
+
+
+def _chains(x, w, n, final=None):
+    for i in range(n):
+        x = jnp.dot(x, w[i], preferred_element_type=jnp.float32)
+        if i < n - 1:
+            x = _relu(x)
+    return final(x) if final is not None else x
+
+
+def _march_kernel(o_ref, d_ref, sh_ref, bud_ref, meta_ref, tables_ref,
+                  wd_ref, wc_ref, out_ref, *, nd, nc, geo_dim, group,
+                  chunk, n_levels, near, far, log_eps_t, early_term,
+                  white_background, with_color):
+    B = o_ref.shape[0]
+    C = chunk
+    # read every ref up front: the loop body then touches only values
+    # (tables/weights stay resident; no ref reads inside the while_loop)
+    o = o_ref[...][:, :3]
+    d = d_ref[...][:, :3]
+    sh = sh_ref[...]
+    budget = bud_ref[0]
+    meta = meta_ref[...]
+    tables = tables_ref[...]
+    wd = wd_ref[...]
+    wc = wc_ref[...]
+
+    delta_t = (far - near) / budget.astype(jnp.float32)
+    n_chunks = (budget + C - 1) // C
+
+    # static per-chunk anchor geometry (§4.3 decoupling, in-kernel);
+    # indices stay python ints — a pallas kernel cannot capture constant
+    # index ARRAYS, so anchor selection / lerp expansion unroll over C
+    a_idx = [int(i) for i in range(0, C, group)]
+    A = len(a_idx)
+    lerp_l = [min(j // group, A - 1) for j in range(C)]
+    lerp_r = [min(j // group + 1, A - 1) for j in range(C)]
+    lerp_t = [float((j % group) / group) for j in range(C)]
+
+    def cond(state):
+        ci, log_t = state[0], state[1]
+        if not early_term:
+            return ci < n_chunks
+        return jnp.logical_and(ci < n_chunks, jnp.any(log_t > log_eps_t))
+
+    def body(state):
+        ci, log_t, rgb, acc, dep = state
+        idx = ci * C + jnp.arange(C)
+        valid = idx < budget
+        ts = near + (idx.astype(jnp.float32) + 0.5) * delta_t
+        pts = o[:, None, :] + ts[None, :, None] * d[:, None, :]  # (B, C, 3)
+        flat = pts.reshape(B * C, 3)
+
+        enc = _encode_points(flat, meta, tables, n_levels)   # (M, L*F)
+        enc = jnp.concatenate(
+            [enc, jnp.zeros((B * C, P - enc.shape[-1]), jnp.float32)],
+            axis=-1)
+        dout = _chains(enc, wd, nd)                          # (M, P)
+        sigma = _trunc_exp(dout[:, geo_dim]).reshape(B, C)
+        inside = jnp.all((flat >= 0.0) & (flat <= 1.0),
+                         axis=-1).reshape(B, C)
+        sigma = jnp.where(inside & valid[None, :], sigma, 0.0)
+
+        if with_color:
+            lane = jax.lax.broadcasted_iota(jnp.int32, dout.shape, 1)
+            geo = jnp.where(lane < geo_dim, dout, 0.0)
+            geo3 = geo.reshape(B, C, P)
+            geo_a = jnp.stack([geo3[:, i] for i in a_idx], axis=1)
+            cin = (geo_a + sh[:, None, :]).reshape(B * A, P)
+            rgb_a = _chains(cin, wc, nc,
+                            final=jax.nn.sigmoid)[:, :3].reshape(B, A, 3)
+            colors = jnp.stack(
+                [rgb_a[:, lerp_l[j]]
+                 + (rgb_a[:, lerp_r[j]] - rgb_a[:, lerp_l[j]]) * lerp_t[j]
+                 for j in range(C)], axis=1)
+
+        alphas = 1.0 - jnp.exp(-sigma * delta_t)
+        one_m = jnp.clip(1.0 - alphas, 1e-10, 1.0)
+        log_steps = jnp.log(one_m)
+        intra = jnp.cumsum(log_steps, axis=-1) - log_steps   # exclusive
+        trans = jnp.exp(log_t[:, None] + intra)
+        w = trans * alphas
+        if with_color:
+            rgb = rgb + jnp.sum(w[..., None] * colors, axis=1)
+        acc = acc + jnp.sum(w, axis=-1)
+        dep = dep + jnp.sum(w * ts[None, :], axis=-1)
+        log_t = log_t + jnp.sum(log_steps, axis=-1)
+        return ci + 1, log_t, rgb, acc, dep
+
+    state = (
+        jnp.asarray(0, jnp.int32),
+        jnp.zeros((B,)),
+        jnp.zeros((B, 3)),
+        jnp.zeros((B,)),
+        jnp.zeros((B,)),
+    )
+    ci, _, rgb, acc, dep = jax.lax.while_loop(cond, body, state)
+    depth = dep + (1.0 - acc) * far
+    if with_color and white_background:
+        rgb = rgb + (1.0 - acc[:, None])
+    out_ref[...] = jnp.concatenate(
+        [acc[:, None], rgb, depth[:, None],
+         jnp.broadcast_to(ci.astype(jnp.float32), (B,))[:, None],
+         jnp.zeros((B, OUT_W - 6), jnp.float32)], axis=1)
+
+
+def fused_march_call(o, d, sh, budgets, meta, tables, wd, wc, *,
+                     block_size, geo_dim, group, chunk, near, far,
+                     log_eps_t, early_term, white_background,
+                     with_color, interpret=True):
+    """o/d (N*B, PPAD), sh (N*B, P), budgets (N, 8) i32, meta (L, 8) i32,
+    tables (L, T, F), wd (nd,P,P), wc (nc,P,P) -> packed (N*B, OUT_W)."""
+    B = block_size
+    n_blocks = budgets.shape[0]
+    assert o.shape[0] == n_blocks * B, "one budget row per block"
+    L, T, F = tables.shape
+    kern = functools.partial(
+        _march_kernel, nd=wd.shape[0], nc=wc.shape[0], geo_dim=geo_dim,
+        group=group, chunk=chunk, n_levels=L, near=near, far=far,
+        log_eps_t=log_eps_t, early_term=early_term,
+        white_background=white_background, with_color=with_color)
+    return pl.pallas_call(
+        kern,
+        grid=(n_blocks,),
+        in_specs=[
+            pl.BlockSpec((B, PPAD), lambda i: (i, 0)),
+            pl.BlockSpec((B, PPAD), lambda i: (i, 0)),
+            pl.BlockSpec((B, P), lambda i: (i, 0)),
+            pl.BlockSpec((None, 8), lambda i: (i, 0)),
+            pl.BlockSpec((L, 8), lambda i: (0, 0)),
+            pl.BlockSpec((L, T, F), lambda i: (0, 0, 0)),
+            pl.BlockSpec((wd.shape[0], P, P), lambda i: (0, 0, 0)),
+            pl.BlockSpec((wc.shape[0], P, P), lambda i: (0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((B, OUT_W), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_blocks * B, OUT_W), jnp.float32),
+        interpret=interpret,
+    )(o, d, sh, budgets, meta, tables, wd, wc)

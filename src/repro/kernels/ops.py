@@ -15,6 +15,9 @@ it matches the pure-jnp model path.
 """
 from __future__ import annotations
 
+import math
+import threading
+from collections import OrderedDict
 from functools import partial
 from typing import Dict
 
@@ -22,7 +25,9 @@ import jax
 import jax.numpy as jnp
 
 from ..core import mlp as mlp_lib
+from ..core import rendering, scene
 from ..core.fields import FieldFns
+from . import fused_march as FMA
 from . import fused_mlp as FM
 from . import hash_encode as HE
 from . import volume_render as VR
@@ -106,6 +111,45 @@ def pack_color_weights(params: Dict) -> jnp.ndarray:
     return jnp.stack(ws)
 
 
+# Padded/permuted weight stacks are pure functions of the weight arrays,
+# yet every wrapper used to rebuild them per call — repeated engine
+# construction and multi-scene hot-swap re-laid-out identical weights on
+# each frame.  Memoized here keyed on weight-array identity (an LRU like
+# serve/pool.py's jitted-march cache); the cached entry keeps references
+# to the source arrays so their ids cannot be recycled while it lives.
+_PACK_CACHE: "OrderedDict[tuple, tuple]" = OrderedDict()
+_PACK_LOCK = threading.Lock()
+_PACK_MAX = 16
+_PACK_STATS = {"hits": 0, "misses": 0}
+
+
+def packed_weights(params: Dict, cfg: mlp_lib.MLPConfig):
+    """Memoized ``(wd, wc)`` padded weight stacks for an mlps param dict."""
+    key = (tuple(id(w) for w in params["density"]),
+           tuple(id(w) for w in params["color"]), cfg.geo_feature_dim)
+    with _PACK_LOCK:
+        hit = _PACK_CACHE.get(key)
+        if hit is not None:
+            _PACK_CACHE.move_to_end(key)
+            _PACK_STATS["hits"] += 1
+            return hit[0], hit[1]
+        _PACK_STATS["misses"] += 1
+    wd = pack_density_weights(params, cfg)
+    wc = pack_color_weights(params)
+    with _PACK_LOCK:
+        _PACK_CACHE[key] = (wd, wc,
+                            list(params["density"]), list(params["color"]))
+        _PACK_CACHE.move_to_end(key)
+        while len(_PACK_CACHE) > _PACK_MAX:
+            _PACK_CACHE.popitem(last=False)
+    return wd, wc
+
+
+def pack_cache_stats() -> Dict[str, int]:
+    with _PACK_LOCK:
+        return dict(_PACK_STATS, size=len(_PACK_CACHE))
+
+
 def _sh_padded(dirs, cfg: mlp_lib.MLPConfig):
     """SH(dirs) placed at cols [G, G+sh_dim) of a (N, P) buffer."""
     sh = mlp_lib.sh_encode(dirs, cfg.sh_degree).astype(jnp.float32)
@@ -127,8 +171,7 @@ def fused_field(enc, dirs, params: Dict, cfg: mlp_lib.MLPConfig,
     encp = _pad_cols(enc.astype(jnp.float32), FM.P)
     encp, _ = _pad_rows(encp, FM.TILE)
     shp, _ = _pad_rows(_sh_padded(dirs, cfg), FM.TILE)
-    wd = pack_density_weights(params, cfg)
-    wc = pack_color_weights(params)
+    wd, wc = packed_weights(params, cfg)
     out = _fused_field_padded(encp, shp, wd, wc, G, interpret=interpret)[:n]
     return out[:, 0], out[:, 1:4], out[:, 4 : 4 + G]
 
@@ -145,7 +188,7 @@ def density_mlp(enc, params: Dict, cfg: mlp_lib.MLPConfig,
     G = cfg.geo_feature_dim
     encp = _pad_cols(enc.astype(jnp.float32), FM.P)
     encp, _ = _pad_rows(encp, FM.TILE)
-    wd = pack_density_weights(params, cfg)
+    wd, _wc = packed_weights(params, cfg)
     out = _density_padded(encp, wd, G, interpret=interpret)[:n]
     return out[:, 0], out[:, 1 : 1 + G]
 
@@ -162,7 +205,7 @@ def color_mlp(geo, dirs, params: Dict, cfg: mlp_lib.MLPConfig,
     G = cfg.geo_feature_dim
     cin = _sh_padded(dirs, cfg).at[:, :G].set(geo.astype(jnp.float32))
     cin, _ = _pad_rows(cin, FM.TILE)
-    wc = pack_color_weights(params)
+    _wd, wc = packed_weights(params, cfg)
     out = _color_padded(cin, wc, interpret=interpret)[:n]
     return out[:, :3]
 
@@ -199,9 +242,66 @@ def volume_render(sigmas, anchor_colors, deltas, group: int,
     return rgb, acc
 
 
+# ---------------------------------------------------------------- fused march
+class FusedMarchResources:
+    """Device-resident inputs for the fused streaming march kernel.
+
+    A plain class (identity hash/eq, like the FieldFns closures) so a
+    FieldFns carrying one stays hashable for serve/pool.py's jitted-march
+    LRU.  Holds the grid meta/tables and the memoized packed weight
+    stacks — building one is cheap after the first ``packed_weights``
+    call for the params.
+    """
+
+    def __init__(self, params: Dict, cfg, interpret: bool = INTERPRET):
+        self.meta = grid_meta(cfg.grid)
+        self.tables = params["grid"].astype(jnp.float32)
+        self.wd, self.wc = packed_weights(params["mlps"], cfg.net)
+        self.net = cfg.net
+        self.interpret = interpret
+
+
+def fused_march_blocks(res: FusedMarchResources, acfg, o_b, d_b, budgets,
+                       density_only: bool = False):
+    """Run the single-kernel streaming march over a batch of blocks.
+
+    o_b/d_b (N, B, 3), budgets (N,) int32 -> (rgb (N,B,3), acc (N,B),
+    depth (N,B), chunks (N,)) with core.pipeline._march_block semantics
+    (same chunk count, budget masking, early termination).  SH features
+    are computed once per RAY here (the reference path recomputes them
+    per anchor-sample every chunk) and placed at the color-input lanes.
+    """
+    N, B, _ = o_b.shape
+    o8 = _pad_cols(o_b.astype(jnp.float32).reshape(N * B, 3), FMA.PPAD)
+    d_flat = d_b.astype(jnp.float32).reshape(N * B, 3)
+    d8 = _pad_cols(d_flat, FMA.PPAD)
+    sh = (jnp.zeros((N * B, FMA.P), jnp.float32)
+          if density_only else _sh_padded(d_flat, res.net))
+    bud = jnp.zeros((N, 8), jnp.int32).at[:, 0].set(
+        budgets.astype(jnp.int32))
+    out = FMA.fused_march_call(
+        o8, d8, sh, bud, res.meta, res.tables, res.wd, res.wc,
+        block_size=B, geo_dim=res.net.geo_feature_dim, group=acfg.group,
+        chunk=acfg.chunk, near=scene.NEAR, far=scene.FAR,
+        log_eps_t=math.log(rendering.EARLY_TERM_TRANSMITTANCE),
+        early_term=acfg.early_termination,
+        white_background=acfg.white_background,
+        with_color=not density_only, interpret=res.interpret)
+    out = out.reshape(N, B, FMA.OUT_W)
+    acc = out[:, :, 0]
+    rgb = out[:, :, 1:4]
+    depth = out[:, :, 4]
+    chunks = out[:, 0, 5].astype(jnp.int32)
+    return rgb, acc, depth, chunks
+
+
 # ------------------------------------------------------------------- FieldFns
 def field_fns(params: Dict, cfg) -> FieldFns:
-    """Kernel-backed FieldFns (cfg is core.model.NGPConfig)."""
+    """Kernel-backed FieldFns (cfg is core.model.NGPConfig).
+
+    Carries FusedMarchResources so ``ASDRConfig.march_backend="fused"``
+    routes Phase II through the single-kernel streaming march.
+    """
 
     def density(points):
         enc = hash_encode(points, params["grid"], cfg.grid)
@@ -212,4 +312,5 @@ def field_fns(params: Dict, cfg) -> FieldFns:
     def color(geo, dirs):
         return color_mlp(geo, dirs, params["mlps"], cfg.net)
 
-    return FieldFns(density=density, color=color)
+    return FieldFns(density=density, color=color,
+                    fused=FusedMarchResources(params, cfg))

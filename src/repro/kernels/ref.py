@@ -59,6 +59,19 @@ def ref_fused_field(enc, sh, wd, wc):
     return sigma, rgb, geo
 
 
+# --------------------------------------------------------------- fused march
+def ref_fused_march(fns, acfg, o_b, d_b, budgets, density_only=False):
+    """Oracle for kernels/fused_march.py: the chunked reference march
+    (core/pipeline._march_block) over a pure-jnp FieldFns — the exact
+    while_loop early-termination contract the fused kernel must keep
+    (chunks_done equality is asserted, not just value closeness)."""
+    from ..core import pipeline
+
+    march = lambda a: pipeline._march_block(  # noqa: E731
+        fns, acfg, *a, density_only=density_only)
+    return jax.lax.map(march, (o_b, d_b, budgets))
+
+
 # -------------------------------------------------------------- volume render
 def ref_volume_render(sigmas, anchor_colors, deltas, group: int,
                       valid=None, white_background: bool = True):

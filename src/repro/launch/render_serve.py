@@ -159,13 +159,16 @@ def _concrete(args):
               if args.scenecache_mb > 0 else None)
     shared = (ShardedSceneCache(sc_cfg, shards=args.shards)
               if sc_cfg is not None and args.shards > 1 else None)
+    if args.march_backend != "reference":
+        acfg = dataclasses.replace(acfg, march_backend=args.march_backend)
     eng = RenderServingEngine(flds, acfg, RenderServeConfig(
         slots=args.slots, blocks_per_batch=args.blocks_per_batch,
         reuse=ProbeReuseConfig(),
         radiance=None if args.no_radiance else RadianceReuseConfig(),
         scenecache=None if shared is not None else sc_cfg,
         prefetch=args.prefetch, workers=args.workers,
-        devices=args.devices), scenecache=shared)
+        devices=args.devices, inflight_batches=args.inflight_batches,
+        density_refresh=args.density_refresh), scenecache=shared)
 
     reqs = []
     for i in range(args.poses):
@@ -194,6 +197,10 @@ def _concrete(args):
           f"{100 * st['rays_marched_fraction']:.1f}% of total")
     print(f"  pooled batches        : {st['batches']} "
           f"(pad fraction {st['pad_block_fraction']:.2f})")
+    print(f"  march rounds          : {st['march_rounds']} "
+          f"(march p50 {st['march_ms_p50']:.1f} ms  "
+          f"p99 {st['march_ms_p99']:.1f} ms; batches/round "
+          f"{st['batches_per_round']})")
     if eng.scenecache is not None:
         sc = st["scenecache"]
         print(f"  scene-block reuse     : hit rate "
@@ -208,6 +215,9 @@ def _concrete(args):
                          for r in marched]) if marched else 0.0
     print(f"  phase-II samples      : {100 * mean_frac:.1f}% of fixed-"
           f"{acfg.ns_full} baseline (marched frames)")
+    if args.stats:
+        import json
+        print(json.dumps(st, indent=2, default=str))
 
 
 def main():
@@ -233,6 +243,25 @@ def main():
                          "jax devices (0 = off; takes precedence over "
                          "--workers; degrades to the synchronous executor "
                          "on a single-device host)")
+    ap.add_argument("--inflight-batches", type=int, default=1,
+                    help="batches dispatched per scheduling round (the "
+                         "streaming scheduler; >1 lets the next-largest "
+                         "scene group fill idle launches and double-"
+                         "buffers host<->device transfers)")
+    ap.add_argument("--march-backend", choices=("reference", "fused"),
+                    default="reference",
+                    help="Phase-II march backend; 'fused' runs the "
+                         "single-kernel streaming Pallas march for "
+                         "FieldFns that carry fused resources (analytic "
+                         "fields fall back to the reference march)")
+    ap.add_argument("--density-refresh", action="store_true",
+                    help="march warp-served rays through the color-free "
+                         "density march so warped frames regain exact "
+                         "acc/depth and re-enter the radiance cache")
+    ap.add_argument("--stats", action="store_true",
+                    help="dump the full engine_stats() dict as JSON "
+                         "(includes march_ms percentiles and the "
+                         "batches-per-round histogram)")
     ap.add_argument("--scenecache-mb", type=float, default=0.0,
                     help="enable scene-space block reuse with this byte "
                          "budget in MB (0 = off)")

@@ -81,6 +81,21 @@ class RenderServeConfig:
     # and deterministic counters stay bit-identical at any device count
     # (tests/test_fleet.py).
     devices: int = 0
+    # Streaming dispatch: up to this many batches launched per scheduling
+    # round (pool.dispatch_round) — when the largest-budget scene group
+    # runs dry, the next group's blocks fill the remaining launches, and
+    # all launches are in flight before any is collected (the double
+    # buffer).  1 = the classic one-batch round, bit-identical to every
+    # prior config.
+    inflight_batches: int = 1
+    # Opt-in density-only refresh marches: a PARTIAL radiance hit also
+    # marches its warp-valid rays through the color-free march (the
+    # fused kernel skips the color chain), recovering exact acc/depth so
+    # the warped frame re-enters the radiance cache instead of being
+    # a reuse dead-end.  Off by default: refreshed frames keep their
+    # warped rgb, so enabling this trades a bounded quality drift
+    # (min_valid_fraction / refresh_every still apply) for reuse reach.
+    density_refresh: bool = False
 
 
 @dataclasses.dataclass
@@ -113,6 +128,7 @@ class Prepared:
     layout: pool_lib.BlockLayout
     r_token: tuple
     prep_s: float
+    dens_layout: Optional[pool_lib.BlockLayout] = None
 
     def block_until_ready(self):
         """Wait for the speculated device buffers (threaded executors
@@ -155,8 +171,13 @@ def prepare(engine, req: RenderRequest) -> Prepared:
     warped = rplan.warped if (rplan is not None
                               and rplan.kind == "hit") else None
     layout = pool_lib.build_layout(acfg, req.cam, maps, warped)
+    dens_layout = None
+    if (engine.rcfg.density_refresh and warped is not None
+            and maps is not None):
+        dens_layout = pool_lib.build_density_layout(
+            acfg, req.cam, maps, warped)
     return Prepared(req, rplan, pplan, maps, layout,
-                    _radiance_token(rplan), time.time() - t0)
+                    _radiance_token(rplan), time.time() - t0, dens_layout)
 
 
 def admit(engine, req: RenderRequest, prepared: Prepared,
@@ -206,8 +227,14 @@ def admit(engine, req: RenderRequest, prepared: Prepared,
     # AND the radiance side resolved to the same warp (same march_idx)
     if (maps is prepared.maps and _radiance_token(rplan) == prepared.r_token):
         layout = prepared.layout
+        dens_layout = prepared.dens_layout
     else:
         layout = pool_lib.build_layout(acfg, req.cam, maps, warped)
+        dens_layout = None
+    if (engine.rcfg.density_refresh and dens_layout is None
+            and warped is not None and maps is not None):
+        dens_layout = pool_lib.build_density_layout(
+            acfg, req.cam, maps, warped)
 
     # ---- commit section: cache bookkeeping ONLY — no device-shape work
     _commit_depth += 1
@@ -224,7 +251,8 @@ def admit(engine, req: RenderRequest, prepared: Prepared,
             reused = fc_probe.commit_probe_plan(cache, req.cam, acfg,
                                                 pplan, maps)
         slot = Slot(req, layout, maps, reused, acfg.block_size,
-                    probe_skipped=probe_skipped, t_enqueue=t_enqueue)
+                    probe_skipped=probe_skipped, t_enqueue=t_enqueue,
+                    dens_layout=dens_layout)
     finally:
         _commit_depth -= 1
     return slot
@@ -242,7 +270,8 @@ class Slot:
     def __init__(self, req: RenderRequest, layout: pool_lib.BlockLayout,
                  maps: Optional[ProbeMaps], reused: bool, block_size: int,
                  probe_skipped: bool = False,
-                 t_enqueue: Optional[float] = None):
+                 t_enqueue: Optional[float] = None,
+                 dens_layout: Optional[pool_lib.BlockLayout] = None):
         self.req = req
         self.layout = layout
         self.rays = layout.rays          # padded (origins, dirs)
@@ -263,7 +292,16 @@ class Slot:
         self.chunks = np.zeros((n_blocks,), np.int64)
         self.cached_blocks = 0        # delivered from the scene store
         self.cached_chunks = 0
-        self.pending = n_blocks
+        # density-only refresh (opt-in): a second block layout over the
+        # warp-VALID rays whose acc/depth a color-free march recovers
+        self.dens_layout = dens_layout
+        n_dens = 0
+        if dens_layout is not None:
+            n_dens = dens_layout.budgets.shape[0]
+            self.dens_acc = np.zeros((n_dens, block_size), np.float32)
+            self.dens_depth = np.zeros((n_dens, block_size), np.float32)
+            self.dens_chunks = np.zeros((n_dens,), np.int64)
+        self.pending = n_blocks + n_dens
         # latency clock starts at ENQUEUE (render() entry), not slot
         # construction — latency_s must cover queue wait + admission
         # (probe/warp) + march end-to-end under the double-buffered path
@@ -280,6 +318,18 @@ class Slot:
         for bi in range(self.budgets.shape[0]):
             yield (self, bi, o_s[bi], d_s[bi], int(self.budgets[bi]))
 
+    def emit_density_blocks(self):
+        """Density-refresh work items, same shape as ``emit_blocks`` —
+        the pool tags them so ``collect`` routes to deliver_density."""
+        if self.dens_layout is None:
+            return
+        lay = self.dens_layout
+        B = self.block_size
+        o_s = lay.rays[0][lay.order].reshape(-1, B, 3)
+        d_s = lay.rays[1][lay.order].reshape(-1, B, 3)
+        for bi in range(lay.budgets.shape[0]):
+            yield (self, bi, o_s[bi], d_s[bi], int(lay.budgets[bi]))
+
     def deliver(self, bi: int, rgb, acc, depth, chunks, cached: bool = False):
         self.rgb[bi] = rgb
         self.acc[bi] = acc
@@ -288,6 +338,12 @@ class Slot:
         if cached:
             self.cached_blocks += 1
             self.cached_chunks += int(chunks)
+        self.pending -= 1
+
+    def deliver_density(self, bi: int, acc, depth, chunks):
+        self.dens_acc[bi] = acc
+        self.dens_depth[bi] = depth
+        self.dens_chunks[bi] = chunks
         self.pending -= 1
 
     def finalize(self, acfg: ASDRConfig) -> RenderRequest:
@@ -316,8 +372,27 @@ class Slot:
         else:
             img_flat = self.base_rgb.copy()
             img_flat[self.march_idx] = flat[: self.march_idx.size]
-            self.acc_full = None       # warped frames are never re-cached
-            self.depth_full = None
+            if self.dens_layout is not None:
+                # density refresh: every image ray now has an exact
+                # marched acc/depth — disoccluded rays from the color
+                # march, warp-valid rays from the density-only march —
+                # so this warped frame IS radiance-cacheable
+                lay = self.dens_layout
+                dRp = lay.order.shape[0]
+                dinv = np.zeros((dRp,), np.int64)
+                dinv[np.asarray(lay.order)] = np.arange(dRp)
+                dacc = self.dens_acc.reshape(dRp)[dinv]
+                ddep = self.dens_depth.reshape(dRp)[dinv]
+                acc_full = np.zeros((R,), np.float32)
+                depth_full = np.zeros((R,), np.float32)
+                acc_full[self.march_idx] = acc_flat[: self.march_idx.size]
+                depth_full[self.march_idx] = depth_flat[: self.march_idx.size]
+                acc_full[lay.march_idx] = dacc[: lay.march_idx.size]
+                depth_full[lay.march_idx] = ddep[: lay.march_idx.size]
+                self.acc_full, self.depth_full = acc_full, depth_full
+            else:
+                self.acc_full = None   # warped frames are never re-cached
+                self.depth_full = None
             rays_marched = int(self.march_idx.size)
         req.image = img_flat.reshape(H, W, 3)
         req.latency_s = time.time() - self.t0
@@ -338,10 +413,15 @@ class Slot:
             # compute actually spent: scene-store hits replay stored
             # outputs without marching, so their chunks count as REUSED
             # samples, not processed ones — the compute-fraction metrics
-            # must show the scene tier's savings
+            # must show the scene tier's savings.  Density-refresh chunks
+            # are real (color-free) march compute and count as processed.
             "samples_processed":
-                (int(self.chunks.sum()) - self.cached_chunks)
+                (int(self.chunks.sum()) - self.cached_chunks
+                 + (int(self.dens_chunks.sum())
+                    if self.dens_layout is not None else 0))
                 * self.block_size * acfg.chunk,
+            "density_rays": (0 if self.dens_layout is None
+                             else int(self.dens_layout.march_idx.size)),
             "samples_reused": self.cached_chunks
             * self.block_size * acfg.chunk + warp_rays * acfg.ns_full,
             "scene_block_hits": self.cached_blocks,

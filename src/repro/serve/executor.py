@@ -25,7 +25,9 @@ fleet benchmarks).
 
 ``SyncExecutor`` (the default) runs ``fn`` inline at submit time on the
 engine thread — byte-for-byte the pre-executor engine: the speculation
-overlaps only the HOST-side gap while the dispatched march is in flight.
+overlaps only the HOST-side gap while the dispatched round — up to
+``inflight_batches`` back-to-back march batches (pool.dispatch_round) —
+is in flight.
 ``ThreadedExecutor`` runs it on a worker pool and blocks each worker
 until the result's device buffers are READY, so probe/warp device time
 genuinely overlaps march device time.  ``DeviceExecutor`` additionally

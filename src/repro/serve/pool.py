@@ -23,6 +23,7 @@ march, and budget-descending selection keeps batches budget-homogeneous
 """
 from __future__ import annotations
 
+import concurrent.futures
 import dataclasses
 import threading
 from collections import OrderedDict
@@ -52,17 +53,25 @@ _MARCH_CACHE_MAX = 32
 _MARCH_CACHE_LOCK = threading.Lock()
 
 
-def batched_march(fns, acfg):
-    """One jitted (N, B)-block march per (field, config) — LRU-shared
-    across engine instances AND fleet replica threads (the lock covers
-    only the OrderedDict bookkeeping; jax.jit itself is thread-safe and
-    compilation happens lazily at the first call)."""
-    key = (fns, acfg)
+def batched_march(fns, acfg, density_only: bool = False):
+    """One jitted (N, B)-block march per (field, config, density flag) —
+    LRU-shared across engine instances AND fleet replica threads (the
+    lock covers only the OrderedDict bookkeeping; jax.jit itself is
+    thread-safe and compilation happens lazily at the first call).
+
+    Routes through ``pipeline.march_blocks``, so a FieldFns carrying
+    fused-march resources under ``march_backend="fused"`` compiles the
+    single-kernel streaming march; everything else gets the chunked
+    reference march.  ``density_only`` marches skip the color MLP
+    entirely (rgb reads zero) — the cheap acc/depth refresh for rays
+    whose radiance came from the warp/radiance tiers.
+    """
+    key = (fns, acfg, density_only)
     with _MARCH_CACHE_LOCK:
         if key not in _MARCH_CACHE:
-            march = partial(pipeline._march_block, fns, acfg)
-            _MARCH_CACHE[key] = jax.jit(
-                lambda o, d, b: jax.lax.map(lambda a: march(*a), (o, d, b)))
+            _MARCH_CACHE[key] = jax.jit(partial(
+                pipeline.march_blocks, fns, acfg,
+                density_only=density_only))
             while len(_MARCH_CACHE) > _MARCH_CACHE_MAX:
                 _MARCH_CACHE.popitem(last=False)
         _MARCH_CACHE.move_to_end(key)
@@ -122,12 +131,40 @@ def build_layout(acfg, cam, maps, warped) -> BlockLayout:
     return BlockLayout(rays, order, budgets, pad, march_idx, base_rgb, vf)
 
 
+def build_density_layout(acfg, cam, maps, warped) -> Optional[BlockLayout]:
+    """Pad + budget-sort the WARP-VALID rays of a partial radiance hit
+    for a density-only refresh march (opt-in via
+    ``RenderServeConfig.density_refresh``).
+
+    These rays' rgb is served by the warp, but without acc/depth the
+    warped frame can never re-enter the radiance cache ("warps never
+    chain").  A density-only march (no color MLP — the fused kernel
+    skips the color chain outright) recovers exact acc/depth for them,
+    so the finalized frame becomes cacheable again.  ``march_idx`` here
+    holds the VALID-ray image indices the density outputs scatter back
+    to.  None when the warp left no valid rays (nothing to refresh).
+    """
+    valid_idx = np.flatnonzero(warped.valid)
+    if valid_idx.size == 0:
+        return None
+    o, d = scene.camera_rays(cam)
+    sel = jnp.asarray(valid_idx, jnp.int32)
+    o, d, counts, opacity, pad = pipeline.pad_rays_to_blocks(
+        acfg, o[sel], d[sel], maps.counts[sel], maps.opacity[sel])
+    order_j, budgets_j = pipeline.block_sort(acfg, counts, opacity)
+    return BlockLayout((o, d), np.asarray(order_j), np.asarray(budgets_j),
+                       pad, valid_idx)
+
+
 class BlockPool:
     """The per-render() pool of undispatched blocks across live slots.
 
-    Items are (slot, block_index, o, d, budget, key, cell) tuples —
-    key/cell are None with the scene tier off, and the pooled-march path
-    is then byte-for-byte the pre-scenecache behavior.
+    Items are (slot, block_index, o, d, budget, key, cell, dens)
+    tuples — key/cell are None with the scene tier off, and the
+    pooled-march path is then byte-for-byte the pre-scenecache behavior.
+    ``dens`` marks a DENSITY-ONLY block (acc/depth refresh for
+    warp-served rays): those never carry a scene key — their rgb-less
+    outputs must not collide with color entries in the shared store.
     """
 
     def __init__(self, acfg, blocks_per_batch: int, scenecache, counters):
@@ -146,8 +183,11 @@ class BlockPool:
         resident in the scene store deliver HERE (their one counted
         lookup) and never enter the pool."""
         items = list(slot.emit_blocks(*slot.rays))
+        dens_items = [it + (None, None, True)
+                      for it in slot.emit_density_blocks()]
         if self.scenecache is None or not items:
-            self.items.extend(it + (None, None) for it in items)
+            self.items.extend(it + (None, None, False) for it in items)
+            self.items.extend(dens_items)
             return
         o_np = np.stack([np.asarray(it[2]) for it in items])
         d_np = np.stack([np.asarray(it[3]) for it in items])
@@ -157,11 +197,12 @@ class BlockPool:
         for it, kc in zip(items, kcs):
             out = self.scenecache.lookup(kc[0])
             if out is None:
-                self.items.append(it + kc)
+                self.items.append(it + kc + (False,))
             else:
                 it[0].deliver(it[1], out.rgb, out.acc, out.depth,
                               out.chunks, cached=True)
                 self.counters.scene_blocks_hit += 1
+        self.items.extend(dens_items)
 
     def sweep(self):
         """Deliver every pooled block whose key BECAME resident; keep the
@@ -187,35 +228,85 @@ class BlockPool:
         if fetch is not None:
             futs = [fetch(it[5], count_miss=False)
                     if it[5] is not None else None for it in self.items]
-            outs = [f.result() if f is not None else None for f in futs]
-        else:
-            outs = [self.scenecache.lookup(it[5], count_miss=False)
-                    if it[5] is not None else None for it in self.items]
+            self._join_and_deliver(futs)
+            return
+        outs = [self.scenecache.lookup(it[5], count_miss=False)
+                if it[5] is not None else None for it in self.items]
         rest = []
         for it, out in zip(self.items, outs):
-            if out is None:
+            if self._deliver_swept(it, out):
                 rest.append(it)
-            else:
-                it[0].deliver(it[1], out.rgb, out.acc, out.depth,
-                              out.chunks, cached=True)
-                self.counters.scene_blocks_hit += 1
         self.items = rest
+
+    def _join_and_deliver(self, futs):
+        """Join async shard fetches as they COMPLETE, delivering the done
+        prefix immediately — a slow shard delays only the items queued
+        behind it in submission order, not the whole sweep (delivery
+        order itself stays exactly the submission order, so frames and
+        counters are identical to the synchronous join)."""
+        results: dict = {}
+        owner = {f: i for i, f in enumerate(futs) if f is not None}
+        rest, next_i = [], 0
+
+        def drain(limit):
+            nonlocal next_i
+            while next_i < limit and (futs[next_i] is None
+                                      or next_i in results):
+                it = self.items[next_i]
+                if self._deliver_swept(it, results.get(next_i)):
+                    rest.append(it)
+                next_i += 1
+
+        for f in concurrent.futures.as_completed(owner):
+            results[owner[f]] = f.result()
+            drain(len(futs))
+        drain(len(futs))
+        self.items = rest
+
+    def _deliver_swept(self, it, out) -> bool:
+        """Deliver one swept lookup result; True = keep pooled."""
+        if out is None:
+            return True
+        it[0].deliver(it[1], out.rgb, out.acc, out.depth,
+                      out.chunks, cached=True)
+        self.counters.scene_blocks_hit += 1
+        return False
 
     # --------------------------------------------------------- dispatch
     def dispatch(self, march_for):
-        """Assemble and DISPATCH one batch (device-async); returns an
-        in-flight handle for ``collect``, or None with an empty pool.
+        """Back-compat single-batch round: the first handle of a
+        ``dispatch_round`` capped at one batch (or None, empty pool)."""
+        handles = self.dispatch_round(march_for, 1)
+        return handles[0] if handles else None
 
-        One batch per round, drawn from the largest-budget scene group so
-        batches stay budget-homogeneous across requests.  ``march_for``
-        maps a scene id to its jitted batched march.
+    def dispatch_round(self, march_for, max_batches: int = 1):
+        """The STREAMING scheduler: assemble and DISPATCH up to
+        ``max_batches`` batches (device-async) for one round; returns the
+        in-flight handles for ``collect`` in dispatch order.
+
+        Each batch is drawn from the pool's current largest-budget
+        (scene, density-flag) group, so batches stay budget- and
+        compile-homogeneous; when the head group runs out of blocks, the
+        NEXT largest group fills the remaining dispatch slots — at large
+        slot counts one batch per round left every other scene (and all
+        density refreshes) idle on the host.  All batches are launched
+        before any is collected, so batch k+1's host->device transfer
+        and compute overlap batch k's march (double buffering — the
+        engine additionally overlaps Stage-A speculation with the whole
+        in-flight round).  ``march_for(scene_id, density_only)`` maps a
+        group to its jitted batched march.
         """
-        if not self.items:
-            return None
+        handles = []
+        while self.items and len(handles) < max_batches:
+            handles.append(self._dispatch_one(march_for))
+        return handles
+
+    def _dispatch_one(self, march_for):
         self.items.sort(key=lambda it: -it[4])
-        scene_id = self.items[0][0].req.scene
+        head = self.items[0]
+        group = (head[0].req.scene, head[7])
         batch = [it for it in self.items
-                 if it[0].req.scene == scene_id][:self.blocks_per_batch]
+                 if (it[0].req.scene, it[7]) == group][:self.blocks_per_batch]
         taken = set(map(id, batch))
         self.items = [it for it in self.items if id(it) not in taken]
 
@@ -247,13 +338,16 @@ class BlockPool:
         # dispatch only — device arrays are fetched in collect(), after
         # the engine has overlapped Stage-A speculation with them
         return (batch, followers, n_pad,
-                march_for(scene_id)(o_b, d_b, budgets))
+                march_for(group[0], group[1])(o_b, d_b, budgets))
 
     def collect(self, inflight):
         """Fetch a dispatched batch and deliver/store its outputs."""
         batch, followers, n_pad, out = inflight
         rgb, acc, depth, chunks = (np.asarray(a) for a in out)
         for i, it in enumerate(batch):
+            if it[7]:
+                it[0].deliver_density(it[1], acc[i], depth[i], chunks[i])
+                continue
             it[0].deliver(it[1], rgb[i], acc[i], depth[i], chunks[i])
             if it[5] is not None:
                 self.scenecache.store(it[5], it[6], rgb[i], acc[i],

@@ -87,8 +87,9 @@ class RenderServingEngine:
     def _probe_key(self, req: RenderRequest):
         return admission.probe_key_for(self.rcfg, req)
 
-    def _march_for(self, scene_id: str):
-        return pool_lib.batched_march(self.fields[scene_id], self.acfg)
+    def _march_for(self, scene_id: str, density_only: bool = False):
+        return pool_lib.batched_march(self.fields[scene_id], self.acfg,
+                                      density_only)
 
     # ---------------------------------------------------------------- serve
     def render(self, requests: List[RenderRequest]) -> List[RenderRequest]:
@@ -148,16 +149,25 @@ class RenderServingEngine:
                 pool.add_slot(slot)
 
             pool.sweep()
-            inflight = pool.dispatch(self._march_for)
+            # streaming dispatch: up to inflight_batches batches launch
+            # back-to-back (next group fills idle launches), ALL in
+            # flight before any collect — see pool.dispatch_round
+            t_march = time.time()
+            inflights = pool.dispatch_round(
+                self._march_for, max(rcfg.inflight_batches, 1))
 
             # Stage-A prefetch: speculate admissions for the queue head
-            # while the dispatched march is in flight (clamped: a
+            # while the dispatched round is in flight (clamped: a
             # negative prefetch must mean "off", not a near-full slice)
             for req in queue[:max(rcfg.prefetch, 0)]:
                 ex.submit(id(req), partial(admission.prepare, self, req))
 
-            if inflight is not None:
+            for inflight in inflights:
                 pool.collect(inflight)
+            if inflights:
+                self.counters.march_ms.append(
+                    (time.time() - t_march) * 1e3)
+                self.counters.batches_per_round.append(len(inflights))
 
             still = []
             for slot in live:
@@ -171,14 +181,16 @@ class RenderServingEngine:
     def _finalize(self, slot: admission.Slot) -> RenderRequest:
         req = slot.finalize(self.acfg)
         self.counters.note_finalized(req.stats)
-        # only fully-rendered frames feed the radiance cache (framecache
-        # safety invariant: warps never chain).  The stored depth is the
-        # MARCH's per-ray termination depth — always pose-aligned (so even
-        # dilation-mode probe-reuse frames, whose probe maps carry
-        # depth=None, are cacheable) and sharper than the probe's stride-d
-        # proxy at depth edges.
+        # only frames with full marched acc/depth feed the radiance cache
+        # (framecache safety invariant: warps never chain) — that means
+        # fully-rendered frames, plus density-REFRESHED warped frames
+        # (opt-in), whose warp-valid rays re-marched acc/depth through
+        # the color-free path.  The stored depth is the MARCH's per-ray
+        # termination depth — always pose-aligned (so even dilation-mode
+        # probe-reuse frames, whose probe maps carry depth=None, are
+        # cacheable) and sharper than the probe's stride-d proxy.
         rad = self.radiance_caches.get(req.scene)
-        if rad is not None and slot.march_idx is None:
+        if rad is not None and slot.acc_full is not None:
             R = req.cam.height * req.cam.width
             rad.store(req.cam, self.acfg,
                       jnp.asarray(req.image.reshape(R, 3)),

@@ -19,7 +19,8 @@ This module owns the invariant arithmetic: probe hits + misses + skips
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict
+from collections import Counter
+from typing import Dict, List
 
 
 @dataclasses.dataclass
@@ -37,6 +38,12 @@ class EngineCounters:
     misprepares: int = 0          # speculated Stage-A work discarded
     samples_processed: int = 0
     samples_reused: int = 0
+    # per-round streaming-dispatch observability (engine thread only):
+    # wall time of each dispatch_round->collect window and how many
+    # batches it launched.  Wall times are TIMING, not scheduling — they
+    # are reported as percentiles, never gated for determinism.
+    march_ms: List[float] = dataclasses.field(default_factory=list)
+    batches_per_round: List[int] = dataclasses.field(default_factory=list)
 
     def note_finalized(self, req_stats: Dict):
         """Fold one finalized request's per-frame stats into the ledger."""
@@ -63,6 +70,15 @@ DETERMINISTIC_COUNTERS = (
     "samples_reused", "blocks_marched")
 
 
+def _percentile(xs: List[float], q: float) -> float:
+    """Nearest-rank percentile (matches the benches' convention); 0.0 on
+    an empty series so stats stay JSON-clean before any round ran."""
+    if not xs:
+        return 0.0
+    s = sorted(xs)
+    return float(s[min(int(len(s) * q / 100.0), len(s) - 1)])
+
+
 def engine_stats(counters: EngineCounters, probe_caches: Dict,
                  radiance_caches: Dict, scenecache) -> Dict:
     """The engine's aggregate stats dict (the public ``engine_stats()``)."""
@@ -81,6 +97,15 @@ def engine_stats(counters: EngineCounters, probe_caches: Dict,
         "misprepares": c.misprepares,
         "samples_processed": c.samples_processed,
         "samples_reused": c.samples_reused,
+        # streaming-dispatch round observability: march wall-time
+        # percentiles + how many batches each round launched (a
+        # histogram {n_batches: rounds}); batches_per_round > 1 is the
+        # signal that multi-batch rounds actually fill idle launches
+        "march_ms_p50": _percentile(c.march_ms, 50.0),
+        "march_ms_p99": _percentile(c.march_ms, 99.0),
+        "march_rounds": len(c.march_ms),
+        "batches_per_round": dict(sorted(
+            Counter(c.batches_per_round).items())),
     }
     hits = sum(pc.hits for pc in probe_caches.values())
     misses = sum(pc.misses for pc in probe_caches.values())

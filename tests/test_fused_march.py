@@ -1,0 +1,216 @@
+"""Fused single-kernel Phase-II march vs the chunked reference march.
+
+The oracle is ``ref.ref_fused_march`` — core.pipeline's chunked
+while_loop march over the PURE-JNP model FieldFns — so every assertion
+here pins the fused kernel (kernels/fused_march.py) against numerics
+that never touch Pallas.  ``chunks_done`` is asserted EXACTLY equal:
+the early-termination contract is part of the backend seam, not a
+tolerance.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import fields, pipeline, scene
+from repro.core.model import NGPConfig, init_ngp
+from repro.core.model import field_fns as jnp_field_fns
+from repro.kernels import ops, ref
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = NGPConfig.small()
+    params = init_ngp(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+@pytest.fixture(scope="module")
+def both_fns(model):
+    """(kernel-backed FieldFns with fused resources, pure-jnp FieldFns)."""
+    cfg, params = model
+    return ops.field_fns(params, cfg), jnp_field_fns(params, cfg)
+
+
+def _blocked_rays(n_blocks, block_size, theta=0.6, phi=0.4):
+    cam = scene.look_at_camera(n_blocks * block_size // 8, 8,
+                               theta=theta, phi=phi)
+    o, d = scene.camera_rays(cam)
+    return (o.reshape(n_blocks, block_size, 3),
+            d.reshape(n_blocks, block_size, 3))
+
+
+def _acfg(**kw):
+    base = dict(block_size=32, chunk=16, group=2, march_backend="fused")
+    base.update(kw)
+    return pipeline.ASDRConfig(**base)
+
+
+def _assert_march_equal(got, want, atol=1e-5):
+    """(rgb, acc, depth, chunks) parity; chunks exactly equal."""
+    for g, w, name in [(got[0], want[0], "rgb"), (got[1], want[1], "acc"),
+                       (got[2], want[2], "depth")]:
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   rtol=1e-4, atol=atol, err_msg=name)
+    assert np.array_equal(np.asarray(got[3]), np.asarray(want[3])), (
+        f"chunks_done mismatch: {got[3]} vs {want[3]}")
+
+
+# ----------------------------------------------------------------- parity
+def test_fused_march_matches_reference(both_fns):
+    """Budgets cover budget < chunk (16), multi-chunk (48), and a budget
+    not divisible by chunk (33 -> 3 chunks, last partially masked)."""
+    fns_k, fns_j = both_fns
+    acfg = _acfg()
+    o_b, d_b = _blocked_rays(3, acfg.block_size)
+    budgets = jnp.asarray([16, 48, 33], jnp.int32)
+    got = pipeline.march_blocks(fns_k, acfg, o_b, d_b, budgets)
+    want = ref.ref_fused_march(fns_j, acfg, o_b, d_b, budgets)
+    _assert_march_equal(got, want)
+    # budget 16 == one chunk; 48 -> 3; 33 -> ceil(33/16) = 3
+    assert np.asarray(got[3]).tolist() == [1, 3, 3]
+
+
+def test_fused_march_budget_below_chunk(both_fns):
+    fns_k, fns_j = both_fns
+    acfg = _acfg()
+    o_b, d_b = _blocked_rays(1, acfg.block_size)
+    budgets = jnp.asarray([7], jnp.int32)
+    got = pipeline.march_blocks(fns_k, acfg, o_b, d_b, budgets)
+    want = ref.ref_fused_march(fns_j, acfg, o_b, d_b, budgets)
+    _assert_march_equal(got, want)
+    assert int(got[3][0]) == 1
+
+
+def test_fused_march_group_not_dividing_chunk(both_fns):
+    """group=3 with chunk=16: the last anchor covers a short tail and the
+    lerp right-neighbour clamps — decouple.interpolate_group_colors
+    semantics must hold inside the kernel."""
+    fns_k, fns_j = both_fns
+    acfg = _acfg(group=3)
+    o_b, d_b = _blocked_rays(2, acfg.block_size)
+    budgets = jnp.asarray([32, 21], jnp.int32)
+    got = pipeline.march_blocks(fns_k, acfg, o_b, d_b, budgets)
+    want = ref.ref_fused_march(fns_j, acfg, o_b, d_b, budgets)
+    _assert_march_equal(got, want)
+
+
+def test_fused_march_early_termination_saturated_block(model):
+    """A block whose rays ALL saturate early must stop the while_loop at
+    the same chunk on both backends (chunks_done < ceil(budget/chunk))."""
+    cfg, params = model
+    # saturate the field: non-negative features + amplified non-negative
+    # density weights drive sigma to trunc_exp's clip everywhere inside
+    # the cube, so transmittance collapses within the first occupied chunk
+    hot = dict(params)
+    hot["grid"] = jnp.abs(params["grid"]) + 0.5
+    hot["mlps"] = dict(params["mlps"])
+    hot["mlps"]["density"] = [jnp.abs(w) * 4.0
+                              for w in params["mlps"]["density"]]
+    fns_k = ops.field_fns(hot, cfg)
+    fns_j = jnp_field_fns(hot, cfg)
+    acfg = _acfg(block_size=8)
+    # rays enter the cube at t = 0.3 (sample index ~9 of 192): saturation
+    # is guaranteed inside chunk 0, termination by the next chunk check
+    o = jnp.tile(jnp.asarray([0.45, 0.45, -0.3]), (8, 1))
+    o = o + jnp.linspace(0.0, 0.1, 8)[:, None] * jnp.asarray([1.0, 1.0, 0.0])
+    d = jnp.tile(jnp.asarray([0.0, 0.0, 1.0]), (8, 1))
+    o_b, d_b = o[None], d[None]
+    budgets = jnp.asarray([192], jnp.int32)
+    got = pipeline.march_blocks(fns_k, acfg, o_b, d_b, budgets)
+    want = ref.ref_fused_march(fns_j, acfg, o_b, d_b, budgets)
+    _assert_march_equal(got, want)
+    assert int(got[3][0]) < 192 // acfg.chunk, "early termination never fired"
+    np.testing.assert_allclose(np.asarray(got[1]), 1.0, atol=1e-4)
+
+
+def test_fused_march_early_termination_off(both_fns):
+    """With early_termination=False the loop must run every chunk."""
+    fns_k, fns_j = both_fns
+    acfg = _acfg(early_termination=False)
+    o_b, d_b = _blocked_rays(1, acfg.block_size)
+    budgets = jnp.asarray([48], jnp.int32)
+    got = pipeline.march_blocks(fns_k, acfg, o_b, d_b, budgets)
+    want = ref.ref_fused_march(fns_j, acfg, o_b, d_b, budgets)
+    _assert_march_equal(got, want)
+    assert int(got[3][0]) == 3
+
+
+def test_fused_march_pad_blocks(both_fns):
+    """Serve-layer pad blocks: budget=1, straight-up rays that never enter
+    the cube — the fused kernel must keep the same background output."""
+    fns_k, fns_j = both_fns
+    acfg = _acfg(block_size=8)
+    o = jnp.zeros((1, 8, 3), jnp.float32)
+    d = jnp.tile(jnp.asarray([0.0, 0.0, -1.0]), (1, 8, 1))
+    budgets = jnp.asarray([1], jnp.int32)
+    got = pipeline.march_blocks(fns_k, acfg, o, d, budgets)
+    want = ref.ref_fused_march(fns_j, acfg, o, d, budgets)
+    _assert_march_equal(got, want)
+    np.testing.assert_allclose(np.asarray(got[1]), 0.0, atol=1e-6)  # acc
+    np.testing.assert_allclose(np.asarray(got[0]), 1.0, atol=1e-6)  # white
+
+
+def test_fused_march_density_only(both_fns):
+    """Density-only marches (serve's warp refresh path) skip the color
+    chain entirely; acc/depth/chunks must still match the reference."""
+    fns_k, fns_j = both_fns
+    acfg = _acfg()
+    o_b, d_b = _blocked_rays(2, acfg.block_size)
+    budgets = jnp.asarray([48, 33], jnp.int32)
+    got = pipeline.march_blocks(fns_k, acfg, o_b, d_b, budgets,
+                                density_only=True)
+    want = ref.ref_fused_march(fns_j, acfg, o_b, d_b, budgets,
+                               density_only=True)
+    for g, w, name in [(got[1], want[1], "acc"), (got[2], want[2], "depth")]:
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   rtol=1e-4, atol=1e-5, err_msg=name)
+    assert np.array_equal(np.asarray(got[3]), np.asarray(want[3]))
+    # and density-only vs full march agree on acc/depth too
+    full = pipeline.march_blocks(both_fns[0], acfg, o_b, d_b, budgets)
+    np.testing.assert_allclose(np.asarray(got[1]), np.asarray(full[1]),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_fused_backend_falls_back_without_resources(both_fns):
+    """march_backend='fused' on a FieldFns with no fused resources (e.g.
+    analytic fields) must take the reference path bit-identically."""
+    field = scene.make_scene("mic")
+    fns = fields.analytic_field_fns(field)
+    assert fns.fused is None
+    o_b, d_b = _blocked_rays(2, 32)
+    budgets = jnp.asarray([48, 16], jnp.int32)
+    got = pipeline.march_blocks(fns, _acfg(), o_b, d_b, budgets)
+    want = pipeline.march_blocks(fns, _acfg(march_backend="reference"),
+                                 o_b, d_b, budgets)
+    for g, w in zip(got, want):
+        assert np.array_equal(np.asarray(g), np.asarray(w))
+
+
+# --------------------------------------------------- weight-pack memoization
+def test_weight_packing_memoized(model):
+    cfg, params = model
+    ops.packed_weights(params["mlps"], cfg.net)   # warm (may hit or miss)
+    s1 = ops.pack_cache_stats()
+    wd1, wc1 = ops.packed_weights(params["mlps"], cfg.net)
+    s2 = ops.pack_cache_stats()
+    assert s2["hits"] == s1["hits"] + 1 and s2["misses"] == s1["misses"]
+    # same objects back (memoized, not re-traced)
+    wd2, wc2 = ops.packed_weights(params["mlps"], cfg.net)
+    assert wd2 is wd1 and wc2 is wc1
+    # distinct params are a distinct entry
+    other = init_ngp(jax.random.PRNGKey(1), cfg)
+    ops.packed_weights(other["mlps"], cfg.net)
+    s3 = ops.pack_cache_stats()
+    assert s3["misses"] == s2["misses"] + 1
+    assert s3["size"] >= 2
+
+
+def test_field_fns_share_packed_weights(model):
+    """Constructing FieldFns twice for the same params must not re-pack."""
+    cfg, params = model
+    ops.field_fns(params, cfg)
+    s1 = ops.pack_cache_stats()
+    ops.field_fns(params, cfg)
+    s2 = ops.pack_cache_stats()
+    assert s2["misses"] == s1["misses"]

@@ -496,3 +496,63 @@ def test_sharded_n1_union_equals_plain_semantics(seed):
             assert fresh.shards[shard_of(k, 4)].lookup(k) is not None
             fresh.close()
     shard.close()
+
+
+def test_sweep_delivers_fast_shards_before_slow_join():
+    """Regression for the sweep join point: the old code gathered every
+    future IN ORDER before delivering anything, so one slow shard
+    stalled all deliveries.  The as-completed join must deliver the
+    completed prefix while the slow fetch is still in flight — and
+    delivery order must remain exactly the submission order."""
+    import concurrent.futures
+    import threading
+    import time
+
+    from repro.serve import pool as pool_lib
+    from repro.serve import stats as stats_lib
+
+    release = threading.Event()
+    delivered = []
+
+    class Slot:                       # minimal pool-item delivery surface
+        def deliver(self, bi, rgb, acc, depth, chunks, cached):
+            delivered.append(bi)
+
+    out = scenecache.BlockOutput(*_mk_out(np.random.default_rng(0), 8), 1)
+    ex = concurrent.futures.ThreadPoolExecutor(1)
+
+    class Store:                      # one slow shard, the rest instant
+        def fetch_async(self, key, count_miss=True):
+            if key == b"slow":
+                def blocked():
+                    assert release.wait(10.0), "test released the shard"
+                    return None
+                return ex.submit(blocked)
+            f: concurrent.futures.Future = concurrent.futures.Future()
+            f.set_result(out)
+            return f
+
+    counters = stats_lib.EngineCounters()
+    pool = pool_lib.BlockPool(pipeline.ASDRConfig(), 4, Store(), counters)
+    slot, z = Slot(), np.zeros((8, 3), np.float32)
+    pool.items = [(slot, bi, z, z, 16, key, ("s", 0), False)
+                  for bi, key in enumerate([b"fast-a", b"slow", b"fast-b"])]
+    t = threading.Thread(target=pool.sweep)
+    t.start()
+    try:
+        # the fast shard AHEAD of the slow one delivers while the slow
+        # fetch is still blocked (the gather-all join could not do this)
+        deadline = time.time() + 5.0
+        while delivered != [0] and time.time() < deadline:
+            time.sleep(0.002)
+        assert delivered == [0] and not release.is_set()
+    finally:
+        release.set()
+        t.join(10.0)
+    assert not t.is_alive()
+    # fast-b queued BEHIND the slow shard still delivered — after it, in
+    # submission order; the slow miss stays pooled for the round's march
+    assert delivered == [0, 2]
+    assert [it[5] for it in pool.items] == [b"slow"]
+    assert counters.scene_blocks_hit == 2
+    ex.shutdown()
