@@ -5,8 +5,9 @@ PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test test-fleet test-full lint bench-serve bench-serve-sweep \
-        bench-serve-latency bench-serve-workers bench-scenecache \
-        bench-scenecache-budgets bench-fleet bench-march dryrun-serve
+        bench-serve-latency bench-serve-workers bench-obs \
+        bench-scenecache bench-scenecache-budgets bench-fleet \
+        bench-march dryrun-serve
 
 test:
 	$(PY) -m pytest -x -q
@@ -23,10 +24,12 @@ test-full:
 
 # ruff > pyflakes > the ast-based fallback in tools/lint.py (this
 # container bakes in neither linter; CI installs ruff), plus the
-# file-size budget check (the serve facade must stay a thin loop)
+# file-size budget check (the serve facade must stay a thin loop) and
+# the trace-format self-test (exporter -> validator round trip)
 lint:
 	$(PY) tools/lint.py src tests benchmarks examples tools
 	$(PY) tools/check_sizes.py
+	$(PY) tools/check_trace.py
 
 bench-serve:
 	$(PY) benchmarks/render_serve.py
@@ -39,6 +42,10 @@ bench-serve-latency:
 
 bench-serve-workers:
 	$(PY) benchmarks/render_serve.py --workers
+
+# tracing-overhead gate: tracer on must cost <= 5% fps at 0.0 dB delta
+bench-obs:
+	$(PY) benchmarks/render_serve.py --obs
 
 bench-scenecache:
 	$(PY) benchmarks/scene_cache.py

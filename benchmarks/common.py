@@ -16,6 +16,9 @@ import numpy as np
 
 from repro.core import model as model_lib, pipeline, scene
 from repro.core import train as train_lib
+# the repo's ONE percentile implementation (nearest-rank, obs/metrics.py)
+# — benches import it from here instead of keeping per-bench copies
+from repro.obs.metrics import percentile  # noqa: F401
 
 CACHE = Path(__file__).resolve().parent / "_cache"
 CACHE.mkdir(exist_ok=True)

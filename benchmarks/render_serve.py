@@ -56,9 +56,10 @@ sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 
 import numpy as np
 
-from common import emit_rows as _emit_rows, serve_bench_acfg
+from common import emit_rows as _emit_rows, percentile, serve_bench_acfg
 from repro.core import adaptive, fields, rendering, scene
 from repro.framecache import ProbeReuseConfig, RadianceReuseConfig
+from repro.obs import TraceConfig
 from repro.serve.render_engine import (RenderRequest, RenderServeConfig,
                                        RenderServingEngine)
 from repro.serve.stats import DETERMINISTIC_COUNTERS
@@ -176,8 +177,8 @@ def run_replay(args):
     # size-32 ok:false row in out/bench was exactly such an outlier
     # (misprepares 0, both sides statistically identical across reps)
     def stall_p99(done):
-        return float(np.percentile(np.asarray(
-            [r.stats["admit_stall_s"] for r in done]) * 1e3, 99))
+        return percentile(
+            [r.stats["admit_stall_s"] * 1e3 for r in done], 99)
 
     p99s_r, p99s_s = [stall_p99(done_r)], [stall_p99(done_s)]
     for _ in range(2):
@@ -370,8 +371,8 @@ def run_workers(args):
     sync_cfg = dataclasses.replace(base_cfg, prefetch=0)
 
     def stall_p99(done):
-        return float(np.percentile(np.asarray(
-            [r.stats["admit_stall_s"] for r in done]) * 1e3, 99))
+        return percentile(
+            [r.stats["admit_stall_s"] * 1e3 for r in done], 99)
 
     reqs = traj()
     done_s, dt_s, eng_s = run_engine(flds, acfg, base_cfg, reqs)
@@ -428,13 +429,12 @@ def run_workers(args):
                                       prefetch=prefetch)
             done, dt, eng = run_engine(flds, acfg, cfg, traj())
             eng.close()
-            stall = np.asarray(
-                [r.stats["admit_stall_s"] for r in done]) * 1e3
+            stall = [r.stats["admit_stall_s"] * 1e3 for r in done]
             row = {
                 "bench": "workers_stall_sweep", "scene": args.scene,
                 "size": args.size, "workers": workers, "prefetch": prefetch,
-                "admission_stall_p50_ms": float(np.percentile(stall, 50)),
-                "admission_stall_p99_ms": float(np.percentile(stall, 99)),
+                "admission_stall_p50_ms": percentile(stall, 50),
+                "admission_stall_p99_ms": percentile(stall, 99),
                 "fps": len(done) / dt,
             }
             rows.append(row)
@@ -445,6 +445,79 @@ def run_workers(args):
     print(f"  acceptance (bit-identical frames, identical counters, "
           f"threaded p99 no worse than sync): {'OK' if ok else 'FAIL'}")
     emit_rows("workers", rows)
+    return ok
+
+
+# ------------------------------------------------------------------- obs
+def run_obs(args):
+    """Tracing-overhead gate (make bench-obs): replay the orbit with the
+    tracer OFF vs ON (in-memory collection + flight recorder — the
+    always-on production shape) and gate
+
+      * frames bit-identical (PSNR delta exactly 0.0 dB), and
+      * tracing-on fps >= 95% of tracing-off fps (<= 5% overhead),
+
+    best-of-3 per side so one noisy rep can't fail the gate on a shared
+    CPU container.  Deterministic counters must match exactly."""
+    flds = {args.scene: fields.analytic_field_fns(
+        scene.make_scene(args.scene))}
+    acfg = make_acfg()
+
+    def traj():
+        return trajectory_requests(args.scene, args.poses, args.laps,
+                                   args.size, args.dtheta)
+
+    off_cfg = RenderServeConfig(
+        slots=4, blocks_per_batch=16,
+        reuse=ProbeReuseConfig(max_angle_deg=1.0, max_translation=0.02,
+                               refresh_every=0),
+        prefetch=2)
+    on_cfg = dataclasses.replace(off_cfg, trace=TraceConfig(flight=True))
+
+    fps_off, fps_on = [], []
+    done_off = done_on = st_off = st_on = None
+    n_spans = 0
+    for _ in range(3):
+        d, dt, e = run_engine(flds, acfg, off_cfg, traj())
+        fps_off.append(len(d) / dt)
+        done_off, st_off = d, e.engine_stats()
+        e.close()
+        d, dt, e = run_engine(flds, acfg, on_cfg, traj())
+        fps_on.append(len(d) / dt)
+        done_on, st_on = d, e.engine_stats()
+        n_spans = len(e.tracer.spans)
+        e.close()
+
+    by_rid = {r.rid: r for r in done_off}
+    identical = all(np.array_equal(r.image, by_rid[r.rid].image)
+                    for r in done_on)
+    delta_db = 0.0 if identical else float("inf")
+    counter_diffs = [k for k in DETERMINISTIC_COUNTERS
+                     if st_off[k] != st_on[k]]
+    best_off, best_on = max(fps_off), max(fps_on)
+    overhead = 1.0 - best_on / best_off
+    overhead_ok = best_on >= 0.95 * best_off
+    ok = identical and not counter_diffs and overhead_ok
+    print(f"== render_serve obs overhead: {args.poses * args.laps} frames "
+          f"{args.size}x{args.size}, scene={args.scene} ==")
+    print(f"  frames (trace on vs off): "
+          f"{'bit-identical (delta 0.0 dB)' if identical else 'DIFFER'}")
+    print(f"  deterministic counters  : "
+          f"{'all equal' if not counter_diffs else counter_diffs}")
+    print(f"  fps                     : {best_on:.2f} traced vs "
+          f"{best_off:.2f} untraced "
+          f"(overhead {100 * overhead:+.1f}%, gate <= 5%: "
+          f"{'OK' if overhead_ok else 'FAIL'}; {n_spans} spans/run)")
+    print(f"  acceptance (0.0 dB delta, counters equal, <= 5% overhead): "
+          f"{'OK' if ok else 'FAIL'}")
+    emit_rows("obs", [{
+        "bench": "obs_overhead", "scene": args.scene, "size": args.size,
+        "poses": args.poses, "laps": args.laps,
+        "fps_traced": best_on, "fps_untraced": best_off,
+        "overhead_fraction": overhead, "delta_db": delta_db,
+        "frames_identical": identical, "counter_diffs": counter_diffs,
+        "spans_per_run": n_spans, "ok": ok,
+    }])
     return ok
 
 
@@ -477,17 +550,19 @@ def run_latency(args):
                                          phi=0.5))
                 for i in range(frames)]
             done, dt, eng = run_engine(flds, acfg, rcfg, reqs)
-            lat_ms = np.asarray([r.latency_s for r in done]) * 1e3
-            stall_ms = np.asarray(
-                [r.stats["admit_stall_s"] for r in done]) * 1e3
+            # first-class engine ledgers: the p50/p99 come straight from
+            # engine_stats() (stats.py Series) instead of re-aggregating
+            # RenderRequest fields by hand
+            st = eng.engine_stats()
+            lat_ms = [r.latency_s * 1e3 for r in done]
             row = {
                 "bench": "latency_vs_slots", "size": args.size,
                 "frames": frames, "slots": slots, "prefetch": prefetch,
-                "p50_ms": float(np.percentile(lat_ms, 50)),
-                "p99_ms": float(np.percentile(lat_ms, 99)),
-                "mean_ms": float(lat_ms.mean()),
-                "admission_stall_p50_ms": float(np.percentile(stall_ms, 50)),
-                "admission_stall_p99_ms": float(np.percentile(stall_ms, 99)),
+                "p50_ms": st["latency_ms_p50"],
+                "p99_ms": st["latency_ms_p99"],
+                "mean_ms": float(np.mean(lat_ms)),
+                "admission_stall_p50_ms": st["admit_stall_ms_p50"],
+                "admission_stall_p99_ms": st["admit_stall_ms_p99"],
                 "fps": len(done) / dt,
             }
             rows.append(row)
@@ -516,6 +591,9 @@ def main():
     ap.add_argument("--workers", action="store_true",
                     help="threaded-executor gate + workers/prefetch "
                          "stall sweep")
+    ap.add_argument("--obs", action="store_true",
+                    help="tracing-overhead gate: <= 5%% fps overhead at "
+                         "0.0 dB delta with the tracer on")
     args = ap.parse_args()
 
     if args.sweep:
@@ -524,6 +602,8 @@ def main():
         ok = run_latency(args)
     elif args.workers:
         ok = run_workers(args)
+    elif args.obs:
+        ok = run_obs(args)
     else:
         ok = run_replay(args)
     return 0 if ok else 1

@@ -31,6 +31,7 @@ import jax.numpy as jnp
 from ..core import adaptive, pipeline, scene
 from ..core.fields import FieldFns
 from ..core.pipeline import ASDRConfig
+from ..obs import trace as trace_lib
 from . import warp as warp_lib
 from .base import PoseKeyedCache
 
@@ -217,6 +218,16 @@ def plan_probe(cache: ProbeCache | None, cam, acfg: ASDRConfig) -> ProbePlan:
     cache, mutates nothing — safe to run speculatively (from any thread)
     and re-run at commit time to revalidate a prepared plan.  The entry
     read is a consistent snapshot taken under the cache lock."""
+    with trace_lib.span("probe.plan") as sp:
+        plan = _plan_probe(cache, cam, acfg)
+        if sp is not trace_lib.NULL_SPAN:
+            # the decision is the payload — stamped after it's made
+            sp.attrs["kind"] = plan.kind
+            sp.attrs["mode"] = plan.mode
+        return plan
+
+
+def _plan_probe(cache, cam, acfg: ASDRConfig) -> ProbePlan:
     if cache is None:
         return ProbePlan("fresh")
     with cache.lock:
@@ -256,19 +267,21 @@ def execute_probe_plan(fns: FieldFns, acfg: ASDRConfig, cam,
     """Run the device work the plan calls for.  Pure, and touches only
     the plan's snapshot (never the live entry) — dispatchable on a worker
     thread while an earlier march is still in flight."""
-    if plan.kind in ("fresh", "refresh"):
-        return _fresh_probe(fns, acfg, cam, probe_key)
-    if plan.mode == "exact":
-        return dataclasses.replace(plan.src_maps, cost=0)
-    if plan.mode == "warp":
-        return _warped_maps(plan.src_maps, plan.src_cam, cam, acfg, rcfg)
-    counts = adaptive.dilate_count_map(
-        plan.src_maps.counts, (cam.height, cam.width), plan.radius,
-        border_fill=acfg.ns_full)
-    # depth=None: the entry's depth is in the CACHED pose's pixel
-    # grid and this mode (by definition) does not warp — see
-    # ProbeMaps docstring
-    return ProbeMaps(counts, plan.src_maps.opacity, None, 0)
+    with trace_lib.span("probe.execute", kind=plan.kind, mode=plan.mode):
+        if plan.kind in ("fresh", "refresh"):
+            return _fresh_probe(fns, acfg, cam, probe_key)
+        if plan.mode == "exact":
+            return dataclasses.replace(plan.src_maps, cost=0)
+        if plan.mode == "warp":
+            return _warped_maps(plan.src_maps, plan.src_cam, cam, acfg,
+                                rcfg)
+        counts = adaptive.dilate_count_map(
+            plan.src_maps.counts, (cam.height, cam.width), plan.radius,
+            border_fill=acfg.ns_full)
+        # depth=None: the entry's depth is in the CACHED pose's pixel
+        # grid and this mode (by definition) does not warp — see
+        # ProbeMaps docstring
+        return ProbeMaps(counts, plan.src_maps.opacity, None, 0)
 
 
 def commit_probe_plan(cache: ProbeCache | None, cam, acfg: ASDRConfig,
@@ -279,7 +292,7 @@ def commit_probe_plan(cache: ProbeCache | None, cam, acfg: ASDRConfig,
     which thread — the maps were computed."""
     if cache is None:
         return False
-    with cache.lock:
+    with trace_lib.span("probe.commit", kind=plan.kind), cache.lock:
         if plan.kind == "reuse":
             cache.hits += 1
             plan.entry.reuses_since_probe += 1

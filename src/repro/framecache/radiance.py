@@ -34,6 +34,7 @@ import numpy as np
 
 from ..core import adaptive, scene
 from ..core.pipeline import ASDRConfig
+from ..obs import trace as trace_lib
 from . import warp as warp_lib
 from .base import PoseKeyedCache
 
@@ -173,6 +174,16 @@ def plan_lookup(cache: RadianceCache | None, cam, acfg: ASDRConfig,
     atomically under the cache lock; the warp itself — the expensive
     device work — runs OUTSIDE the lock on the snapshot, so worker-thread
     speculation never serializes against engine-thread commits."""
+    with trace_lib.span("radiance.plan") as sp:
+        plan = _plan_lookup(cache, cam, acfg, prepared)
+        if sp is not trace_lib.NULL_SPAN:
+            sp.attrs["kind"] = plan.kind
+            if plan.reason is not None:
+                sp.attrs["reason"] = plan.reason
+        return plan
+
+
+def _plan_lookup(cache, cam, acfg, prepared=None) -> RadiancePlan:
     if cache is None:
         return RadiancePlan("miss", "no_match")
     with cache.lock:
@@ -211,7 +222,7 @@ def commit_lookup(cache: RadianceCache | None,
     under the cache lock."""
     if cache is None:
         return None
-    with cache.lock:
+    with trace_lib.span("radiance.commit", kind=plan.kind), cache.lock:
         if plan.kind == "miss":
             if plan.reason == "refresh":
                 cache.refreshes += 1

@@ -32,6 +32,7 @@ from typing import Tuple
 import jax.numpy as jnp
 
 from ..core import scene
+from ..obs import trace as trace_lib
 
 
 def project_to_camera(points: jnp.ndarray, cam) -> Tuple[jnp.ndarray,
@@ -123,15 +124,16 @@ def warp_count_map(counts: jnp.ndarray, depth: jnp.ndarray, cam_src, cam_dst,
     (probe.py warps counts AND opacity/depth per hit) projects once.
     """
     H, W = cam_dst.height, cam_dst.width
-    tgt, ok, _ = (projection if projection is not None
-                  else forward_warp(cam_src, cam_dst, depth))
-    warped, valid = scatter_max(counts, tgt, ok, H * W, fill=0)
-    warped = jnp.where(valid, warped, ns_full)
-    if margin > 0:
-        from ..core import adaptive
-        warped = adaptive.dilate_count_map(warped, (H, W), margin,
-                                           border_fill=ns_full)
-    return warped, valid
+    with trace_lib.span("warp.count_map", pixels=H * W):
+        tgt, ok, _ = (projection if projection is not None
+                      else forward_warp(cam_src, cam_dst, depth))
+        warped, valid = scatter_max(counts, tgt, ok, H * W, fill=0)
+        warped = jnp.where(valid, warped, ns_full)
+        if margin > 0:
+            from ..core import adaptive
+            warped = adaptive.dilate_count_map(warped, (H, W), margin,
+                                               border_fill=ns_full)
+        return warped, valid
 
 
 def warp_image(rgb: jnp.ndarray, acc: jnp.ndarray, depth: jnp.ndarray,
@@ -144,9 +146,10 @@ def warp_image(rgb: jnp.ndarray, acc: jnp.ndarray, depth: jnp.ndarray,
     Returns (rgb, acc, depth, valid), all in the destination frame.
     """
     H, W = cam_dst.height, cam_dst.width
-    tgt, ok, dist = forward_warp(cam_src, cam_dst, depth)
-    src, valid = nearest_source(tgt, ok, dist, H * W)
-    rgb_w = jnp.where(valid[:, None], rgb[src], background)
-    acc_w = jnp.where(valid, acc[src], 0.0)
-    depth_w = jnp.where(valid, dist[src], scene.FAR)
-    return rgb_w, acc_w, depth_w, valid
+    with trace_lib.span("warp.image", pixels=H * W):
+        tgt, ok, dist = forward_warp(cam_src, cam_dst, depth)
+        src, valid = nearest_source(tgt, ok, dist, H * W)
+        rgb_w = jnp.where(valid[:, None], rgb[src], background)
+        acc_w = jnp.where(valid, acc[src], 0.0)
+        depth_w = jnp.where(valid, dist[src], scene.FAR)
+        return rgb_w, acc_w, depth_w, valid

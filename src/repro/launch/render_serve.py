@@ -161,6 +161,18 @@ def _concrete(args):
               if sc_cfg is not None and args.shards > 1 else None)
     if args.march_backend != "reference":
         acfg = dataclasses.replace(acfg, march_backend=args.march_backend)
+    # observability switchboard: any of --trace / --trace-jsonl /
+    # --metrics-jsonl / --flight-recorder turns the tracer on; all off
+    # (the default) keeps every call site on the null-span fast path
+    tcfg = None
+    if (args.trace or args.trace_jsonl or args.metrics_jsonl
+            or args.flight_recorder):
+        from repro.obs import TraceConfig
+        tcfg = TraceConfig(
+            path=args.trace, jsonl=args.trace_jsonl,
+            metrics_jsonl=args.metrics_jsonl,
+            flight=args.flight_recorder,
+            stall_dump_ms=args.stall_dump_ms)
     eng = RenderServingEngine(flds, acfg, RenderServeConfig(
         slots=args.slots, blocks_per_batch=args.blocks_per_batch,
         reuse=ProbeReuseConfig(),
@@ -168,7 +180,8 @@ def _concrete(args):
         scenecache=None if shared is not None else sc_cfg,
         prefetch=args.prefetch, workers=args.workers,
         devices=args.devices, inflight_batches=args.inflight_batches,
-        density_refresh=args.density_refresh), scenecache=shared)
+        density_refresh=args.density_refresh, trace=tcfg),
+        scenecache=shared)
 
     reqs = []
     for i in range(args.poses):
@@ -187,9 +200,13 @@ def _concrete(args):
           f"({st['probe_hits']} hits + {st['probe_skips']} skips / "
           f"{st['probe_misses']} probes; "
           f"{st['full_radiance_hits']} full radiance hits)")
-    stall = np.asarray([r.stats["admit_stall_s"] for r in done]) * 1e3
-    print(f"  admission stall       : p50 {np.percentile(stall, 50):.1f} ms  "
-          f"p99 {np.percentile(stall, 99):.1f} ms "
+    # first-class engine ledgers (stats.py Series) — no per-launcher
+    # re-aggregation of RenderRequest fields
+    print(f"  latency               : p50 {st['latency_ms_p50']:.1f} ms  "
+          f"p99 {st['latency_ms_p99']:.1f} ms (end-to-end, "
+          f"{st['frames']} frames)")
+    print(f"  admission stall       : p50 {st['admit_stall_ms_p50']:.1f} ms  "
+          f"p99 {st['admit_stall_ms_p99']:.1f} ms "
           f"(prefetch {args.prefetch}, workers {args.workers}, "
           f"{st['misprepares']} misprepares)")
     print(f"  radiance reuse        : {st['reused_radiance_fraction']:.2f} "
@@ -218,6 +235,12 @@ def _concrete(args):
     if args.stats:
         import json
         print(json.dumps(st, indent=2, default=str))
+    eng.close()      # flush + export the trace (no-op with tracing off)
+    if tcfg is not None:
+        for label, p in (("trace", tcfg.path), ("span log", tcfg.jsonl),
+                         ("metrics", tcfg.metrics_jsonl)):
+            if p:
+                print(f"  wrote {label:<9}: {p}")
 
 
 def main():
@@ -262,6 +285,22 @@ def main():
                     help="dump the full engine_stats() dict as JSON "
                          "(includes march_ms percentiles and the "
                          "batches-per-round histogram)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write a Chrome/Perfetto trace JSON on exit "
+                         "(open at ui.perfetto.dev); enables the tracer")
+    ap.add_argument("--trace-jsonl", default=None, metavar="PATH",
+                    help="write the raw span log as JSONL on exit")
+    ap.add_argument("--metrics-jsonl", default=None, metavar="PATH",
+                    help="append periodic metrics-registry snapshots "
+                         "(one JSON object per line) during serving")
+    ap.add_argument("--flight-recorder", action="store_true",
+                    help="keep a bounded in-memory ring of recent spans "
+                         "(with --stall-dump-ms: dump it to a trace file "
+                         "the first time an admission stalls past the "
+                         "threshold)")
+    ap.add_argument("--stall-dump-ms", type=float, default=None,
+                    help="arm the flight recorder to dump on the first "
+                         "admission.wait span exceeding this many ms")
     ap.add_argument("--scenecache-mb", type=float, default=0.0,
                     help="enable scene-space block reuse with this byte "
                          "budget in MB (0 = off)")

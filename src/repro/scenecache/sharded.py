@@ -49,6 +49,7 @@ from concurrent.futures import Future, ThreadPoolExecutor
 from dataclasses import replace
 from typing import List, Optional
 
+from ..obs import trace as trace_lib
 from . import serial
 from .store import BlockOutput, SceneBlockCache, SceneCacheConfig
 
@@ -93,8 +94,11 @@ class ShardedSceneCache:
     def lookup(self, key: bytes,
                count_miss: bool = True) -> Optional[BlockOutput]:
         i = self._shard(key)
-        with self._locks[i]:
-            return self.shards[i].lookup(key, count_miss=count_miss)
+        # the span covers lock wait + shard read: on the fetch pool its
+        # lane is scenecache-fetch_*, the async-fetch side of the trace
+        with trace_lib.span("scenecache.lookup", shard=i):
+            with self._locks[i]:
+                return self.shards[i].lookup(key, count_miss=count_miss)
 
     def fetch_async(self, key: bytes,
                     count_miss: bool = True) -> "Future[Optional[BlockOutput]]":
@@ -116,8 +120,10 @@ class ShardedSceneCache:
     def store(self, key: bytes, cell: tuple, rgb, acc, depth,
               chunks: int) -> bool:
         i = self._shard(key)
-        with self._locks[i]:
-            return self.shards[i].store(key, cell, rgb, acc, depth, chunks)
+        with trace_lib.span("scenecache.shard_store", shard=i):
+            with self._locks[i]:
+                return self.shards[i].store(key, cell, rgb, acc, depth,
+                                            chunks)
 
     # ------------------------------------------------------- replication
     def dump_entry(self, key: bytes) -> Optional[bytes]:

@@ -33,6 +33,8 @@ from typing import Dict, Optional
 
 import numpy as np
 
+from ..obs import trace as trace_lib
+
 
 @dataclasses.dataclass(frozen=True)
 class SceneCacheConfig:
@@ -112,6 +114,9 @@ class SceneBlockCache:
             return None
         self.hits += 1
         e.last_used = self._tick()
+        # hits only: a span per pool re-sweep miss would dominate the
+        # trace; misses are visible as the marched blocks they become
+        trace_lib.instant("scenecache.hit")
         return e.out
 
     # -------------------------------------------------------------- store
@@ -126,16 +131,17 @@ class SceneBlockCache:
         if out.nbytes > self.cfg.byte_budget:
             self.rejected += 1
             return False
-        old = self._entries.pop(key, None)
-        if old is not None:
-            self._drop_bookkeeping(old)
-        self._entries[key] = _Entry(out, cell, self._tick(), self._seq)
-        self._seq += 1
-        self._cells[cell] += 1
-        self._bytes += out.nbytes
-        while self._bytes > self.cfg.byte_budget:
-            self._evict_one(exclude=key)
-        self.stores += 1
+        with trace_lib.span("scenecache.store", bytes=out.nbytes):
+            old = self._entries.pop(key, None)
+            if old is not None:
+                self._drop_bookkeeping(old)
+            self._entries[key] = _Entry(out, cell, self._tick(), self._seq)
+            self._seq += 1
+            self._cells[cell] += 1
+            self._bytes += out.nbytes
+            while self._bytes > self.cfg.byte_budget:
+                self._evict_one(exclude=key)
+            self.stores += 1
         return True
 
     # ----------------------------------------------------------- eviction
@@ -155,6 +161,7 @@ class SceneBlockCache:
         e = self._entries.pop(victim_key)
         self._drop_bookkeeping(e)
         self.evictions += 1
+        trace_lib.instant("scenecache.evict", bytes=e.out.nbytes)
 
     # ------------------------------------------------------ serialization
     def dump_entry(self, key: bytes) -> Optional[bytes]:

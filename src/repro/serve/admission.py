@@ -41,6 +41,8 @@ from ..framecache import probe as fc_probe
 from ..framecache import radiance as fc_radiance
 from ..framecache.probe import ProbeMaps, ProbeReuseConfig
 from ..framecache.radiance import RadianceReuseConfig
+from ..obs import trace as trace_lib
+from ..obs.trace import TraceConfig
 from ..scenecache import SceneCacheConfig
 from . import executor as executor_lib
 from . import pool as pool_lib
@@ -96,6 +98,13 @@ class RenderServeConfig:
     # warped rgb, so enabling this trades a bounded quality drift
     # (min_valid_fraction / refresh_every still apply) for reuse reach.
     density_refresh: bool = False
+    # Observability (repro.obs): None = tracing fully off — every
+    # instrumented call site takes the null-span fast path, and frames +
+    # deterministic counters are bit-identical either way (spans only
+    # read ids/clocks, never steer scheduling; tests/test_obs.py gates
+    # this across executors x prefetch depths).  A TraceConfig names the
+    # export paths, flight-recorder mode, and metrics snapshot cadence.
+    trace: Optional[TraceConfig] = None
 
 
 @dataclasses.dataclass
@@ -157,25 +166,27 @@ def prepare(engine, req: RenderRequest) -> Prepared:
     under the cache locks), dispatchable while live requests march."""
     t0 = time.time()
     acfg: ASDRConfig = engine.acfg
-    rad = engine.radiance_caches.get(req.scene)
-    rplan = (fc_radiance.plan_lookup(rad, req.cam, acfg)
-             if rad is not None else None)
-    pplan = maps = None
-    if rplan is None or not rplan.full_hit:
-        cache = engine.probe_caches.get(req.scene)
-        pplan = fc_probe.plan_probe(cache, req.cam, acfg)
-        maps = fc_probe.execute_probe_plan(
-            engine.fields[req.scene], acfg, req.cam, pplan,
-            engine._probe_key(req),
-            rcfg=cache.rcfg if cache is not None else None)
-    warped = rplan.warped if (rplan is not None
-                              and rplan.kind == "hit") else None
-    layout = pool_lib.build_layout(acfg, req.cam, maps, warped)
-    dens_layout = None
-    if (engine.rcfg.density_refresh and warped is not None
-            and maps is not None):
-        dens_layout = pool_lib.build_density_layout(
-            acfg, req.cam, maps, warped)
+    with trace_lib.span("stage_a.prepare", req=req.rid, scene=req.scene):
+        rad = engine.radiance_caches.get(req.scene)
+        rplan = (fc_radiance.plan_lookup(rad, req.cam, acfg)
+                 if rad is not None else None)
+        pplan = maps = None
+        if rplan is None or not rplan.full_hit:
+            cache = engine.probe_caches.get(req.scene)
+            pplan = fc_probe.plan_probe(cache, req.cam, acfg)
+            maps = fc_probe.execute_probe_plan(
+                engine.fields[req.scene], acfg, req.cam, pplan,
+                engine._probe_key(req),
+                rcfg=cache.rcfg if cache is not None else None)
+        warped = rplan.warped if (rplan is not None
+                                  and rplan.kind == "hit") else None
+        with trace_lib.span("stage_a.layout", req=req.rid):
+            layout = pool_lib.build_layout(acfg, req.cam, maps, warped)
+            dens_layout = None
+            if (engine.rcfg.density_refresh and warped is not None
+                    and maps is not None):
+                dens_layout = pool_lib.build_density_layout(
+                    acfg, req.cam, maps, warped)
     return Prepared(req, rplan, pplan, maps, layout,
                     _radiance_token(rplan), time.time() - t0, dens_layout)
 
@@ -184,6 +195,12 @@ def admit(engine, req: RenderRequest, prepared: Prepared,
           t_enqueue: Optional[float] = None) -> "Slot":
     """Stage B: revalidate the speculation against current cache state,
     re-executing stale pieces, then commit.  Engine thread only."""
+    with trace_lib.span("stage_b.admit", req=req.rid, scene=req.scene):
+        return _admit(engine, req, prepared, t_enqueue)
+
+
+def _admit(engine, req: RenderRequest, prepared: Prepared,
+           t_enqueue: Optional[float]) -> "Slot":
     global _commit_depth
     acfg: ASDRConfig = engine.acfg
     counters = engine.counters
@@ -239,20 +256,21 @@ def admit(engine, req: RenderRequest, prepared: Prepared,
     # ---- commit section: cache bookkeeping ONLY — no device-shape work
     _commit_depth += 1
     try:
-        counters.admissions += 1
-        if rad is not None:
-            fc_radiance.commit_lookup(rad, rplan)
-        reused = False
-        if probe_skipped:
-            if cache is not None:
-                cache.note_skip()
-            counters.full_radiance_hits += 1
-        else:
-            reused = fc_probe.commit_probe_plan(cache, req.cam, acfg,
-                                                pplan, maps)
-        slot = Slot(req, layout, maps, reused, acfg.block_size,
-                    probe_skipped=probe_skipped, t_enqueue=t_enqueue,
-                    dens_layout=dens_layout)
+        with trace_lib.span("commit", req=req.rid, scene=req.scene):
+            counters.admissions += 1
+            if rad is not None:
+                fc_radiance.commit_lookup(rad, rplan)
+            reused = False
+            if probe_skipped:
+                if cache is not None:
+                    cache.note_skip()
+                counters.full_radiance_hits += 1
+            else:
+                reused = fc_probe.commit_probe_plan(cache, req.cam, acfg,
+                                                    pplan, maps)
+            slot = Slot(req, layout, maps, reused, acfg.block_size,
+                        probe_skipped=probe_skipped, t_enqueue=t_enqueue,
+                        dens_layout=dens_layout)
     finally:
         _commit_depth -= 1
     return slot

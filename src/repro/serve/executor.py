@@ -45,6 +45,8 @@ from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
 
+from ..obs import trace as trace_lib
+
 
 def _available_devices() -> List:
     """The jax device list (module hook so tests can model single- and
@@ -56,6 +58,7 @@ class SyncExecutor:
     """Inline (engine-thread) Stage-A execution — the default backend."""
 
     workers = 0
+    backend = "sync"
 
     def __init__(self):
         self._done: Dict = {}
@@ -65,7 +68,10 @@ class SyncExecutor:
         if self._closed:
             raise RuntimeError("submit() on a closed executor")
         if key not in self._done:
-            self._done[key] = fn()
+            # sync backend runs the closure AT submit — the span covers
+            # the actual Stage-A execution on the engine lane
+            with trace_lib.span("executor.submit", backend=self.backend):
+                self._done[key] = fn()
 
     def take(self, key):
         return self._done.pop(key, None)
@@ -109,14 +115,23 @@ class _FutureExecutor:
         if key not in self._futs:
             self._futs[key] = (self._spawn(key, fn), fn)
 
+    backend = "future"
+
     def take(self, key):
         ent = self._futs.pop(key, None)
         if ent is None:
             return None
         fut, fn = ent
         if fut.cancel():          # never started: steal it inline
-            return fn()
-        return fut.result()
+            with trace_lib.span("executor.take", backend=self.backend,
+                                stolen=True):
+                return fn()
+        # the span covers the engine-side WAIT for a busy worker — on an
+        # idle executor it closes immediately; long takes here mean
+        # speculation is not keeping ahead of admission
+        with trace_lib.span("executor.take", backend=self.backend,
+                            stolen=False):
+            return fut.result()
 
     def pending(self) -> int:
         return len(self._futs)
@@ -161,6 +176,8 @@ class ThreadedExecutor(_FutureExecutor):
     the streams and the cap follows.
     """
 
+    backend = "threaded"
+
     def __init__(self, workers: int, max_concurrent: Optional[int] = None):
         super().__init__()
         assert workers > 0
@@ -175,8 +192,11 @@ class ThreadedExecutor(_FutureExecutor):
 
     def _run(self, fn: Callable):
         with self._sem:
-            out = fn()
-            _wait_device_ready(out)
+            # recorded on the worker's own lane (thread name) — the
+            # speculation that overlaps the in-flight march
+            with trace_lib.span("executor.run", backend=self.backend):
+                out = fn()
+                _wait_device_ready(out)
         return out
 
     def _spawn(self, key, fn: Callable) -> Future:
@@ -212,6 +232,8 @@ class DeviceExecutor(_FutureExecutor):
     sync backend — placement is best-effort under load, never a stall.
     """
 
+    backend = "device"
+
     def __init__(self, devices: Optional[List] = None):
         super().__init__()
         if devices is None:
@@ -227,8 +249,12 @@ class DeviceExecutor(_FutureExecutor):
 
     def _run(self, dev, fn: Callable):
         with jax.default_device(dev):
-            out = fn()
-            _wait_device_ready(out)
+            # device attr records the PLACEMENT; the lane (serve-dev*)
+            # records the per-device queue that executed it
+            with trace_lib.span("executor.run", backend=self.backend,
+                                device=str(dev)):
+                out = fn()
+                _wait_device_ready(out)
         return out
 
     def _spawn(self, key, fn: Callable) -> Future:

@@ -35,6 +35,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core import pipeline, scene
+from ..obs import trace as trace_lib
 from ..scenecache import key as scenecache_key
 
 # jitted batched marches shared across engine instances: keyed by the
@@ -173,6 +174,7 @@ class BlockPool:
         self.scenecache = scenecache
         self.counters = counters
         self.items: List[tuple] = []
+        self._batch_seq = 0          # trace batch ids, per render() call
 
     def __len__(self) -> int:
         return len(self.items)
@@ -224,19 +226,24 @@ class BlockPool:
         """
         if self.scenecache is None or not self.items:
             return
-        fetch = getattr(self.scenecache, "fetch_async", None)
-        if fetch is not None:
-            futs = [fetch(it[5], count_miss=False)
+        with trace_lib.span("pool.sweep", items=len(self.items)):
+            fetch = getattr(self.scenecache, "fetch_async", None)
+            if fetch is not None:
+                futs = [fetch(it[5], count_miss=False)
+                        if it[5] is not None else None
+                        for it in self.items]
+                with trace_lib.span(
+                        "pool.fetch_join",
+                        fetches=sum(f is not None for f in futs)):
+                    self._join_and_deliver(futs)
+                return
+            outs = [self.scenecache.lookup(it[5], count_miss=False)
                     if it[5] is not None else None for it in self.items]
-            self._join_and_deliver(futs)
-            return
-        outs = [self.scenecache.lookup(it[5], count_miss=False)
-                if it[5] is not None else None for it in self.items]
-        rest = []
-        for it, out in zip(self.items, outs):
-            if self._deliver_swept(it, out):
-                rest.append(it)
-        self.items = rest
+            rest = []
+            for it, out in zip(self.items, outs):
+                if self._deliver_swept(it, out):
+                    rest.append(it)
+            self.items = rest
 
     def _join_and_deliver(self, futs):
         """Join async shard fetches as they COMPLETE, delivering the done
@@ -297,8 +304,10 @@ class BlockPool:
         group to its jitted batched march.
         """
         handles = []
-        while self.items and len(handles) < max_batches:
-            handles.append(self._dispatch_one(march_for))
+        with trace_lib.span("pool.dispatch_round",
+                            pooled=len(self.items)):
+            while self.items and len(handles) < max_batches:
+                handles.append(self._dispatch_one(march_for))
         return handles
 
     def _dispatch_one(self, march_for):
@@ -309,6 +318,7 @@ class BlockPool:
                  if (it[0].req.scene, it[7]) == group][:self.blocks_per_batch]
         taken = set(map(id, batch))
         self.items = [it for it in self.items if id(it) not in taken]
+        self._batch_seq += 1
 
         # in-batch dedup: identical keys selected together (two clients
         # admitted the same round) march once; followers receive the
@@ -325,37 +335,50 @@ class BlockPool:
                     uniq.append(it)
             batch = uniq
 
-        B = self.acfg.block_size
-        N = self.blocks_per_batch
-        n_pad = N - len(batch)
-        o_b = jnp.stack([it[2] for it in batch]
-                        + [jnp.zeros((B, 3))] * n_pad)
-        d_b = jnp.stack([it[3] for it in batch]
-                        + [jnp.tile(jnp.asarray([[0., 0., 1.]]),
-                                    (B, 1))] * n_pad)
-        budgets = jnp.asarray([it[4] for it in batch] + [1] * n_pad,
-                              jnp.int32)
-        # dispatch only — device arrays are fetched in collect(), after
-        # the engine has overlapped Stage-A speculation with them
-        return (batch, followers, n_pad,
-                march_for(group[0], group[1])(o_b, d_b, budgets))
+        bid = self._batch_seq
+        with trace_lib.span("pool.dispatch", batch=bid, scene=group[0],
+                            density=group[1], blocks=len(batch),
+                            reqs=sorted({it[0].req.rid for it in batch})):
+            B = self.acfg.block_size
+            N = self.blocks_per_batch
+            n_pad = N - len(batch)
+            o_b = jnp.stack([it[2] for it in batch]
+                            + [jnp.zeros((B, 3))] * n_pad)
+            d_b = jnp.stack([it[3] for it in batch]
+                            + [jnp.tile(jnp.asarray([[0., 0., 1.]]),
+                                        (B, 1))] * n_pad)
+            budgets = jnp.asarray([it[4] for it in batch] + [1] * n_pad,
+                                  jnp.int32)
+            # dispatch only — device arrays are fetched in collect(),
+            # after the engine has overlapped Stage-A speculation
+            out = march_for(group[0], group[1])(o_b, d_b, budgets)
+        return (batch, followers, n_pad, out, bid)
 
     def collect(self, inflight):
-        """Fetch a dispatched batch and deliver/store its outputs."""
-        batch, followers, n_pad, out = inflight
-        rgb, acc, depth, chunks = (np.asarray(a) for a in out)
-        for i, it in enumerate(batch):
-            if it[7]:
-                it[0].deliver_density(it[1], acc[i], depth[i], chunks[i])
-                continue
-            it[0].deliver(it[1], rgb[i], acc[i], depth[i], chunks[i])
-            if it[5] is not None:
-                self.scenecache.store(it[5], it[6], rgb[i], acc[i],
-                                      depth[i], int(chunks[i]))
-        for it, li in followers:
-            it[0].deliver(it[1], rgb[li], acc[li], depth[li],
-                          chunks[li], cached=True)
-            self.counters.scene_blocks_hit += 1
+        """Fetch a dispatched batch and deliver/store its outputs.
+
+        The ``pool.collect`` span covers the device fetch wait — the
+        per-batch march time the engine could not overlap; its ``batch``
+        id matches the ``pool.dispatch`` span that launched it, so a
+        frame's lineage chains admission -> dispatch -> collect."""
+        batch, followers, n_pad, out, bid = inflight
+        with trace_lib.span("pool.collect", batch=bid,
+                            blocks=len(batch),
+                            reqs=sorted({it[0].req.rid for it in batch})):
+            rgb, acc, depth, chunks = (np.asarray(a) for a in out)
+            for i, it in enumerate(batch):
+                if it[7]:
+                    it[0].deliver_density(it[1], acc[i], depth[i],
+                                          chunks[i])
+                    continue
+                it[0].deliver(it[1], rgb[i], acc[i], depth[i], chunks[i])
+                if it[5] is not None:
+                    self.scenecache.store(it[5], it[6], rgb[i], acc[i],
+                                          depth[i], int(chunks[i]))
+            for it, li in followers:
+                it[0].deliver(it[1], rgb[li], acc[li], depth[li],
+                              chunks[li], cached=True)
+                self.counters.scene_blocks_hit += 1
         self.counters.batches += 1
         self.counters.blocks_marched += len(batch)
         self.counters.pad_blocks += n_pad

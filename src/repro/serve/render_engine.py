@@ -39,6 +39,7 @@ from ..core.fields import FieldFns
 from ..core.pipeline import ASDRConfig
 from ..framecache.probe import ProbeCache, ProbeMaps, ProbeReuseConfig
 from ..framecache.radiance import RadianceCache, RadianceReuseConfig
+from ..obs import Registry, engine_tracer, trace as trace_lib
 from ..scenecache import SceneBlockCache
 from . import admission, executor as executor_lib, pool as pool_lib
 from . import stats as stats_lib
@@ -70,6 +71,12 @@ class RenderServingEngine:
         self.scenecache = scenecache
         # engine counters (across render() calls) — see serve/stats.py
         self.counters = stats_lib.EngineCounters()
+        # observability: the metrics registry always exists (engine_stats
+        # reads through it); the tracer only when rcfg.trace asks — None
+        # keeps every instrumented call site on the null-span fast path
+        self.metrics = Registry()
+        self.tracer = engine_tracer(rcfg.trace, self.metrics)
+        self._rounds = 0
         self.executor = executor_lib.make_executor(rcfg.workers,
                                                    rcfg.devices)
 
@@ -81,8 +88,18 @@ class RenderServingEngine:
         raise AttributeError(name)
 
     def close(self):
-        """Release executor workers (no-op for the sync backend)."""
+        """Release executor workers; flush + uninstall the tracer."""
         self.executor.close()
+        if self.tracer is not None:
+            tcfg = self.rcfg.trace
+            if tcfg.metrics_jsonl:     # closing-state snapshot, so short
+                self.engine_stats()    # runs still get >= 1 line
+                self.metrics.jsonl_snapshot(
+                    tcfg.metrics_jsonl,
+                    extra={"round": self._rounds, "final": True})
+            self.tracer.finish()       # final drain + configured exports
+            trace_lib.uninstall(self.tracer)
+            self.tracer = None
 
     def _probe_key(self, req: RenderRequest):
         return admission.probe_key_for(self.rcfg, req)
@@ -134,12 +151,17 @@ class RenderServingEngine:
             while queue and len(live) < rcfg.slots:
                 req = queue.pop(0)
                 t0 = time.time()
-                prepared = ex.take(id(req))
-                speculated = prepared is not None
-                if prepared is None:     # never speculated: Stage A inline
-                    prepared = admission.prepare(self, req)
-                slot = admission.admit(self, req, prepared,
-                                       t_enqueue=t_enqueue)
+                # admission.wait covers the BLOCKING admission window
+                # (take/steal + inline Stage A + Stage B) — the flight
+                # recorder's stall trigger watches this span
+                with trace_lib.span("admission.wait", req=req.rid,
+                                    scene=req.scene):
+                    prepared = ex.take(id(req))
+                    speculated = prepared is not None
+                    if prepared is None:  # never speculated: A inline
+                        prepared = admission.prepare(self, req)
+                    slot = admission.admit(self, req, prepared,
+                                           t_enqueue=t_enqueue)
                 # blocking admission time; speculated Stage-A work adds
                 # its (overlapped) duration to admission_s only
                 slot.admit_stall_s = time.time() - t0
@@ -165,9 +187,8 @@ class RenderServingEngine:
             for inflight in inflights:
                 pool.collect(inflight)
             if inflights:
-                self.counters.march_ms.append(
-                    (time.time() - t_march) * 1e3)
-                self.counters.batches_per_round.append(len(inflights))
+                self.counters.note_round(time.time() - t_march,
+                                         len(inflights))
 
             still = []
             for slot in live:
@@ -176,11 +197,26 @@ class RenderServingEngine:
                 else:
                     still.append(slot)
             live = still
+            if self.tracer is not None:
+                self._obs_round()
         return done
+
+    def _obs_round(self):
+        """Per-round observability housekeeping (tracing on only):
+        drain thread buffers into the tracer store / flight recorder /
+        span histograms, and emit a periodic metrics JSONL snapshot."""
+        self.tracer.drain()
+        tcfg = self.rcfg.trace
+        self._rounds += 1
+        if (tcfg.metrics_jsonl
+                and self._rounds % max(tcfg.metrics_every, 1) == 0):
+            self.engine_stats()        # refresh the registry gauges
+            self.metrics.jsonl_snapshot(tcfg.metrics_jsonl,
+                                        extra={"round": self._rounds})
 
     def _finalize(self, slot: admission.Slot) -> RenderRequest:
         req = slot.finalize(self.acfg)
-        self.counters.note_finalized(req.stats)
+        self.counters.note_finalized(req.stats, req.latency_s)
         # only frames with full marched acc/depth feed the radiance cache
         # (framecache safety invariant: warps never chain) — that means
         # fully-rendered frames, plus density-REFRESHED warped frames
@@ -201,4 +237,5 @@ class RenderServingEngine:
     # ---------------------------------------------------------------- stats
     def engine_stats(self) -> Dict:
         return stats_lib.engine_stats(self.counters, self.probe_caches,
-                                      self.radiance_caches, self.scenecache)
+                                      self.radiance_caches, self.scenecache,
+                                      registry=self.metrics)

@@ -2,25 +2,48 @@
 
 Every number the engine exposes lives in one of two places:
 
-  * ``EngineCounters`` — plain integers accumulated across ``render()``
-    calls.  Mutated ONLY on the engine thread (admission commits and
-    batch collection), so they need no lock and stay deterministic at
-    every prefetch depth and worker count — the executor determinism
-    tests gate on them.  ``misprepares`` is the single deliberate
-    exception to cross-config determinism: it counts speculation that
-    aged out between Stage A and commit, which depends on speculation
-    TIMING (prefetch depth, worker scheduling) by design.
+  * ``EngineCounters`` — plain integers plus BOUNDED timing ledgers
+    accumulated across ``render()`` calls.  Mutated ONLY on the engine
+    thread (admission commits and batch collection), so they need no
+    lock and stay deterministic at every prefetch depth and worker
+    count — the executor determinism tests gate on them.
+    ``misprepares`` is the single deliberate exception to cross-config
+    determinism: it counts speculation that aged out between Stage A
+    and commit, which depends on speculation TIMING (prefetch depth,
+    worker scheduling) by design.
   * per-cache ledgers (probe/radiance/scenecache) — owned by the caches
     themselves; ``engine_stats`` only reads them.
 
+Timing ledgers (march_ms, latency_ms, admit_stall_ms) are
+``obs.metrics.Series`` ring buffers — a long-running engine holds at
+most ``SERIES_CAPACITY`` samples per series instead of an unbounded
+list (the pre-obs leak), while p50/p99 keep their semantics over the
+recent window.  ``batches_per_round`` is a Counter keyed by batch count
+(bounded by the distinct counts seen, i.e. by ``inflight_batches``).
+
 This module owns the invariant arithmetic: probe hits + misses + skips
 == admissions, reused fractions, pad fractions, the samples split.
+``engine_stats`` publishes every key into an ``obs.metrics.Registry``
+when one is passed (the engine's), and the returned dict is then a READ
+of that registry — same keys, same values, but also available as
+Prometheus exposition and periodic JSONL snapshots.
 """
 from __future__ import annotations
 
 import dataclasses
 from collections import Counter
-from typing import Dict, List
+from typing import Dict, Optional
+
+from ..obs import metrics as obs_metrics
+from ..obs.metrics import percentile as _percentile  # noqa: F401 (compat)
+
+# ring capacity of the per-engine timing series: enough to hold every
+# round of any bench/test run exactly, O(1) for a long-running engine
+SERIES_CAPACITY = 4096
+
+
+def _series():
+    return obs_metrics.Series(SERIES_CAPACITY)
 
 
 @dataclasses.dataclass
@@ -41,17 +64,32 @@ class EngineCounters:
     # per-round streaming-dispatch observability (engine thread only):
     # wall time of each dispatch_round->collect window and how many
     # batches it launched.  Wall times are TIMING, not scheduling — they
-    # are reported as percentiles, never gated for determinism.
-    march_ms: List[float] = dataclasses.field(default_factory=list)
-    batches_per_round: List[int] = dataclasses.field(default_factory=list)
+    # are reported as percentiles, never gated for determinism.  Bounded:
+    # a Series ring (recent window) and a Counter histogram.
+    march_ms: obs_metrics.Series = dataclasses.field(default_factory=_series)
+    batches_per_round: Counter = dataclasses.field(default_factory=Counter)
+    # per-request end-to-end ledgers, fed at finalize: first-class
+    # latency stats instead of every bench re-aggregating RenderRequest
+    # fields by hand
+    latency_ms: obs_metrics.Series = dataclasses.field(
+        default_factory=_series)
+    admit_stall_ms: obs_metrics.Series = dataclasses.field(
+        default_factory=_series)
 
-    def note_finalized(self, req_stats: Dict):
+    def note_finalized(self, req_stats: Dict, latency_s: float = 0.0):
         """Fold one finalized request's per-frame stats into the ledger."""
         self.frames += 1
         self.rays_marched += req_stats["rays_marched"]
         self.rays_total += req_stats["rays_total"]
         self.samples_processed += req_stats["samples_processed"]
         self.samples_reused += req_stats["samples_reused"]
+        self.latency_ms.observe(latency_s * 1e3)
+        self.admit_stall_ms.observe(req_stats["admit_stall_s"] * 1e3)
+
+    def note_round(self, wall_s: float, n_batches: int):
+        """Record one dispatch_round->collect window."""
+        self.march_ms.observe(wall_s * 1e3)
+        self.batches_per_round[n_batches] += 1
 
 
 COUNTER_FIELDS = frozenset(f.name for f in
@@ -63,6 +101,8 @@ COUNTER_FIELDS = frozenset(f.name for f in
 # absent — it counts speculation that aged out between Stage A and
 # commit, which depends on speculation timing by design.  The executor
 # determinism tests and the --workers benchmark gate both consume this.
+# Tracing on/off must never change any of these either
+# (tests/test_obs.py).
 DETERMINISTIC_COUNTERS = (
     "frames", "admissions", "probe_hits", "probe_misses", "probe_skips",
     "probe_refreshes", "full_radiance_hits", "radiance_hits",
@@ -70,18 +110,16 @@ DETERMINISTIC_COUNTERS = (
     "samples_reused", "blocks_marched")
 
 
-def _percentile(xs: List[float], q: float) -> float:
-    """Nearest-rank percentile (matches the benches' convention); 0.0 on
-    an empty series so stats stay JSON-clean before any round ran."""
-    if not xs:
-        return 0.0
-    s = sorted(xs)
-    return float(s[min(int(len(s) * q / 100.0), len(s) - 1)])
-
-
 def engine_stats(counters: EngineCounters, probe_caches: Dict,
-                 radiance_caches: Dict, scenecache) -> Dict:
-    """The engine's aggregate stats dict (the public ``engine_stats()``)."""
+                 radiance_caches: Dict, scenecache,
+                 registry: Optional[obs_metrics.Registry] = None) -> Dict:
+    """The engine's aggregate stats dict (the public ``engine_stats()``).
+
+    With a registry, every key is published as a gauge and the returned
+    dict is a read-back of those gauges — ``engine_stats()`` IS a
+    registry view, and the same numbers flow to the Prometheus text
+    exposition and the periodic JSONL snapshots.
+    """
     c = counters
     out = {
         "frames": c.frames,
@@ -101,11 +139,17 @@ def engine_stats(counters: EngineCounters, probe_caches: Dict,
         # percentiles + how many batches each round launched (a
         # histogram {n_batches: rounds}); batches_per_round > 1 is the
         # signal that multi-batch rounds actually fill idle launches
-        "march_ms_p50": _percentile(c.march_ms, 50.0),
-        "march_ms_p99": _percentile(c.march_ms, 99.0),
-        "march_rounds": len(c.march_ms),
-        "batches_per_round": dict(sorted(
-            Counter(c.batches_per_round).items())),
+        "march_ms_p50": c.march_ms.percentile(50.0),
+        "march_ms_p99": c.march_ms.percentile(99.0),
+        "march_rounds": c.march_ms.count,
+        "batches_per_round": dict(sorted(c.batches_per_round.items())),
+        # first-class per-request latency: end-to-end (queue wait +
+        # admission + march) and the blocking admission stall, both in
+        # ms from the bounded series the finalize path feeds
+        "latency_ms_p50": c.latency_ms.percentile(50.0),
+        "latency_ms_p99": c.latency_ms.percentile(99.0),
+        "admit_stall_ms_p50": c.admit_stall_ms.percentile(50.0),
+        "admit_stall_ms_p99": c.admit_stall_ms.percentile(99.0),
     }
     hits = sum(pc.hits for pc in probe_caches.values())
     misses = sum(pc.misses for pc in probe_caches.values())
@@ -139,4 +183,8 @@ def engine_stats(counters: EngineCounters, probe_caches: Dict,
         c.scene_blocks_hit + c.blocks_marched, 1)
     if scenecache is not None:
         out["scenecache"] = scenecache.stats()
+    if registry is not None:
+        for k, v in out.items():
+            registry.set_value(k, v)
+        return {k: registry.get(k).read() for k in out}
     return out

@@ -188,6 +188,50 @@ def test_single_device_fallback(flds, monkeypatch):
     eng.close()
 
 
+# -------------------------------------------------------------------- obs
+def test_device_executor_tracing_bit_identity(flds, tmp_path):
+    """The tracing on/off bit-identity gate's DEVICE-executor leg (the
+    sync/threaded legs live in tests/test_obs.py, which only sees one
+    device): frames + deterministic counters identical with the tracer
+    on, Stage-A placement spans land on the serve-dev* lanes with their
+    device attr, and the exported trace passes the format validator."""
+    import sys
+    from pathlib import Path as _P
+
+    from repro.obs import TraceConfig
+
+    sys.path.insert(0, str(_P(__file__).resolve().parent.parent / "tools"))
+    import check_trace
+
+    for prefetch in (0, 2):
+        ref_eng = RenderServingEngine(flds, ACFG, serve_cfg(2, prefetch))
+        ref = {r.rid: r for r in ref_eng.render(replay_traj())}
+        st_ref = ref_eng.engine_stats()
+        ref_eng.close()
+
+        path = tmp_path / f"fleet_trace_{prefetch}.json"
+        cfg = dataclasses.replace(
+            serve_cfg(2, prefetch), trace=TraceConfig(path=str(path)))
+        eng = RenderServingEngine(flds, ACFG, cfg)
+        assert isinstance(eng.executor, executor_lib.DeviceExecutor)
+        done = {r.rid: r for r in eng.render(replay_traj())}
+        st = eng.engine_stats()
+        spans = list(eng.tracer.spans)
+        eng.close()
+
+        for rid in ref:
+            np.testing.assert_array_equal(ref[rid].image, done[rid].image)
+        for c in DETERMINISTIC_COUNTERS:
+            assert st_ref[c] == st[c], (prefetch, c)
+        if prefetch > 0:
+            runs = [s for s in spans if s.name == "executor.run"]
+            assert runs, "no placement spans with prefetch on"
+            assert all(s.lane.startswith("serve-dev") for s in runs)
+            assert all(s.attrs["backend"] == "device" and "device" in s.attrs
+                       for s in runs)
+        assert check_trace.check_file(path) == []
+
+
 # ------------------------------------------------------------------ fleet
 def test_two_replica_fleet_sharded_cache_identity(flds):
     """Two engine replicas (device executors) over one ShardedSceneCache
