@@ -7,7 +7,7 @@ export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 .PHONY: test test-fleet test-full lint bench-serve bench-serve-sweep \
         bench-serve-latency bench-serve-workers bench-obs \
         bench-scenecache bench-scenecache-budgets bench-fleet \
-        bench-march dryrun-serve
+        bench-march bench-slo dryrun-serve
 
 test:
 	$(PY) -m pytest -x -q
@@ -57,6 +57,13 @@ bench-scenecache-budgets:
 # >=1.0 gates on a trained NGP, plus the streaming-dispatch round gate
 bench-march:
 	$(PY) benchmarks/fused_march.py --quick
+
+# SLO gate: open-loop Poisson overload — at the deepest factor
+# ShedPolicy must hold rt-class p99 under the FIFO baseline with
+# sheds > 0; lighter factors gate non-regression only (smoke = one
+# factor, best-of-2; drop --smoke for the full 0.7/1.5/2.5x sweep)
+bench-slo:
+	$(PY) benchmarks/render_serve.py --slo --smoke
 
 # N engine replicas x one shared sharded scenecache (the script forces
 # 4 host devices itself when XLA_FLAGS doesn't already pin a count)

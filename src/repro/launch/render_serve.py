@@ -146,7 +146,7 @@ def _concrete(args):
     from repro.framecache import ProbeReuseConfig, RadianceReuseConfig
     from repro.scenecache import SceneCacheConfig, ShardedSceneCache
     from repro.serve.render_engine import (RenderRequest, RenderServeConfig,
-                                           RenderServingEngine)
+                                           RenderServingEngine, RequestClass)
 
     acfg = pipeline.ASDRConfig(
         ns_full=96, probe_stride=4, candidates=(12, 24, 48),
@@ -180,16 +180,30 @@ def _concrete(args):
         scenecache=None if shared is not None else sc_cfg,
         prefetch=args.prefetch, workers=args.workers,
         devices=args.devices, inflight_batches=args.inflight_batches,
-        density_refresh=args.density_refresh, trace=tcfg),
+        density_refresh=args.density_refresh, trace=tcfg,
+        policy=args.policy),
         scenecache=shared)
 
+    # SLO knobs: --deadline-ms attaches a deadline class (with a degrade
+    # ladder the shed policy may walk); --arrival-rate replays the poses
+    # as open-loop Poisson traffic instead of an all-at-once queue
+    cls = (RequestClass("rt", deadline_ms=args.deadline_ms,
+                        tiers=(1.0, 0.5, 0.25), shed_floor=2)
+           if args.deadline_ms > 0 else None)
+    arrivals = np.zeros(args.poses)
+    if args.arrival_rate > 0:
+        rng = np.random.default_rng(7)
+        arrivals = np.cumsum(rng.exponential(1.0 / args.arrival_rate,
+                                             args.poses))
     reqs = []
     for i in range(args.poses):
         sc = "mic" if i % 2 == 0 else "hotdog"   # interleaved multi-scene
         reqs.append(RenderRequest(
             rid=i, scene=sc,
             cam=scene.look_at_camera(args.size, args.size,
-                                     theta=0.6 + 0.01 * (i // 2), phi=0.5)))
+                                     theta=0.6 + 0.01 * (i // 2), phi=0.5),
+            arrival_s=float(arrivals[i]),
+            **({"cls": cls} if cls is not None else {})))
     t0 = time.time()
     done = eng.render(reqs)
     dt = time.time() - t0
@@ -218,6 +232,17 @@ def _concrete(args):
           f"(march p50 {st['march_ms_p50']:.1f} ms  "
           f"p99 {st['march_ms_p99']:.1f} ms; batches/round "
           f"{st['batches_per_round']})")
+    if cls is not None or args.policy not in (None, "fifo"):
+        print(f"  scheduler ({args.policy:<5})   : "
+              f"{st['requests_shed']} shed / {st['requests_full']} full "
+              f"({st['shed_degrades']} degrade steps, "
+              f"{st['shed_reprepares']} re-prepares), "
+              f"{st['deadline_misses']} deadline misses")
+        for name, led in st["class_stats"].items():
+            print(f"    class {name:<12}: {led['frames']} frames  "
+                  f"p50 {led['latency_ms_p50']:.1f} ms  "
+                  f"p99 {led['latency_ms_p99']:.1f} ms  "
+                  f"({led['shed']} shed, {led['deadline_misses']} missed)")
     if eng.scenecache is not None:
         sc = st["scenecache"]
         print(f"  scene-block reuse     : hit rate "
@@ -301,6 +326,20 @@ def main():
     ap.add_argument("--stall-dump-ms", type=float, default=None,
                     help="arm the flight recorder to dump on the first "
                          "admission.wait span exceeding this many ms")
+    ap.add_argument("--policy", choices=("fifo", "edf", "shed"),
+                    default="fifo",
+                    help="admission policy (serve/scheduler.py): 'fifo' "
+                         "is the bit-identical default, 'edf' drains "
+                         "slots earliest-deadline-first, 'shed' adds "
+                         "sample-budget load-shedding under overload")
+    ap.add_argument("--deadline-ms", type=float, default=0.0,
+                    help="attach a per-frame deadline class to every "
+                         "request (tiers 1.0/0.5/0.25, shed floor at "
+                         "0.25); 0 = no deadline (nothing ever sheds)")
+    ap.add_argument("--arrival-rate", type=float, default=0.0,
+                    help="open-loop Poisson arrivals at this rate in "
+                         "requests/s (seeded); 0 = closed loop, every "
+                         "request enqueued at t=0")
     ap.add_argument("--scenecache-mb", type=float, default=0.0,
                     help="enable scene-space block reuse with this byte "
                          "budget in MB (0 = off)")

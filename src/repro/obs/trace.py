@@ -53,8 +53,26 @@ class TraceConfig:
     # auto-arm a flight-recorder trigger: dump when an admission stall
     # span exceeds this many milliseconds (None = no auto trigger)
     stall_dump_ms: Optional[float] = None
+    # rate triggers (export.rate_trigger), each one-shot with rearm like
+    # the stall trigger, each dumping to its own suffixed flight path:
+    # an eviction storm is >= count scenecache.evict instants inside
+    # window_ms; a shed burst is the same over scheduler.shed instants.
+    # count 0 = trigger off.
+    evict_storm_count: int = 0
+    evict_storm_window_ms: float = 1000.0
+    shed_burst_count: int = 0
+    shed_burst_window_ms: float = 1000.0
     metrics_jsonl: Optional[str] = None  # periodic registry snapshots
     metrics_every: int = 16              # rounds between snapshots
+    # cross-replica timeline identity: ``replica`` stamps every exported
+    # event's Chrome ``pid`` (and a process_name metadata row), so
+    # per-replica trace files merge into one timeline
+    # (export.merge_chrome_traces) with one process group per replica.
+    # ``epoch`` is a shared wall-clock origin (time.time() at fleet
+    # start): exports rebase their timestamps onto it, so replicas
+    # traced by SEPARATE tracers/processes line up on one clock.
+    replica: Optional[int] = None
+    epoch: Optional[float] = None
 
 
 @dataclasses.dataclass
@@ -139,6 +157,7 @@ class Tracer:
         self.registry = registry        # span_ms histograms fed on drain
         self.recorder = recorder        # export.FlightRecorder or None
         self.t_origin = time.perf_counter()
+        self.wall_origin = time.time()  # epoch anchor for export rebasing
         self._ids = itertools.count(1)  # atomic under the GIL
         self._tls = threading.local()
         self._bufs: List[_ThreadBuf] = []
@@ -202,17 +221,28 @@ class Tracer:
                         f"span_ms_{s.name}").observe(s.dur_ms)
         return moved
 
+    def export_origin(self) -> float:
+        """The t_origin exports subtract: the tracer's own start, or —
+        with a shared ``epoch`` configured — the start rebased onto that
+        wall clock, so separately-traced replicas share one timeline."""
+        if self.cfg.epoch is None:
+            return self.t_origin
+        return self.t_origin - (self.wall_origin - self.cfg.epoch)
+
     def finish(self):
         """Final drain + configured exports.  Idempotent."""
         from . import export as export_lib
         self.drain()
+        origin = self.export_origin()
         if self.cfg.path:
             export_lib.write_chrome_trace(self.cfg.path, self.spans,
-                                          t_origin=self.t_origin,
-                                          dropped=self.dropped)
+                                          t_origin=origin,
+                                          dropped=self.dropped,
+                                          replica=self.cfg.replica)
         if self.cfg.jsonl:
             export_lib.write_span_jsonl(self.cfg.jsonl, self.spans,
-                                        t_origin=self.t_origin)
+                                        t_origin=origin,
+                                        replica=self.cfg.replica)
 
 
 # ------------------------------------------------------- module surface

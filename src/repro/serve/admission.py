@@ -46,6 +46,8 @@ from ..obs.trace import TraceConfig
 from ..scenecache import SceneCacheConfig
 from . import executor as executor_lib
 from . import pool as pool_lib
+from . import scheduler as scheduler_lib
+from .scheduler import DEFAULT_CLASS, RequestClass  # noqa: F401 (surface)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -98,6 +100,13 @@ class RenderServeConfig:
     # warped rgb, so enabling this trades a bounded quality drift
     # (min_valid_fraction / refresh_every still apply) for reuse reach.
     density_refresh: bool = False
+    # Request-lifecycle scheduling policy (serve/scheduler.py): None or
+    # "fifo" = arrived requests in queue order, bit-identical to the
+    # pre-scheduler engine; "edf" drains slots earliest-deadline-first;
+    # "shed" additionally degrades a request's sample-budget tier
+    # (never below its class's shed floor) when the admission stall it
+    # absorbed ate its deadline slack.  Also accepts a policy instance.
+    policy: Optional[object] = None
     # Observability (repro.obs): None = tracing fully off — every
     # instrumented call site takes the null-span fast path, and frames +
     # deterministic counters are bit-identical either way (spans only
@@ -115,6 +124,20 @@ class RenderRequest:
     image: Optional[np.ndarray] = None   # (H, W, 3) on completion
     stats: Dict = dataclasses.field(default_factory=dict)
     latency_s: float = 0.0
+    # request-lifecycle contract (serve/scheduler.py): the SLO class,
+    # the open-loop arrival offset (seconds after render() entry; 0 =
+    # closed loop, already arrived — the latency clock starts at
+    # arrival, so queue wait is measured from when the client showed
+    # up, not from batch submission), and the MUTABLE budget tier the
+    # scheduler may degrade (``degrades`` counts the steps taken).
+    cls: RequestClass = DEFAULT_CLASS
+    arrival_s: float = 0.0
+    tier: int = -1                     # -1: start at cls.tier
+    degrades: int = 0
+
+    def __post_init__(self):
+        if self.tier < 0:
+            self.tier = self.cls.tier
 
 
 def _radiance_token(rplan) -> tuple:
@@ -138,6 +161,9 @@ class Prepared:
     r_token: tuple
     prep_s: float
     dens_layout: Optional[pool_lib.BlockLayout] = None
+    # budget tier the layout was built at: admission re-prepares when
+    # the scheduler degraded the request after this speculation ran
+    tier: int = 0
 
     def block_until_ready(self):
         """Wait for the speculated device buffers (threaded executors
@@ -180,15 +206,19 @@ def prepare(engine, req: RenderRequest) -> Prepared:
                 rcfg=cache.rcfg if cache is not None else None)
         warped = rplan.warped if (rplan is not None
                                   and rplan.kind == "hit") else None
-        with trace_lib.span("stage_a.layout", req=req.rid):
-            layout = pool_lib.build_layout(acfg, req.cam, maps, warped)
+        tier = req.tier
+        scale = scheduler_lib.budget_scale_for(req)
+        with trace_lib.span("stage_a.layout", req=req.rid, tier=tier):
+            layout = pool_lib.build_layout(acfg, req.cam, maps, warped,
+                                           budget_scale=scale)
             dens_layout = None
             if (engine.rcfg.density_refresh and warped is not None
                     and maps is not None):
                 dens_layout = pool_lib.build_density_layout(
-                    acfg, req.cam, maps, warped)
+                    acfg, req.cam, maps, warped, budget_scale=scale)
     return Prepared(req, rplan, pplan, maps, layout,
-                    _radiance_token(rplan), time.time() - t0, dens_layout)
+                    _radiance_token(rplan), time.time() - t0, dens_layout,
+                    tier=tier)
 
 
 def admit(engine, req: RenderRequest, prepared: Prepared,
@@ -204,6 +234,16 @@ def _admit(engine, req: RenderRequest, prepared: Prepared,
     global _commit_depth
     acfg: ASDRConfig = engine.acfg
     counters = engine.counters
+
+    # ---- tier revalidation: the scheduler degraded this request AFTER
+    # its speculation ran.  Probe maps and radiance plans are
+    # tier-INDEPENDENT (the tier only scales the layout's budgets), so
+    # the plans below revalidate normally and only the layout is
+    # rebuilt — at the current tier, via the Stage-A code path, still
+    # pre-commit.  ``shed_reprepares`` counts the discarded layouts.
+    tier_stale = prepared.tier != req.tier
+    if tier_stale:
+        counters.shed_reprepares += 1
 
     # ---- revalidation: pure re-plans; stale speculation re-executes
     # here via Stage-A code paths, BEFORE the commit section
@@ -242,16 +282,21 @@ def _admit(engine, req: RenderRequest, prepared: Prepared,
                 rcfg=cache.rcfg if cache is not None else None)
     # layout revalidation: reusable iff the maps are the speculated ones
     # AND the radiance side resolved to the same warp (same march_idx)
-    if (maps is prepared.maps and _radiance_token(rplan) == prepared.r_token):
+    # AND the budget tier didn't degrade since the layout was built
+    if (maps is prepared.maps and not tier_stale
+            and _radiance_token(rplan) == prepared.r_token):
         layout = prepared.layout
         dens_layout = prepared.dens_layout
     else:
-        layout = pool_lib.build_layout(acfg, req.cam, maps, warped)
+        layout = pool_lib.build_layout(
+            acfg, req.cam, maps, warped,
+            budget_scale=scheduler_lib.budget_scale_for(req))
         dens_layout = None
     if (engine.rcfg.density_refresh and dens_layout is None
             and warped is not None and maps is not None):
         dens_layout = pool_lib.build_density_layout(
-            acfg, req.cam, maps, warped)
+            acfg, req.cam, maps, warped,
+            budget_scale=scheduler_lib.budget_scale_for(req))
 
     # ---- commit section: cache bookkeeping ONLY — no device-shape work
     _commit_depth += 1
@@ -449,6 +494,15 @@ class Slot:
             "baseline_samples": Rp * acfg.ns_full,
             "admission_s": self.admission_s,
             "admit_stall_s": self.admit_stall_s,
+            # request-lifecycle accounting (serve/scheduler.py): the SLO
+            # class this frame was served under, the tier it ENDED at,
+            # how many degrade steps the scheduler applied, and whether
+            # the end-to-end latency met the class deadline (inf-deadline
+            # classes always do)
+            "class": req.cls.name,
+            "tier": req.tier,
+            "degrades": req.degrades,
+            "deadline_met": req.latency_s * 1e3 <= req.cls.deadline_ms,
         }
         return req
 

@@ -80,6 +80,12 @@ class SyncExecutor:
         """Submitted-but-not-taken keys (0 after a clean render())."""
         return len(self._done)
 
+    def depth(self) -> Dict[str, int]:
+        """Queue-depth gauge sample (scheduler stall projections read
+        this through the metrics registry).  Sync results are complete
+        at submit, so nothing is ever in flight."""
+        return {"pending": len(self._done), "inflight": 0}
+
     def reset(self):
         """Drop pending speculation (end of a render() call): results are
         keyed by id(request), and a key must never outlive the call that
@@ -135,6 +141,16 @@ class _FutureExecutor:
 
     def pending(self) -> int:
         return len(self._futs)
+
+    def depth(self) -> Dict[str, int]:
+        """Queue-depth gauge sample: ``pending`` = submitted-not-taken
+        speculations, ``inflight`` = the subset actually EXECUTING on a
+        worker/device right now (the rest are queued behind the
+        concurrency cap — a growing pending/inflight gap means
+        speculation is falling behind admission)."""
+        running = sum(1 for fut, _fn in self._futs.values()
+                      if fut.running())
+        return {"pending": len(self._futs), "inflight": running}
 
     def reset(self):
         """Drop pending speculation (see SyncExecutor.reset).  Unstarted

@@ -19,7 +19,11 @@ Invariant owned here: batches have a fixed block count
 unit-budget dummy blocks so each scene compiles exactly ONE batched
 march, and budget-descending selection keeps batches budget-homogeneous
 (what launch/render_serve.py relies on to shard a batch over the
-``data`` mesh axis without stragglers).
+``data`` mesh axis without stragglers).  Selection is deadline-PRIMARY
+(serve/scheduler.py request classes): an earlier-deadline slot's blocks
+march before a later/no-deadline slot's, budget-descending within —
+for default-class traffic (every deadline inf) this reduces to the
+pure budget sort exactly, so the bit-identity contract is untouched.
 """
 from __future__ import annotations
 
@@ -99,12 +103,28 @@ class BlockLayout:
     valid_fraction: float = 0.0
 
 
-def build_layout(acfg, cam, maps, warped) -> BlockLayout:
+def _scale_counts(counts, budget_scale: float):
+    """Degrade per-ray sample counts to a budget tier: ceil(n * scale),
+    floored at one sample.  Block budgets are per-block maxima of these
+    counts (pipeline.block_sort), so scaling counts scales the while-loop
+    trip budgets of every downstream march — ASDR's adaptive-sampling
+    knob repurposed as the scheduler's load-shedding actuator."""
+    return jnp.maximum(
+        jnp.ceil(counts.astype(jnp.float32) * budget_scale)
+        .astype(counts.dtype), 1)
+
+
+def build_layout(acfg, cam, maps, warped,
+                 budget_scale: float = 1.0) -> BlockLayout:
     """Pad + budget-sort one request's marched rays (Stage-A device work).
 
     ``maps`` None means a full radiance hit: zero blocks, the frame is
     delivered entirely from ``warped``.  With a partial ``warped`` only
-    the disoccluded rays enter the block layout.
+    the disoccluded rays enter the block layout.  ``budget_scale`` < 1
+    is a degraded tier (serve/scheduler.py): per-ray counts scale BEFORE
+    pad/sort, so budgets, block order, and scenecache keys (which
+    include budgets) all see the degraded tier natively; 1.0 skips the
+    scaling ops entirely — bit-identical to the pre-scheduler layout.
     """
     march_idx = base_rgb = None
     vf = 0.0
@@ -124,6 +144,8 @@ def build_layout(acfg, cam, maps, warped) -> BlockLayout:
             sel = jnp.asarray(march_idx, jnp.int32)
             o, d = o[sel], d[sel]
             counts, opacity = counts[sel], opacity[sel]
+        if budget_scale != 1.0:
+            counts = _scale_counts(counts, budget_scale)
         o, d, counts, opacity, pad = pipeline.pad_rays_to_blocks(
             acfg, o, d, counts, opacity)
         order_j, budgets_j = pipeline.block_sort(acfg, counts, opacity)
@@ -132,7 +154,8 @@ def build_layout(acfg, cam, maps, warped) -> BlockLayout:
     return BlockLayout(rays, order, budgets, pad, march_idx, base_rgb, vf)
 
 
-def build_density_layout(acfg, cam, maps, warped) -> Optional[BlockLayout]:
+def build_density_layout(acfg, cam, maps, warped,
+                         budget_scale: float = 1.0) -> Optional[BlockLayout]:
     """Pad + budget-sort the WARP-VALID rays of a partial radiance hit
     for a density-only refresh march (opt-in via
     ``RenderServeConfig.density_refresh``).
@@ -150,8 +173,11 @@ def build_density_layout(acfg, cam, maps, warped) -> Optional[BlockLayout]:
         return None
     o, d = scene.camera_rays(cam)
     sel = jnp.asarray(valid_idx, jnp.int32)
+    counts = maps.counts[sel]
+    if budget_scale != 1.0:
+        counts = _scale_counts(counts, budget_scale)
     o, d, counts, opacity, pad = pipeline.pad_rays_to_blocks(
-        acfg, o[sel], d[sel], maps.counts[sel], maps.opacity[sel])
+        acfg, o[sel], d[sel], counts, maps.opacity[sel])
     order_j, budgets_j = pipeline.block_sort(acfg, counts, opacity)
     return BlockLayout((o, d), np.asarray(order_j), np.asarray(budgets_j),
                        pad, valid_idx)
@@ -311,7 +337,16 @@ class BlockPool:
         return handles
 
     def _dispatch_one(self, march_for):
-        self.items.sort(key=lambda it: -it[4])
+        # deadline-primary, budget-descending within: a slot with an
+        # earlier absolute deadline marches ALL its blocks before a
+        # later/no-deadline slot's — without this, a shed-DEGRADED
+        # request's scaled-down budgets would sort its blocks behind
+        # every full-budget bulk block and the degrade would buy
+        # nothing (priority inversion).  Default-class slots are all
+        # (inf, -budget), which compares exactly like the pre-scheduler
+        # pure-budget sort — the bit-identity path is unchanged.
+        self.items.sort(key=lambda it: (
+            it[0].req.cls.deadline_at(it[0].req.arrival_s), -it[4]))
         head = self.items[0]
         group = (head[0].req.scene, head[7])
         batch = [it for it in self.items

@@ -30,7 +30,6 @@ bit-identical at every ``prefetch`` depth and ``workers`` count.
 from __future__ import annotations
 
 import time
-from functools import partial
 from typing import Dict, List, Optional
 
 import jax.numpy as jnp
@@ -42,11 +41,16 @@ from ..framecache.radiance import RadianceCache, RadianceReuseConfig
 from ..obs import Registry, engine_tracer, trace as trace_lib
 from ..scenecache import SceneBlockCache
 from . import admission, executor as executor_lib, pool as pool_lib
+from . import scheduler as scheduler_lib
 from . import stats as stats_lib
 from .admission import RenderRequest, RenderServeConfig  # noqa: F401
+from .scheduler import (DEFAULT_CLASS, DeadlinePolicy,  # noqa: F401
+                        FifoPolicy, RequestClass, ShedPolicy)
 
 __all__ = ["RenderRequest", "RenderServeConfig", "RenderServingEngine",
-           "ProbeReuseConfig", "RadianceReuseConfig", "ProbeMaps"]
+           "ProbeReuseConfig", "RadianceReuseConfig", "ProbeMaps",
+           "RequestClass", "DEFAULT_CLASS", "FifoPolicy", "DeadlinePolicy",
+           "ShedPolicy"]
 
 
 class RenderServingEngine:
@@ -79,6 +83,11 @@ class RenderServingEngine:
         self._rounds = 0
         self.executor = executor_lib.make_executor(rcfg.workers,
                                                    rcfg.devices)
+        # request-lifecycle scheduler (serve/scheduler.py): owns request
+        # selection, open-loop arrival gating, and shed/degrade
+        # decisions; rcfg.policy None/"fifo" is bit-identical FIFO
+        self.scheduler = scheduler_lib.Scheduler(rcfg.policy, self.counters,
+                                                 metrics=self.metrics)
 
     # counter back-compat: eng.blocks_marched etc. read through to the
     # stats layer (only consulted when normal attribute lookup fails)
@@ -147,28 +156,12 @@ class RenderServingEngine:
 
     def _serve(self, queue, live, done, pool, ex, t_enqueue):
         rcfg = self.rcfg
+        sched = self.scheduler
         while queue or live:
-            while queue and len(live) < rcfg.slots:
-                req = queue.pop(0)
-                t0 = time.time()
-                # admission.wait covers the BLOCKING admission window
-                # (take/steal + inline Stage A + Stage B) — the flight
-                # recorder's stall trigger watches this span
-                with trace_lib.span("admission.wait", req=req.rid,
-                                    scene=req.scene):
-                    prepared = ex.take(id(req))
-                    speculated = prepared is not None
-                    if prepared is None:  # never speculated: A inline
-                        prepared = admission.prepare(self, req)
-                    slot = admission.admit(self, req, prepared,
-                                           t_enqueue=t_enqueue)
-                # blocking admission time; speculated Stage-A work adds
-                # its (overlapped) duration to admission_s only
-                slot.admit_stall_s = time.time() - t0
-                slot.admission_s = slot.admit_stall_s + (
-                    prepared.prep_s if speculated else 0.0)
-                live.append(slot)
-                pool.add_slot(slot)
+            # admission per the scheduler policy: FIFO by default (the
+            # bit-identical pre-scheduler loop), EDF/shed opt-in — see
+            # serve/scheduler.py for the selection/degrade contract
+            sched.admit_ready(self, queue, live, pool, ex, t_enqueue)
 
             pool.sweep()
             # streaming dispatch: up to inflight_batches batches launch
@@ -178,11 +171,9 @@ class RenderServingEngine:
             inflights = pool.dispatch_round(
                 self._march_for, max(rcfg.inflight_batches, 1))
 
-            # Stage-A prefetch: speculate admissions for the queue head
-            # while the dispatched round is in flight (clamped: a
-            # negative prefetch must mean "off", not a near-full slice)
-            for req in queue[:max(rcfg.prefetch, 0)]:
-                ex.submit(id(req), partial(admission.prepare, self, req))
+            # Stage-A prefetch: speculate admissions for the policy's
+            # next arrived requests while the round is in flight
+            sched.speculate(self, queue, live, ex, t_enqueue)
 
             for inflight in inflights:
                 pool.collect(inflight)
@@ -217,6 +208,7 @@ class RenderServingEngine:
     def _finalize(self, slot: admission.Slot) -> RenderRequest:
         req = slot.finalize(self.acfg)
         self.counters.note_finalized(req.stats, req.latency_s)
+        self.scheduler.note_finalized(slot)   # service-time EWMA feed
         # only frames with full marched acc/depth feed the radiance cache
         # (framecache safety invariant: warps never chain) — that means
         # fully-rendered frames, plus density-REFRESHED warped frames

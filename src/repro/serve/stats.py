@@ -47,6 +47,26 @@ def _series():
 
 
 @dataclasses.dataclass
+class ClassLedger:
+    """Per-RequestClass slice of the finalize ledger (scheduler tier):
+    frame count, shed/deadline accounting, and a bounded latency series
+    so ``engine_stats`` reports p50/p99 PER CLASS — the number the SLO
+    bench gates (a deadline class's tail must not hide in the global
+    percentile next to bulk traffic)."""
+    frames: int = 0
+    shed: int = 0                 # frames served at a degraded tier
+    deadline_misses: int = 0
+    latency_ms: obs_metrics.Series = dataclasses.field(
+        default_factory=_series)
+
+    def stats(self) -> Dict:
+        return {"frames": self.frames, "shed": self.shed,
+                "deadline_misses": self.deadline_misses,
+                "latency_ms_p50": self.latency_ms.percentile(50.0),
+                "latency_ms_p99": self.latency_ms.percentile(99.0)}
+
+
+@dataclasses.dataclass
 class EngineCounters:
     """Engine-thread-only counters, accumulated across render() calls."""
     frames: int = 0
@@ -59,6 +79,17 @@ class EngineCounters:
     admissions: int = 0
     full_radiance_hits: int = 0   # admissions that skipped Phase I
     misprepares: int = 0          # speculated Stage-A work discarded
+    # request-lifecycle scheduler accounting (serve/scheduler.py).  Like
+    # misprepares, all four depend on admission-stall TIMING under a
+    # shedding policy and are deliberately NOT in DETERMINISTIC_COUNTERS
+    # (FIFO keeps them at zero).  Invariant the property tests gate:
+    # requests_shed + requests_full == frames — shedding degrades, it
+    # never drops.
+    shed_degrades: int = 0        # tier steps the scheduler applied
+    shed_reprepares: int = 0      # speculation redone after a degrade
+    requests_shed: int = 0        # frames served at a degraded tier
+    requests_full: int = 0        # frames served at their class tier
+    deadline_misses: int = 0
     samples_processed: int = 0
     samples_reused: int = 0
     # per-round streaming-dispatch observability (engine thread only):
@@ -75,6 +106,9 @@ class EngineCounters:
         default_factory=_series)
     admit_stall_ms: obs_metrics.Series = dataclasses.field(
         default_factory=_series)
+    # per-RequestClass slices of the same ledger, keyed by class name
+    by_class: Dict[str, ClassLedger] = dataclasses.field(
+        default_factory=dict)
 
     def note_finalized(self, req_stats: Dict, latency_s: float = 0.0):
         """Fold one finalized request's per-frame stats into the ledger."""
@@ -85,6 +119,18 @@ class EngineCounters:
         self.samples_reused += req_stats["samples_reused"]
         self.latency_ms.observe(latency_s * 1e3)
         self.admit_stall_ms.observe(req_stats["admit_stall_s"] * 1e3)
+        # scheduler accounting: every frame is either full-tier or shed
+        shed = req_stats.get("degrades", 0) > 0
+        missed = not req_stats.get("deadline_met", True)
+        self.requests_shed += shed
+        self.requests_full += not shed
+        self.deadline_misses += missed
+        led = self.by_class.setdefault(req_stats.get("class", "default"),
+                                       ClassLedger())
+        led.frames += 1
+        led.shed += shed
+        led.deadline_misses += missed
+        led.latency_ms.observe(latency_s * 1e3)
 
     def note_round(self, wall_s: float, n_batches: int):
         """Record one dispatch_round->collect window."""
@@ -133,6 +179,17 @@ def engine_stats(counters: EngineCounters, probe_caches: Dict,
         "admissions": c.admissions,
         "full_radiance_hits": c.full_radiance_hits,
         "misprepares": c.misprepares,
+        # scheduler tier (serve/scheduler.py): shed/degrade accounting —
+        # shed + full == frames (degrade, never drop) — plus per-class
+        # frame/latency slices so a deadline class's p99 is gateable
+        # next to bulk traffic
+        "shed_degrades": c.shed_degrades,
+        "shed_reprepares": c.shed_reprepares,
+        "requests_shed": c.requests_shed,
+        "requests_full": c.requests_full,
+        "deadline_misses": c.deadline_misses,
+        "class_stats": {name: led.stats()
+                        for name, led in sorted(c.by_class.items())},
         "samples_processed": c.samples_processed,
         "samples_reused": c.samples_reused,
         # streaming-dispatch round observability: march wall-time

@@ -253,6 +253,91 @@ def test_flight_recorder_fires_exactly_once(tmp_path):
     assert check_trace.check_file(path) == []
 
 
+def test_rate_trigger_burst_detection_and_rearm(tmp_path):
+    """ISSUE-9 satellite: a burst trigger (shed storm) fires on the
+    count-th matching span inside the window — spread-out spans never
+    fire — and stays one-shot until rearm(); the window state freezes
+    while disarmed and resumes after."""
+    rec = export.FlightRecorder(capacity=16)
+    path = tmp_path / "fl_shed_burst.json"
+    trig = rec.dump_on(export.shed_burst_trigger(3, 100.0), path)
+
+    def shed(t0, sid):
+        return trace_lib.Span("scheduler.shed", sid, 0, "engine",
+                              t0, t0 + 1e-4, {})
+
+    def other(t0, sid):
+        return trace_lib.Span("pool.march", sid, 0, "engine",
+                              t0, t0 + 1e-4, {})
+
+    # three sheds spread over 310 ms (> window), with unrelated spans
+    # interleaved: no fire
+    rec.record([shed(0.00, 1), other(0.01, 2), shed(0.30, 3),
+                shed(0.31, 4)])
+    assert trig.fired == 0 and not path.exists()
+    # the 4th shed closes a (0.30, 0.31, 0.32) window: fire once
+    fired = rec.record([shed(0.32, 5), shed(0.33, 6)])
+    assert fired == 1 and trig.fired == 1 and trig.fired_on == 5
+    first = path.read_text()
+    rec.record([shed(0.34, 7), shed(0.35, 8), shed(0.36, 9)])
+    assert trig.fired == 1 and path.read_text() == first   # disarmed
+    rec.rearm()
+    rec.record([shed(0.37, 10)])                # resumes the frozen window
+    assert trig.fired == 2 and trig.fired_on == 10
+    assert check_trace.check_file(path) == []
+    # the evict-storm twin watches scenecache.evict spans
+    storm = export.evict_storm_trigger(2, 50.0)
+    ev = lambda t0, sid: trace_lib.Span("scenecache.evict", sid, 0,
+                                        "engine", t0, t0 + 1e-4, {})
+    assert not storm(ev(0.0, 1))
+    assert storm(ev(0.02, 2))
+
+
+def test_replica_pid_export_and_fleet_merge(tmp_path):
+    """ISSUE-9 satellite: TraceConfig.replica stamps every exported
+    event's Chrome pid (one process group per replica) and a
+    process_name metadata row; distinct-replica exports merge into one
+    valid fleet timeline, duplicate pids are rejected."""
+    paths = []
+    for rep in (1, 2):
+        tr = Tracer(TraceConfig())
+        trace_lib.install(tr)
+        try:
+            with trace_lib.span("admission.wait", req=rep, scene="mic"):
+                pass
+            tr.drain()
+        finally:
+            trace_lib.uninstall(tr)
+        path = tmp_path / f"trace_r{rep}.json"
+        tr.cfg = TraceConfig(path=str(path), replica=rep)
+        tr.finish()
+        assert check_trace.check_file(path) == []
+        data = json.loads(path.read_text())
+        assert all(e["pid"] == rep for e in data["traceEvents"])
+        assert any(e["ph"] == "M" and e["name"] == "process_name"
+                   and e["args"]["name"] == f"replica-{rep}"
+                   for e in data["traceEvents"])
+        paths.append(path)
+    merged = export.merge_chrome_traces(paths)
+    assert merged["otherData"]["replicas"] == [1, 2]
+    assert check_trace.validate(merged) == []
+    out = tmp_path / "fleet.json"
+    out.write_text(json.dumps(merged))
+    assert check_trace.check_file(out) == []
+    with pytest.raises(ValueError):
+        export.merge_chrome_traces([paths[0], paths[0]])
+
+
+def test_epoch_rebases_export_origin():
+    """A shared epoch earlier than this tracer's wall start shifts its
+    exported timestamps LATER by the same offset — per-replica exports
+    land on one fleet clock."""
+    tr = Tracer(TraceConfig())
+    assert tr.export_origin() == tr.t_origin
+    tr.cfg = TraceConfig(epoch=tr.wall_origin - 2.0)
+    assert tr.export_origin() == pytest.approx(tr.t_origin - 2.0)
+
+
 def test_chrome_trace_schema_roundtrip(tmp_path):
     """Exported Perfetto JSON round-trips through the schema validator
     (balanced spans, monotonic timestamps, known lanes)."""

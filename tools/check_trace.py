@@ -17,7 +17,11 @@ Checks, per file (see src/repro/obs/README.md for the format contract):
   * known lanes — every tid is declared by a ``thread_name`` metadata
     event, and every lane name matches the taxonomy (engine main
     thread, serve-stage-a workers, serve-dev device queues,
-    scenecache-fetch pool, or a pytest/driver thread).
+    scenecache-fetch pool, or a pytest/driver thread);
+  * replica namespaces — spans, lanes, and parent links are validated
+    PER ``pid``: a merged fleet timeline (export.merge_chrome_traces)
+    carries one process group per replica, and sids are only unique
+    within their replica's tracer.
 
 With no arguments the script self-tests: it records a tiny two-thread
 span tree through ``repro.obs`` itself, exports it, and validates the
@@ -55,13 +59,14 @@ def validate(data: dict) -> list:
     events = data.get("traceEvents")
     if not isinstance(events, list):
         return ["traceEvents missing or not a list"]
-    lanes = {}
-    spans = {}
+    lanes = {}              # (pid, tid) -> lane name
+    spans = {}              # (pid, sid) -> event: sids are per-replica
     for i, ev in enumerate(events):
         ph = ev.get("ph")
         if ph == "M":
             if ev.get("name") == "thread_name":
-                lanes[ev.get("tid")] = ev.get("args", {}).get("name", "")
+                lanes[(ev.get("pid"), ev.get("tid"))] = \
+                    ev.get("args", {}).get("name", "")
             continue
         if ph != "X":
             errs.append(f"event {i}: unexpected phase {ph!r}")
@@ -80,16 +85,18 @@ def validate(data: dict) -> list:
             errs.append(f"event {i} ({ev.get('name')}): args must carry "
                         f"sid + parent")
             continue
-        sid = args["sid"]
-        if sid in spans:
-            errs.append(f"event {i}: duplicate sid {sid}")
-        spans[sid] = ev
-    # balanced spans: parent exists and contains the child (same lane)
-    for sid, ev in spans.items():
+        key = (ev.get("pid"), args["sid"])
+        if key in spans:
+            errs.append(f"event {i}: duplicate sid {key[1]} in "
+                        f"pid {key[0]}")
+        spans[key] = ev
+    # balanced spans: parent exists (same replica) and contains the
+    # child (same lane)
+    for (pid, sid), ev in spans.items():
         parent = ev["args"]["parent"]
         if parent == 0:
             continue
-        pev = spans.get(parent)
+        pev = spans.get((pid, parent))
         if pev is None:
             errs.append(f"span {sid} ({ev['name']}): parent {parent} "
                         f"not in trace")
@@ -102,11 +109,11 @@ def validate(data: dict) -> list:
             errs.append(f"span {sid} ({ev['name']}): not contained in "
                         f"parent {parent} ({pev['name']})")
     # known lanes: every span's tid declared, every lane name known
-    for sid, ev in spans.items():
-        if ev["tid"] not in lanes:
+    for (pid, sid), ev in spans.items():
+        if (pid, ev["tid"]) not in lanes:
             errs.append(f"span {sid} ({ev['name']}): tid {ev['tid']} has "
                         f"no thread_name metadata")
-    for tid, name in lanes.items():
+    for (pid, tid), name in lanes.items():
         if not _LANE_RE.match(name):
             errs.append(f"lane tid={tid}: unknown lane name {name!r}")
     return errs
