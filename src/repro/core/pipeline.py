@@ -51,6 +51,20 @@ class ASDRConfig:
     # (kernels/fused_march.py) when the FieldFns carries fused-march
     # resources (fields without them fall back to the reference march).
     march_backend: str = "reference"
+    # Fused-march table supply: "auto" keeps the hash-table stack
+    # VMEM-resident when it fits and streams levels through a
+    # double-buffered DMA pair when it does not (the only option at
+    # full-config table sizes); "resident"/"streamed" pin the choice
+    # (kernels.ops._select_streaming; "resident" refuses configs that
+    # exceed the VMEM budget).  Ignored by the reference backend.
+    march_table_streaming: str = "auto"
+    # Per-RAY early exit: rays whose transmittance saturates stop
+    # contributing sample work (their sigmas are masked) instead of
+    # riding until the whole block exits.  chunks_done and ray_chunks
+    # are unchanged by the flag — a dead ray's log-transmittance is
+    # already frozen below the threshold — and the rgb/acc deviation is
+    # bounded by the EARLY_TERM_TRANSMITTANCE tail.
+    per_ray_early_exit: bool = False
 
 
 def render_fixed_fns(
@@ -85,10 +99,13 @@ def _march_block(fns: FieldFns, acfg: ASDRConfig, origins, dirs, budget,
     """March one block of rays with a traced per-block sample budget.
 
     origins/dirs: (B, 3); budget: traced int32 scalar.
-    Returns (rgb (B,3), acc (B,), depth (B,), chunks_done scalar) — depth
-    is the per-ray termination depth ``E[t] + (1 - acc) * FAR``, the
-    full-resolution replacement for the probe's stride-d proxy depth
-    (framecache warps register against it at depth edges).
+    Returns (rgb (B,3), acc (B,), depth (B,), chunks_done scalar,
+    ray_chunks (B,) int32) — depth is the per-ray termination depth
+    ``E[t] + (1 - acc) * FAR``, the full-resolution replacement for the
+    probe's stride-d proxy depth (framecache warps register against it
+    at depth edges); ray_chunks counts the chunks each ray entered
+    still live (un-saturated), the per-RAY refinement of chunks_done
+    that prices early-exit savings.
 
     With ``density_only`` (static) the color MLP never runs and rgb stays
     zero — the march only produces acc/depth, for rays whose radiance is
@@ -100,12 +117,17 @@ def _march_block(fns: FieldFns, acfg: ASDRConfig, origins, dirs, budget,
     n_chunks = (budget + C - 1) // C
 
     def cond(state):
-        ci, log_t, _, _, _ = state
+        ci, log_t = state[0], state[1]
         alive = jnp.any(log_t > LOG_EPS_T) if acfg.early_termination else True
         return jnp.logical_and(ci < n_chunks, alive)
 
     def body(state):
-        ci, log_t, rgb, acc, dep = state
+        ci, log_t, rgb, acc, dep, ray_chunks = state
+        # per-ray liveness at chunk start: saturated rays stop counting
+        # toward ray_chunks; with per_ray_early_exit their sigma is also
+        # masked (freezing log_t), which cannot change the block-level
+        # exit chunk — a dead ray's log_t is already below the threshold
+        alive = log_t > LOG_EPS_T
         idx = ci * C + jnp.arange(C)
         valid = idx < budget
         ts = scene.NEAR + (idx.astype(jnp.float32) + 0.5) * delta_t
@@ -114,6 +136,8 @@ def _march_block(fns: FieldFns, acfg: ASDRConfig, origins, dirs, budget,
         sigma, geo = fns.density(flat)
         sigma = sigma.reshape(B, C)
         sigma = jnp.where(valid[None, :], sigma, 0.0)
+        if acfg.per_ray_early_exit:
+            sigma = jnp.where(alive[:, None], sigma, 0.0)
 
         if not density_only:
             geo = geo.reshape(B, C, -1)
@@ -137,7 +161,8 @@ def _march_block(fns: FieldFns, acfg: ASDRConfig, origins, dirs, budget,
         acc = acc + jnp.sum(w, axis=-1)
         dep = dep + jnp.sum(w * ts[None, :], axis=-1)
         log_t = log_t + jnp.sum(log_steps, axis=-1)
-        return ci + 1, log_t, rgb, acc, dep
+        ray_chunks = ray_chunks + alive.astype(jnp.int32)
+        return ci + 1, log_t, rgb, acc, dep, ray_chunks
 
     state = (
         jnp.asarray(0, jnp.int32),
@@ -145,20 +170,22 @@ def _march_block(fns: FieldFns, acfg: ASDRConfig, origins, dirs, budget,
         jnp.zeros((B, 3)),
         jnp.zeros((B,)),
         jnp.zeros((B,)),
+        jnp.zeros((B,), jnp.int32),
     )
-    ci, _, rgb, acc, dep = jax.lax.while_loop(cond, body, state)
+    ci, _, rgb, acc, dep, ray_chunks = jax.lax.while_loop(cond, body, state)
     # an early-terminated ray leaves a negligible transmittance tail; the
     # (1 - acc) * FAR term pins true background rays to the far plane
     depth = dep + (1.0 - acc) * scene.FAR
     if acfg.white_background and not density_only:
         rgb = rgb + (1.0 - acc[:, None])
-    return rgb, acc, depth, ci
+    return rgb, acc, depth, ci, ray_chunks
 
 
 def march_blocks(fns: FieldFns, acfg: ASDRConfig, o_b, d_b, budgets,
                  density_only: bool = False):
     """March a batch of blocks: o_b/d_b (N, B, 3), budgets (N,) int32 ->
-    (rgb (N,B,3), acc (N,B), depth (N,B), chunks (N,)).
+    (rgb (N,B,3), acc (N,B), depth (N,B), chunks (N,), ray_chunks
+    (N,B) int32).
 
     The backend seam for Phase II: with ``march_backend == "fused"`` and a
     FieldFns carrying fused-march resources (kernels.ops.field_fns), the
@@ -233,7 +260,8 @@ def render_adaptive(fns: FieldFns, acfg: ASDRConfig, origins, dirs, counts,
     o_s = origins[order].reshape(-1, B, 3)
     d_s = dirs[order].reshape(-1, B, 3)
 
-    rgb_s, acc_s, depth_s, chunks = march_blocks(fns, acfg, o_s, d_s, budgets)
+    rgb_s, acc_s, depth_s, chunks, ray_chunks = march_blocks(
+        fns, acfg, o_s, d_s, budgets)
     # unsort
     inv = jnp.zeros_like(order).at[order].set(jnp.arange(R, dtype=order.dtype))
     rgb = rgb_s.reshape(R, 3)[inv]
@@ -242,6 +270,10 @@ def render_adaptive(fns: FieldFns, acfg: ASDRConfig, origins, dirs, counts,
         "samples_processed": jnp.sum(chunks) * B * acfg.chunk,
         "baseline_samples": R * acfg.ns_full,
         "chunks_per_block": chunks,
+        # per-ray live-chunk counts (block-sorted order): the gap to
+        # chunks_per_block * B is the sample work per-ray early exit
+        # can skip on saturated trajectories
+        "ray_chunks_per_block": ray_chunks,
         "budgets": budgets,
         # full-resolution termination depth (ROADMAP item): replaces the
         # probe's stride-d proxy depth wherever a finished frame is cached

@@ -11,22 +11,30 @@ block program it
 
   1. generates the chunk's sample positions from the block's rays
      (ray setup is in-register; only origins/dirs/budget are read),
-  2. hash-encodes them against the FULL table stack — all L levels are
-     co-resident in VMEM for the whole march (hash_encode.py streams
-     them once per level; here the march is long enough that residency
-     beats streaming, cf. fused_mlp.py's layout notes),
+  2. hash-encodes them against the table stack — either all L levels
+     co-resident in VMEM for the whole march (small configs), or, at
+     production table sizes, STREAMED level-by-level through a
+     double-buffered ping/pong pair of level-sized VMEM buffers with
+     async DMA: level l+1's copy is launched while level l encodes, so
+     the table working set in VMEM is two levels, never the stack,
   3. runs the density chain on every sample and the color chain on
      every ``group``-th anchor only — §4.3's decoupling moves INSIDE
-     the kernel, so non-anchor colors are lerped in-register,
+     the kernel; anchor selection and the non-anchor lerp are lowered
+     to the lane-shuffle idiom (iota-built one-hot matmuls on the MXU)
+     instead of a static C-way unroll,
   4. composites transmittance/rgb/acc/depth and carries the running
      log-transmittance across chunks in a ``while_loop`` with the exact
      early-termination contract of the reference march (same chunk
-     count, same budget masking).
+     count, same budget masking), emitting per-RAY chunks_done so the
+     serve layer can account (and, with
+     ``ASDRConfig.per_ray_early_exit``, actually stop) the sample work
+     of rays that saturate before their block does.
 
 Per-sample features (encodings, geo, anchor colors) never exist outside
 the kernel.  The only HBM traffic per block is rays in (B x 8 x 2),
 per-ray SH in (B x 128, computed ONCE per ray instead of once per
-anchor-sample), and the packed (B x 8) result out.
+anchor-sample), the packed (B x 8) result out — plus, under streaming,
+the level DMAs (2 x T x F in flight, overlapped with encode compute).
 
 Data layout (prepared by ops.fused_march_blocks):
   o / d    (N*B, PPAD) f32  — rays padded to 8 lanes, one block per
@@ -34,22 +42,31 @@ Data layout (prepared by ops.fused_march_blocks):
   sh       (N*B, P)    f32  — SH(dir) pre-placed at cols [G, G+S)
   budgets  (N, 8)      i32  — col 0 = per-block sample budget
   meta     (L, 8)      i32  — hash_encode.grid_meta rows
-  tables   (L, T, F)   f32  — resident for all grid steps
+  tables   (L, T, F)   f32  — resident: VMEM for all grid steps;
+                              streamed: stays in HBM (ANY memory
+                              space), DMA'd per level into a
+                              (2, T, F) VMEM scratch ping/pong pair
   wd / wc  (n, P, P)   f32  — fused_mlp packed weights (sigma col
                               permuted to lane G)
-  out      (N*B, 8)    f32  — [acc, r, g, b, depth, chunks, 0, 0]
+  out      (N*B, 8)    f32  — [acc, r, g, b, depth, block_chunks,
+                              ray_chunks, 0]
 
 ``with_color=False`` is the density-only march (serve/README.md
 "density-only march rule"): the color chain and lerp are skipped
 entirely and rgb reads 0 — acc/depth/chunks keep full parity with the
 reference density-only march.
 
-VMEM accounting (full config): tables 16 levels x 2^19 x 2 x 4 B = 64 MB
-exceeds a 16 MB VMEM — the production lowering streams table levels via
-double-buffered DMA (guide §17) or shards levels over cores; THIS
-container validates in interpret mode where residency is simulated, and
-the small test config (8 x 2^14 x 2 = 128 KB) fits outright.  Weights:
-(nd+nc) x 64 KB as in fused_mlp.py.
+VMEM accounting (ops.fused_march_vmem_bytes is the ledger): the full
+config's table stack (16 levels x 2^19 x 2 x 4 B = 64 MB) exceeds a
+16 MB VMEM, so residency cannot ship at production scale — the
+STREAMED lowering above runs it with a 2 x T x F = 8 MB working pair.
+ops.fused_march_blocks auto-selects per config: resident whenever the
+stack fits (bit-identical to streamed — same gather math against the
+same bytes, gated by tests), streamed otherwise.  The small test
+config (8 x 2^14 x 2 = 128 KB) stays resident.  Weights: (nd+nc) x
+64 KB as in fused_mlp.py.  This container validates both paths in
+interpret mode (the DMA ping/pong included); on hardware the same
+kernel lowers with real async copies.
 """
 from __future__ import annotations
 
@@ -57,14 +74,18 @@ import functools
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
-from ..core.hashgrid import PRIMES
+from . import hash_encode as HE
 
 P = 128      # padded feature width (MXU lane width) — matches fused_mlp
 PPAD = 8     # padded ray row [x, y, z, 0...]    — matches hash_encode
-OUT_W = 8    # packed output lanes [acc, r, g, b, depth, chunks, 0, 0]
+OUT_W = 8    # packed output lanes [acc, r, g, b, depth, chunks, ray_chunks, 0]
+
+# per-core VMEM the auto-select lowers against (16 MB on current TPUs);
+# tests shrink it via ops.py to force the streamed path on small shapes
+VMEM_LIMIT_BYTES = 16 * 2 ** 20
 
 
 def _relu(x):
@@ -75,43 +96,19 @@ def _trunc_exp(x):
     return jnp.exp(jnp.clip(x, -15.0, 15.0))
 
 
-def _encode_points(flat, meta, tables, n_levels):
+def _encode_points(flat, meta, read_level, n_levels):
     """In-register hash encode: (M, 3) points -> (M, L*F) features.
 
-    Same math as hash_encode._encode_kernel, but over the whole resident
-    table stack (static level unroll) instead of one level per grid step.
+    Same per-level math as hash_encode (shared ``encode_level``), with
+    the table source abstracted: ``read_level(l)`` returns level ``l``'s
+    (T, F) block — a slice of the resident stack, or the streamed DMA
+    ping/pong slot that was just waited on.
     """
     feats_per_level = []
     for level in range(n_levels):
-        res = meta[level, 0]
-        is_dense = meta[level, 1]
-        rows = meta[level, 2]
-        table = tables[level]                              # (T, F)
-
-        scaled = flat * res.astype(jnp.float32)
-        base = jnp.clip(jnp.floor(scaled).astype(jnp.int32), 0, res - 1)
-        frac = scaled - base.astype(jnp.float32)           # (M, 3)
-
-        acc = jnp.zeros((flat.shape[0], table.shape[-1]), jnp.float32)
-        for c in range(8):
-            ox, oy, oz = (c >> 2) & 1, (c >> 1) & 1, c & 1
-            cx = (base[:, 0] + ox).astype(jnp.uint32)
-            cy = (base[:, 1] + oy).astype(jnp.uint32)
-            cz = (base[:, 2] + oz).astype(jnp.uint32)
-            stride = (res + 1).astype(jnp.uint32)
-            dense_idx = cx + stride * (cy + stride * cz)
-            h = cx * np.uint32(PRIMES[0])
-            h = h ^ (cy * np.uint32(PRIMES[1]))
-            h = h ^ (cz * np.uint32(PRIMES[2]))
-            hash_idx = h % rows.astype(jnp.uint32)
-            idx = jnp.where(is_dense > 0, dense_idx,
-                            hash_idx).astype(jnp.int32)
-            f = table[idx]                                 # (M, F) gather
-            wx = frac[:, 0] if ox else 1.0 - frac[:, 0]
-            wy = frac[:, 1] if oy else 1.0 - frac[:, 1]
-            wz = frac[:, 2] if oz else 1.0 - frac[:, 2]
-            acc = acc + f.astype(jnp.float32) * (wx * wy * wz)[:, None]
-        feats_per_level.append(acc)
+        feats_per_level.append(HE.encode_level(
+            flat, meta[level, 0], meta[level, 1], meta[level, 2],
+            read_level(level)))
     return jnp.concatenate(feats_per_level, axis=-1)       # (M, L*F)
 
 
@@ -123,34 +120,53 @@ def _chains(x, w, n, final=None):
     return final(x) if final is not None else x
 
 
-def _march_kernel(o_ref, d_ref, sh_ref, bud_ref, meta_ref, tables_ref,
-                  wd_ref, wc_ref, out_ref, *, nd, nc, geo_dim, group,
-                  chunk, n_levels, near, far, log_eps_t, early_term,
-                  white_background, with_color):
+def _anchor_select(C, A, group):
+    """(A, C) one-hot anchor-pick matrix, built from 2-D iotas (the
+    lane-shuffle idiom: a gather expressed as an MXU matmul, no
+    C-way python unroll and no captured index-array constants)."""
+    a_io = jax.lax.broadcasted_iota(jnp.int32, (A, C), 0)
+    c_io = jax.lax.broadcasted_iota(jnp.int32, (A, C), 1)
+    return (c_io == a_io * group).astype(jnp.float32)
+
+
+def _lerp_expand(C, A, group):
+    """(C, A) lerp-expansion matrix: row j carries weight (1 - t_j) on
+    its left anchor and t_j on its right (clamped at the tail), so
+    expanding anchors to all samples is one matmul —
+    decouple.interpolate_group_colors as a lane shuffle."""
+    j_io = jax.lax.broadcasted_iota(jnp.int32, (C, A), 0)
+    a_io = jax.lax.broadcasted_iota(jnp.int32, (C, A), 1)
+    gi = jnp.minimum(j_io // group, A - 1)
+    ri = jnp.minimum(j_io // group + 1, A - 1)
+    t = (j_io % group).astype(jnp.float32) / group
+    return (jnp.where(a_io == gi, 1.0 - t, 0.0)
+            + jnp.where(a_io == ri, t, 0.0))
+
+
+def _march_impl(o_ref, d_ref, sh_ref, bud_ref, meta_ref, wd_ref, wc_ref,
+                out_ref, encode, *, nd, nc, geo_dim, group, chunk,
+                n_levels, near, far, log_eps_t, early_term, per_ray_exit,
+                white_background, with_color):
+    """The march body, table access abstracted behind ``encode(flat)``.
+
+    Shared verbatim by the resident and streamed kernels — residency is
+    a table-supply strategy, never a semantics change, which is what
+    makes streamed-vs-resident bit-identity a testable contract.
+    """
     B = o_ref.shape[0]
     C = chunk
     # read every ref up front: the loop body then touches only values
-    # (tables/weights stay resident; no ref reads inside the while_loop)
+    # (weights stay resident; table refs are read through ``encode``)
     o = o_ref[...][:, :3]
     d = d_ref[...][:, :3]
     sh = sh_ref[...]
     budget = bud_ref[0]
-    meta = meta_ref[...]
-    tables = tables_ref[...]
     wd = wd_ref[...]
     wc = wc_ref[...]
 
     delta_t = (far - near) / budget.astype(jnp.float32)
     n_chunks = (budget + C - 1) // C
-
-    # static per-chunk anchor geometry (§4.3 decoupling, in-kernel);
-    # indices stay python ints — a pallas kernel cannot capture constant
-    # index ARRAYS, so anchor selection / lerp expansion unroll over C
-    a_idx = [int(i) for i in range(0, C, group)]
-    A = len(a_idx)
-    lerp_l = [min(j // group, A - 1) for j in range(C)]
-    lerp_r = [min(j // group + 1, A - 1) for j in range(C)]
-    lerp_t = [float((j % group) / group) for j in range(C)]
+    A = len(range(0, C, group))
 
     def cond(state):
         ci, log_t = state[0], state[1]
@@ -159,14 +175,20 @@ def _march_kernel(o_ref, d_ref, sh_ref, bud_ref, meta_ref, tables_ref,
         return jnp.logical_and(ci < n_chunks, jnp.any(log_t > log_eps_t))
 
     def body(state):
-        ci, log_t, rgb, acc, dep = state
+        ci, log_t, rgb, acc, dep, ray_chunks = state
+        # per-ray liveness at chunk start: saturated rays stop counting
+        # toward ray_chunks, and — with per_ray_exit — stop contributing
+        # sample work entirely (their sigma is masked, freezing log_t);
+        # block-level exit timing is unchanged either way, because a
+        # dead ray's log_t can never rise back above the threshold
+        alive = log_t > log_eps_t
         idx = ci * C + jnp.arange(C)
         valid = idx < budget
         ts = near + (idx.astype(jnp.float32) + 0.5) * delta_t
         pts = o[:, None, :] + ts[None, :, None] * d[:, None, :]  # (B, C, 3)
         flat = pts.reshape(B * C, 3)
 
-        enc = _encode_points(flat, meta, tables, n_levels)   # (M, L*F)
+        enc = encode(flat)                                   # (M, L*F)
         enc = jnp.concatenate(
             [enc, jnp.zeros((B * C, P - enc.shape[-1]), jnp.float32)],
             axis=-1)
@@ -175,19 +197,24 @@ def _march_kernel(o_ref, d_ref, sh_ref, bud_ref, meta_ref, tables_ref,
         inside = jnp.all((flat >= 0.0) & (flat <= 1.0),
                          axis=-1).reshape(B, C)
         sigma = jnp.where(inside & valid[None, :], sigma, 0.0)
+        if per_ray_exit:
+            sigma = jnp.where(alive[:, None], sigma, 0.0)
 
         if with_color:
             lane = jax.lax.broadcasted_iota(jnp.int32, dout.shape, 1)
             geo = jnp.where(lane < geo_dim, dout, 0.0)
             geo3 = geo.reshape(B, C, P)
-            geo_a = jnp.stack([geo3[:, i] for i in a_idx], axis=1)
+            # anchor pick + lerp expansion as one-hot matmuls (the
+            # lane-shuffle idiom) — no static C-way stack unrolls
+            sel = _anchor_select(C, A, group)                # (A, C)
+            geo_a = jnp.einsum("ac,bcp->bap", sel, geo3,
+                               preferred_element_type=jnp.float32)
             cin = (geo_a + sh[:, None, :]).reshape(B * A, P)
             rgb_a = _chains(cin, wc, nc,
                             final=jax.nn.sigmoid)[:, :3].reshape(B, A, 3)
-            colors = jnp.stack(
-                [rgb_a[:, lerp_l[j]]
-                 + (rgb_a[:, lerp_r[j]] - rgb_a[:, lerp_l[j]]) * lerp_t[j]
-                 for j in range(C)], axis=1)
+            lerp = _lerp_expand(C, A, group)                 # (C, A)
+            colors = jnp.einsum("ca,bax->bcx", lerp, rgb_a,
+                                preferred_element_type=jnp.float32)
 
         alphas = 1.0 - jnp.exp(-sigma * delta_t)
         one_m = jnp.clip(1.0 - alphas, 1e-10, 1.0)
@@ -200,7 +227,8 @@ def _march_kernel(o_ref, d_ref, sh_ref, bud_ref, meta_ref, tables_ref,
         acc = acc + jnp.sum(w, axis=-1)
         dep = dep + jnp.sum(w * ts[None, :], axis=-1)
         log_t = log_t + jnp.sum(log_steps, axis=-1)
-        return ci + 1, log_t, rgb, acc, dep
+        ray_chunks = ray_chunks + alive.astype(jnp.int32)
+        return ci + 1, log_t, rgb, acc, dep, ray_chunks
 
     state = (
         jnp.asarray(0, jnp.int32),
@@ -208,32 +236,96 @@ def _march_kernel(o_ref, d_ref, sh_ref, bud_ref, meta_ref, tables_ref,
         jnp.zeros((B, 3)),
         jnp.zeros((B,)),
         jnp.zeros((B,)),
+        jnp.zeros((B,), jnp.int32),
     )
-    ci, _, rgb, acc, dep = jax.lax.while_loop(cond, body, state)
+    ci, _, rgb, acc, dep, ray_chunks = jax.lax.while_loop(cond, body, state)
     depth = dep + (1.0 - acc) * far
     if with_color and white_background:
         rgb = rgb + (1.0 - acc[:, None])
     out_ref[...] = jnp.concatenate(
         [acc[:, None], rgb, depth[:, None],
          jnp.broadcast_to(ci.astype(jnp.float32), (B,))[:, None],
-         jnp.zeros((B, OUT_W - 6), jnp.float32)], axis=1)
+         ray_chunks.astype(jnp.float32)[:, None],
+         jnp.zeros((B, OUT_W - 7), jnp.float32)], axis=1)
+
+
+def _march_kernel_resident(o_ref, d_ref, sh_ref, bud_ref, meta_ref,
+                           tables_ref, wd_ref, wc_ref, out_ref, **kw):
+    """All L levels VMEM-resident for the whole march (small configs)."""
+    meta = meta_ref[...]
+    tables = tables_ref[...]
+    _march_impl(o_ref, d_ref, sh_ref, bud_ref, meta_ref, wd_ref, wc_ref,
+                out_ref,
+                lambda flat: _encode_points(flat, meta,
+                                            lambda l: tables[l],
+                                            kw["n_levels"]), **kw)
+
+
+def _march_kernel_streamed(o_ref, d_ref, sh_ref, bud_ref, meta_ref,
+                           tables_ref, wd_ref, wc_ref, out_ref,
+                           tbuf, sem, **kw):
+    """Production lowering: tables stay in HBM; each encode streams the
+    stack through a double-buffered (2, T, F) VMEM scratch pair.
+
+    Per level l the DMA for level l+1 is launched BEFORE waiting on
+    level l, so the next copy is in flight while the current level's
+    gathers and trilinear blend run — the §5.2 data-reuse dataflow with
+    the table stream (not the sample stream) flowing past the compute.
+    Ping/pong slot l % 2 is safe at any L (odd included): slot reuse is
+    always two levels apart, and level l-1's slot was fully consumed
+    before level l+1's copy into it starts.
+    """
+    meta = meta_ref[...]
+
+    def copy(level, slot):
+        return pltpu.make_async_copy(
+            tables_ref.at[level], tbuf.at[slot], sem.at[slot])
+
+    def read_level(level):
+        if level + 1 < kw["n_levels"]:
+            copy(level + 1, (level + 1) % 2).start()
+        copy(level, level % 2).wait()
+        return tbuf[level % 2]
+
+    def encode(flat):
+        copy(0, 0).start()                    # warm-up: first level
+        return _encode_points(flat, meta, read_level, kw["n_levels"])
+
+    _march_impl(o_ref, d_ref, sh_ref, bud_ref, meta_ref, wd_ref, wc_ref,
+                out_ref, encode, **kw)
 
 
 def fused_march_call(o, d, sh, budgets, meta, tables, wd, wc, *,
                      block_size, geo_dim, group, chunk, near, far,
                      log_eps_t, early_term, white_background,
-                     with_color, interpret=True):
+                     with_color, stream_tables=False, per_ray_exit=False,
+                     interpret=True):
     """o/d (N*B, PPAD), sh (N*B, P), budgets (N, 8) i32, meta (L, 8) i32,
-    tables (L, T, F), wd (nd,P,P), wc (nc,P,P) -> packed (N*B, OUT_W)."""
+    tables (L, T, F), wd (nd,P,P), wc (nc,P,P) -> packed (N*B, OUT_W).
+
+    ``stream_tables`` selects the table supply: False keeps the stack
+    VMEM-resident (bit-identical baseline for configs that fit), True
+    runs the double-buffered DMA streaming path (the only option at
+    full-config table sizes — see ops.fused_march_vmem_bytes).
+    """
     B = block_size
     n_blocks = budgets.shape[0]
     assert o.shape[0] == n_blocks * B, "one budget row per block"
     L, T, F = tables.shape
-    kern = functools.partial(
-        _march_kernel, nd=wd.shape[0], nc=wc.shape[0], geo_dim=geo_dim,
-        group=group, chunk=chunk, n_levels=L, near=near, far=far,
-        log_eps_t=log_eps_t, early_term=early_term,
-        white_background=white_background, with_color=with_color)
+    kw = dict(nd=wd.shape[0], nc=wc.shape[0], geo_dim=geo_dim,
+              group=group, chunk=chunk, n_levels=L, near=near, far=far,
+              log_eps_t=log_eps_t, early_term=early_term,
+              per_ray_exit=per_ray_exit,
+              white_background=white_background, with_color=with_color)
+    if stream_tables:
+        kern = functools.partial(_march_kernel_streamed, **kw)
+        tables_spec = pl.BlockSpec(memory_space=pltpu.ANY)
+        scratch = [pltpu.VMEM((2, T, F), jnp.float32),
+                   pltpu.SemaphoreType.DMA((2,))]
+    else:
+        kern = functools.partial(_march_kernel_resident, **kw)
+        tables_spec = pl.BlockSpec((L, T, F), lambda i: (0, 0, 0))
+        scratch = []
     return pl.pallas_call(
         kern,
         grid=(n_blocks,),
@@ -243,11 +335,12 @@ def fused_march_call(o, d, sh, budgets, meta, tables, wd, wc, *,
             pl.BlockSpec((B, P), lambda i: (i, 0)),
             pl.BlockSpec((None, 8), lambda i: (i, 0)),
             pl.BlockSpec((L, 8), lambda i: (0, 0)),
-            pl.BlockSpec((L, T, F), lambda i: (0, 0, 0)),
+            tables_spec,
             pl.BlockSpec((wd.shape[0], P, P), lambda i: (0, 0, 0)),
             pl.BlockSpec((wc.shape[0], P, P), lambda i: (0, 0, 0)),
         ],
         out_specs=pl.BlockSpec((B, OUT_W), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((n_blocks * B, OUT_W), jnp.float32),
+        scratch_shapes=scratch,
         interpret=interpret,
     )(o, d, sh, budgets, meta, tables, wd, wc)

@@ -40,18 +40,21 @@ TILE = 256   # points per block program
 PPAD = 8     # padded point row: [x, y, z, 0...]
 
 
-def _encode_kernel(pts_ref, meta_ref, table_ref, out_ref):
-    meta = meta_ref[...]
-    res = meta[0]
-    is_dense = meta[1]
-    rows = meta[2]
+def encode_level(pts, res, is_dense, rows, table):
+    """One level's trilinear hash encode: (M, 3) points x (T, F) table ->
+    (M, F) features.
 
-    pts = pts_ref[...][:, :3]                            # (TILE, 3)
+    The in-kernel building block shared by this module's per-level grid
+    steps AND the fused march (fused_march.py), where the same math runs
+    against either the resident table stack or a double-buffered VMEM
+    streaming slot — one implementation, so the two kernels cannot drift.
+    ``res``/``is_dense``/``rows`` are traced scalars (one metadata row).
+    """
     scaled = pts * res.astype(jnp.float32)
     base = jnp.clip(jnp.floor(scaled).astype(jnp.int32), 0, res - 1)
-    frac = scaled - base.astype(jnp.float32)             # (TILE, 3)
+    frac = scaled - base.astype(jnp.float32)             # (M, 3)
 
-    acc = jnp.zeros((pts.shape[0], table_ref.shape[-1]), jnp.float32)
+    acc = jnp.zeros((pts.shape[0], table.shape[-1]), jnp.float32)
     # unrolled 8-corner loop with python-scalar offsets (no array constants)
     for c in range(8):
         ox, oy, oz = (c >> 2) & 1, (c >> 1) & 1, c & 1
@@ -66,13 +69,20 @@ def _encode_kernel(pts_ref, meta_ref, table_ref, out_ref):
         hash_idx = h % rows.astype(jnp.uint32)
         idx = jnp.where(is_dense > 0, dense_idx, hash_idx).astype(jnp.int32)
 
-        feats = table_ref[idx]                           # (TILE, F) gather
+        feats = table[idx]                               # (M, F) gather
         wx = frac[:, 0] if ox else 1.0 - frac[:, 0]
         wy = frac[:, 1] if oy else 1.0 - frac[:, 1]
         wz = frac[:, 2] if oz else 1.0 - frac[:, 2]
-        w = wx * wy * wz                                 # (TILE,)
+        w = wx * wy * wz                                 # (M,)
         acc = acc + feats.astype(jnp.float32) * w[:, None]
-    out_ref[...] = acc
+    return acc
+
+
+def _encode_kernel(pts_ref, meta_ref, table_ref, out_ref):
+    meta = meta_ref[...]
+    pts = pts_ref[...][:, :3]                            # (TILE, 3)
+    out_ref[...] = encode_level(pts, meta[0], meta[1], meta[2],
+                                table_ref[...])
 
 
 def hash_encode_call(points_padded, meta, tables, interpret: bool = True):

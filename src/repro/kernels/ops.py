@@ -243,6 +243,12 @@ def volume_render(sigmas, anchor_colors, deltas, group: int,
 
 
 # ---------------------------------------------------------------- fused march
+# Per-core VMEM budget the resident/streamed auto-select lowers against.
+# Re-exported from the kernel module so tests can shrink it (monkeypatch
+# THIS name) and force the streamed path on scaled-down shapes.
+FUSED_MARCH_VMEM_LIMIT = FMA.VMEM_LIMIT_BYTES
+
+
 class FusedMarchResources:
     """Device-resident inputs for the fused streaming march kernel.
 
@@ -261,15 +267,67 @@ class FusedMarchResources:
         self.interpret = interpret
 
 
+def fused_march_vmem_bytes(acfg, res: FusedMarchResources,
+                           streamed: bool = False) -> int:
+    """Estimated VMEM bytes one fused-march grid step holds live.
+
+    The accounting behind the resident/streamed auto-select: the table
+    term is the whole (L, T, F) stack when resident but only the
+    (2, T, F) double-buffer pair when streamed — at the full config
+    (16 x 2^19 x 2 x 4 B = 64 MB stack vs an 8 MB pair against a 16 MB
+    VMEM) that difference is exactly why residency cannot ship.  The
+    weight stacks, ray/SH tiles, meta and output tile are counted too
+    so the select stays honest for fat blocks or deep MLPs.
+    """
+    L, T, F = res.tables.shape
+    B = acfg.block_size
+    f32 = 4
+    tables = (2 if streamed else L) * T * F * f32
+    weights = (res.wd.shape[0] + res.wc.shape[0]) * FMA.P * FMA.P * f32
+    rays = 2 * B * FMA.PPAD * f32          # origins + dirs tiles
+    sh = B * FMA.P * f32                   # per-ray SH color input
+    out = B * FMA.OUT_W * f32
+    meta = (L + 1) * 8 * 4                 # grid meta rows + budget row
+    return tables + weights + rays + sh + out + meta
+
+
+def _select_streaming(acfg, res: FusedMarchResources) -> bool:
+    """Resolve ``ASDRConfig.march_table_streaming`` to a concrete path.
+
+    "auto" streams exactly when the resident footprint would blow the
+    VMEM budget; "resident" is an explicit pin that refuses (rather
+    than silently overflows) configs that do not fit.
+    """
+    mode = getattr(acfg, "march_table_streaming", "auto")
+    if mode == "streamed":
+        return True
+    resident_bytes = fused_march_vmem_bytes(acfg, res, streamed=False)
+    if mode == "resident":
+        if resident_bytes > FUSED_MARCH_VMEM_LIMIT:
+            raise ValueError(
+                f"resident fused march needs {resident_bytes} B of VMEM "
+                f"(> {FUSED_MARCH_VMEM_LIMIT} B limit); this config only "
+                "runs with march_table_streaming='streamed' (or 'auto')")
+        return False
+    if mode != "auto":
+        raise ValueError(f"march_table_streaming={mode!r} not in "
+                         "('auto', 'resident', 'streamed')")
+    return resident_bytes > FUSED_MARCH_VMEM_LIMIT
+
+
 def fused_march_blocks(res: FusedMarchResources, acfg, o_b, d_b, budgets,
                        density_only: bool = False):
     """Run the single-kernel streaming march over a batch of blocks.
 
     o_b/d_b (N, B, 3), budgets (N,) int32 -> (rgb (N,B,3), acc (N,B),
-    depth (N,B), chunks (N,)) with core.pipeline._march_block semantics
-    (same chunk count, budget masking, early termination).  SH features
-    are computed once per RAY here (the reference path recomputes them
-    per anchor-sample every chunk) and placed at the color-input lanes.
+    depth (N,B), chunks (N,), ray_chunks (N,B)) with
+    core.pipeline._march_block semantics (same chunk count, budget
+    masking, early termination; ray_chunks counts the chunks each ray
+    was still live for).  SH features are computed once per RAY here
+    (the reference path recomputes them per anchor-sample every chunk)
+    and placed at the color-input lanes.  Table supply (VMEM-resident
+    stack vs double-buffered DMA streaming) resolves per config via
+    ``_select_streaming`` — the two are bit-identical where both run.
     """
     N, B, _ = o_b.shape
     o8 = _pad_cols(o_b.astype(jnp.float32).reshape(N * B, 3), FMA.PPAD)
@@ -286,13 +344,17 @@ def fused_march_blocks(res: FusedMarchResources, acfg, o_b, d_b, budgets,
         log_eps_t=math.log(rendering.EARLY_TERM_TRANSMITTANCE),
         early_term=acfg.early_termination,
         white_background=acfg.white_background,
-        with_color=not density_only, interpret=res.interpret)
+        with_color=not density_only,
+        stream_tables=_select_streaming(acfg, res),
+        per_ray_exit=getattr(acfg, "per_ray_early_exit", False),
+        interpret=res.interpret)
     out = out.reshape(N, B, FMA.OUT_W)
     acc = out[:, :, 0]
     rgb = out[:, :, 1:4]
     depth = out[:, :, 4]
     chunks = out[:, 0, 5].astype(jnp.int32)
-    return rgb, acc, depth, chunks
+    ray_chunks = out[:, :, 6].astype(jnp.int32)
+    return rgb, acc, depth, chunks, ray_chunks
 
 
 # ------------------------------------------------------------------- FieldFns

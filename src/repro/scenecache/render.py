@@ -82,7 +82,7 @@ def render_adaptive_cached(fns: FieldFns, acfg: ASDRConfig, origins, dirs,
                 leader_of[k] = len(leaders)
                 leaders.append(i)
         march = partial(pipeline._march_block, fns, acfg)
-        rgb_m, acc_m, dep_m, ch_m = jax.lax.map(
+        rgb_m, acc_m, dep_m, ch_m, _rc_m = jax.lax.map(
             lambda a: march(*a),
             (jnp.asarray(o_np[leaders]), jnp.asarray(d_np[leaders]),
              jnp.asarray(bud_np[leaders], jnp.int32)))

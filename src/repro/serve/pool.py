@@ -30,6 +30,7 @@ from __future__ import annotations
 import concurrent.futures
 import dataclasses
 import threading
+import time
 from collections import OrderedDict
 from functools import partial
 from typing import List, Optional
@@ -373,7 +374,8 @@ class BlockPool:
         bid = self._batch_seq
         with trace_lib.span("pool.dispatch", batch=bid, scene=group[0],
                             density=group[1], blocks=len(batch),
-                            reqs=sorted({it[0].req.rid for it in batch})):
+                            reqs=sorted({it[0].req.rid
+                                         for it in batch})) as sp:
             B = self.acfg.block_size
             N = self.blocks_per_batch
             n_pad = N - len(batch)
@@ -385,9 +387,22 @@ class BlockPool:
             budgets = jnp.asarray([it[4] for it in batch] + [1] * n_pad,
                                   jnp.int32)
             # dispatch only — device arrays are fetched in collect(),
-            # after the engine has overlapped Stage-A speculation
-            out = march_for(group[0], group[1])(o_b, d_b, budgets)
-        return (batch, followers, n_pad, out, bid)
+            # after the engine has overlapped Stage-A speculation.
+            # With tracing on, the launch is bracketed with a jax
+            # profiler annotation so a device profile's timeline carries
+            # the same batch id as the host spans.
+            if trace_lib.active() is not None:
+                with jax.profiler.TraceAnnotation(f"fused_march.batch{bid}"):
+                    out = march_for(group[0], group[1])(o_b, d_b, budgets)
+            else:
+                out = march_for(group[0], group[1])(o_b, d_b, budgets)
+        # dispatch-span attrs dict + launch-end timestamp ride the handle:
+        # collect() stamps ``device_ms`` (launch -> arrays ready) back
+        # onto the already-closed span, splitting its host wall time into
+        # queue/assembly vs device execution at export.
+        disp_attrs = getattr(sp, "attrs", None)
+        return (batch, followers, n_pad, out, bid, disp_attrs,
+                time.perf_counter())
 
     def collect(self, inflight):
         """Fetch a dispatched batch and deliver/store its outputs.
@@ -396,11 +411,23 @@ class BlockPool:
         per-batch march time the engine could not overlap; its ``batch``
         id matches the ``pool.dispatch`` span that launched it, so a
         frame's lineage chains admission -> dispatch -> collect."""
-        batch, followers, n_pad, out, bid = inflight
+        batch, followers, n_pad, out, bid, disp_attrs, t_launch = inflight
         with trace_lib.span("pool.collect", batch=bid,
                             blocks=len(batch),
                             reqs=sorted({it[0].req.rid for it in batch})):
-            rgb, acc, depth, chunks = (np.asarray(a) for a in out)
+            rgb, acc, depth, chunks, ray_chunks = (
+                np.asarray(a) for a in out)
+            if disp_attrs is not None:
+                disp_attrs["device_ms"] = (time.perf_counter()
+                                           - t_launch) * 1e3
+            if self.acfg.per_ray_early_exit and batch:
+                # sample work the per-ray exit skipped: rays that went
+                # dead ride chunks - ray_chunks masked chunks each, at
+                # chunk samples per ray per chunk (real blocks only)
+                nb = len(batch)
+                skipped = (chunks[:nb, None] - ray_chunks[:nb]).sum()
+                self.counters.ray_exit_samples_skipped += (
+                    int(skipped) * self.acfg.chunk)
             for i, it in enumerate(batch):
                 if it[7]:
                     it[0].deliver_density(it[1], acc[i], depth[i],

@@ -92,6 +92,13 @@ class EngineCounters:
     deadline_misses: int = 0
     samples_processed: int = 0
     samples_reused: int = 0
+    # sample work the fused march's per-RAY early exit skipped (pool
+    # collect, gated on ASDRConfig.per_ray_early_exit): rays whose
+    # transmittance saturated before their block's exit chunk stop
+    # running the field, chunk-granular.  Stays 0 with the flag off, so
+    # it is deliberately NOT in DETERMINISTIC_COUNTERS — it prices an
+    # opt-in approximation tier, like the shed counters.
+    ray_exit_samples_skipped: int = 0
     # per-round streaming-dispatch observability (engine thread only):
     # wall time of each dispatch_round->collect window and how many
     # batches it launched.  Wall times are TIMING, not scheduling — they
@@ -192,6 +199,7 @@ def engine_stats(counters: EngineCounters, probe_caches: Dict,
                         for name, led in sorted(c.by_class.items())},
         "samples_processed": c.samples_processed,
         "samples_reused": c.samples_reused,
+        "ray_exit_samples_skipped": c.ray_exit_samples_skipped,
         # streaming-dispatch round observability: march wall-time
         # percentiles + how many batches each round launched (a
         # histogram {n_batches: rounds}); batches_per_round > 1 is the
@@ -240,6 +248,19 @@ def engine_stats(counters: EngineCounters, probe_caches: Dict,
         c.scene_blocks_hit + c.blocks_marched, 1)
     if scenecache is not None:
         out["scenecache"] = scenecache.stats()
+    # weight-pack memoization ledger (kernels.ops.packed_weights): a
+    # process-wide LRU shared by every engine — hits here are re-laid-out
+    # weight stacks AVOIDED on engine restarts / multi-scene hot-swap.
+    # Lazy import: serve/ stays importable without the kernels package
+    # loaded (pure-field engines never touch it).
+    try:
+        from ..kernels import ops as _kops
+        pstats = _kops.pack_cache_stats()
+    except ImportError:  # pragma: no cover — kernels always ship here
+        pstats = {"hits": 0, "misses": 0, "size": 0}
+    out["pack_cache_hits"] = pstats["hits"]
+    out["pack_cache_misses"] = pstats["misses"]
+    out["pack_cache_size"] = pstats["size"]
     if registry is not None:
         for k, v in out.items():
             registry.set_value(k, v)

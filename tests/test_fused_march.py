@@ -47,13 +47,17 @@ def _acfg(**kw):
 
 
 def _assert_march_equal(got, want, atol=1e-5):
-    """(rgb, acc, depth, chunks) parity; chunks exactly equal."""
+    """(rgb, acc, depth, chunks, ray_chunks) parity; the two chunk
+    counters are exactly equal — early termination (block- and per-ray
+    granular) is part of the backend contract, not a tolerance."""
     for g, w, name in [(got[0], want[0], "rgb"), (got[1], want[1], "acc"),
                        (got[2], want[2], "depth")]:
         np.testing.assert_allclose(np.asarray(g), np.asarray(w),
                                    rtol=1e-4, atol=atol, err_msg=name)
     assert np.array_equal(np.asarray(got[3]), np.asarray(want[3])), (
         f"chunks_done mismatch: {got[3]} vs {want[3]}")
+    assert np.array_equal(np.asarray(got[4]), np.asarray(want[4])), (
+        "per-ray chunks mismatch")
 
 
 # ----------------------------------------------------------------- parity
@@ -185,6 +189,176 @@ def test_fused_backend_falls_back_without_resources(both_fns):
                                  o_b, d_b, budgets)
     for g, w in zip(got, want):
         assert np.array_equal(np.asarray(g), np.asarray(w))
+
+
+# ------------------------------------------- table streaming (production path)
+@pytest.fixture(scope="module")
+def full_shape_model():
+    """Scaled-down FULL-config shapes: the full config's 16 levels (same
+    dense/hash level mix, same streaming loop trip count) at a table size
+    interpret mode can march on CPU."""
+    cfg = NGPConfig.make(n_levels=16, log2_table_size=10, max_resolution=512)
+    params = init_ngp(jax.random.PRNGKey(3), cfg)
+    return cfg, params
+
+
+def test_streamed_parity_over_vmem_budget(full_shape_model, monkeypatch):
+    """The tentpole contract: a 16-level stack whose RESIDENT footprint
+    exceeds the (simulated) VMEM budget must auto-select the streamed
+    path and keep full reference parity — rgb/acc/depth allclose, chunks
+    AND per-ray chunks exactly equal."""
+    cfg, params = full_shape_model
+    fns_k = ops.field_fns(params, cfg)
+    fns_j = jnp_field_fns(params, cfg)
+    acfg = _acfg()
+    assert acfg.march_table_streaming == "auto"
+    resident = ops.fused_march_vmem_bytes(acfg, fns_k.fused, streamed=False)
+    streamed = ops.fused_march_vmem_bytes(acfg, fns_k.fused, streamed=True)
+    assert streamed < resident
+    monkeypatch.setattr(ops, "FUSED_MARCH_VMEM_LIMIT",
+                        (resident + streamed) // 2)
+    assert ops._select_streaming(acfg, fns_k.fused) is True
+    o_b, d_b = _blocked_rays(2, acfg.block_size)
+    budgets = jnp.asarray([48, 33], jnp.int32)
+    got = pipeline.march_blocks(fns_k, acfg, o_b, d_b, budgets)
+    want = ref.ref_fused_march(fns_j, acfg, o_b, d_b, budgets)
+    _assert_march_equal(got, want)
+
+
+def test_streamed_resident_bit_identity(both_fns):
+    """Where both table supplies run, every output array is BYTE-equal:
+    residency is a supply strategy, never a numerics change."""
+    fns_k, _ = both_fns
+    o_b, d_b = _blocked_rays(3, 32)
+    budgets = jnp.asarray([16, 48, 33], jnp.int32)
+    got_r = pipeline.march_blocks(
+        fns_k, _acfg(march_table_streaming="resident"), o_b, d_b, budgets)
+    got_s = pipeline.march_blocks(
+        fns_k, _acfg(march_table_streaming="streamed"), o_b, d_b, budgets)
+    for i, (r, s) in enumerate(zip(got_r, got_s)):
+        assert np.array_equal(np.asarray(r), np.asarray(s)), (
+            f"streamed != resident at tuple element {i}")
+
+
+def test_streamed_odd_level_count():
+    """L=5: the double-buffer ping/pong wraps on an ODD level count (the
+    last level's slot collides with level 0's next-chunk slot only if the
+    two-apart reuse invariant breaks)."""
+    cfg = NGPConfig.make(n_levels=5, log2_table_size=10, max_resolution=256)
+    params = init_ngp(jax.random.PRNGKey(4), cfg)
+    fns_k = ops.field_fns(params, cfg)
+    fns_j = jnp_field_fns(params, cfg)
+    acfg = _acfg(march_table_streaming="streamed")
+    o_b, d_b = _blocked_rays(2, acfg.block_size)
+    budgets = jnp.asarray([48, 21], jnp.int32)
+    got = pipeline.march_blocks(fns_k, acfg, o_b, d_b, budgets)
+    want = ref.ref_fused_march(fns_j, acfg, o_b, d_b, budgets)
+    _assert_march_equal(got, want)
+    got_r = pipeline.march_blocks(
+        fns_k, _acfg(march_table_streaming="resident"), o_b, d_b, budgets)
+    for r, s in zip(got_r, got):
+        assert np.array_equal(np.asarray(r), np.asarray(s))
+
+
+def test_streamed_density_only(full_shape_model, monkeypatch):
+    """The serve layer's density-only refresh marches must stream too:
+    acc/depth/chunks parity with the color chain skipped."""
+    cfg, params = full_shape_model
+    fns_k = ops.field_fns(params, cfg)
+    fns_j = jnp_field_fns(params, cfg)
+    acfg = _acfg()
+    monkeypatch.setattr(ops, "FUSED_MARCH_VMEM_LIMIT", 1)  # force streamed
+    assert ops._select_streaming(acfg, fns_k.fused) is True
+    o_b, d_b = _blocked_rays(2, acfg.block_size)
+    budgets = jnp.asarray([48, 33], jnp.int32)
+    got = pipeline.march_blocks(fns_k, acfg, o_b, d_b, budgets,
+                                density_only=True)
+    want = ref.ref_fused_march(fns_j, acfg, o_b, d_b, budgets,
+                               density_only=True)
+    for g, w, name in [(got[1], want[1], "acc"), (got[2], want[2], "depth")]:
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   rtol=1e-4, atol=1e-5, err_msg=name)
+    assert np.array_equal(np.asarray(got[3]), np.asarray(want[3]))
+    assert np.array_equal(np.asarray(got[4]), np.asarray(want[4]))
+
+
+def test_auto_select_matrix(both_fns, monkeypatch):
+    """Small config under the real 16 MB budget stays resident; an
+    explicit resident pin on an over-budget config REFUSES instead of
+    silently overflowing VMEM."""
+    fns_k, _ = both_fns
+    acfg = _acfg()
+    assert ops._select_streaming(acfg, fns_k.fused) is False
+    monkeypatch.setattr(ops, "FUSED_MARCH_VMEM_LIMIT", 1)
+    assert ops._select_streaming(acfg, fns_k.fused) is True
+    with pytest.raises(ValueError, match="resident fused march"):
+        ops._select_streaming(_acfg(march_table_streaming="resident"),
+                              fns_k.fused)
+    with pytest.raises(ValueError, match="march_table_streaming"):
+        ops._select_streaming(_acfg(march_table_streaming="bogus"),
+                              fns_k.fused)
+
+
+# ------------------------------------------------------- per-ray early exit
+def _saturating_mixed_block(model):
+    """Hot-field params + a block mixing rays through the dense cube
+    (saturate within a few chunks) with near-graze rays that keep the
+    BLOCK alive to its full budget — per-ray exit has work to skip."""
+    cfg, params = model
+    hot = dict(params)
+    hot["grid"] = jnp.abs(params["grid"]) + 0.5
+    hot["mlps"] = dict(params["mlps"])
+    hot["mlps"]["density"] = [jnp.abs(w) * 4.0
+                              for w in params["mlps"]["density"]]
+    o_hit = jnp.tile(jnp.asarray([0.45, 0.45, -0.3]), (4, 1))
+    o_hit = o_hit + jnp.linspace(0.0, 0.1, 4)[:, None] * jnp.asarray(
+        [1.0, 1.0, 0.0])
+    o_miss = jnp.tile(jnp.asarray([0.5, 0.5, -2.0]), (4, 1))  # cube far away
+    o = jnp.concatenate([o_hit, o_miss])[None]
+    d = jnp.tile(jnp.asarray([0.0, 0.0, 1.0]), (1, 8, 1))
+    return hot, cfg, o, d
+
+
+def test_per_ray_early_exit_parity(model):
+    """Flag ON vs OFF on a mixed saturated/background block: chunk
+    counters stay EXACTLY equal (a dead ray's transmittance is already
+    frozen below the exit threshold, so masking its sigma cannot move
+    the block's exit chunk), outputs stay within the early-termination
+    tail, and the saturated rays demonstrably exited before the block."""
+    hot, cfg, o, d = _saturating_mixed_block(model)
+    fns_k = ops.field_fns(hot, cfg)
+    budgets = jnp.asarray([192], jnp.int32)
+    acfg = _acfg(block_size=8)
+    off = pipeline.march_blocks(fns_k, acfg, o, d, budgets)
+    on = pipeline.march_blocks(
+        fns_k, _acfg(block_size=8, per_ray_early_exit=True),
+        o, d, budgets)
+    assert np.array_equal(np.asarray(off[3]), np.asarray(on[3]))
+    assert np.array_equal(np.asarray(off[4]), np.asarray(on[4]))
+    # saturated rays stopped counting chunks before the block did
+    rc = np.asarray(on[4])[0]
+    block_chunks = int(np.asarray(on[3])[0])
+    assert (rc[:4] < block_chunks).all(), "no per-ray exit headroom"
+    assert (rc[4:] == block_chunks).all(), "background rays must ride out"
+    # the skipped tail perturbs outputs by at most the termination eps
+    for a, b, name in [(off[0], on[0], "rgb"), (off[1], on[1], "acc"),
+                       (off[2], on[2], "depth")]:
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=5e-4, err_msg=name)
+
+
+def test_per_ray_early_exit_reference_parity(model):
+    """Flag ON: fused (streamed) and chunked reference still agree —
+    the masking semantics live in BOTH backends."""
+    hot, cfg, o, d = _saturating_mixed_block(model)
+    fns_k = ops.field_fns(hot, cfg)
+    fns_j = jnp_field_fns(hot, cfg)
+    acfg = _acfg(block_size=8, per_ray_early_exit=True,
+                 march_table_streaming="streamed")
+    budgets = jnp.asarray([192], jnp.int32)
+    got = pipeline.march_blocks(fns_k, acfg, o, d, budgets)
+    want = ref.ref_fused_march(fns_j, acfg, o, d, budgets)
+    _assert_march_equal(got, want, atol=1e-4)
 
 
 # --------------------------------------------------- weight-pack memoization

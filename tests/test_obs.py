@@ -495,6 +495,9 @@ def test_engine_trace_reconstructs_lineage(flds, tmp_path):
     for bid, d in dispatches.items():
         assert collects[bid].attrs["reqs"] == d.attrs["reqs"]
         assert d.attrs["scene"] == "mic"
+        # collect stamps launch->arrays-ready device time back onto the
+        # dispatch span, splitting its host time into queue vs device
+        assert d.attrs["device_ms"] > 0.0
     # the exported file passes the validator too
     assert check_trace.check_file(path) == []
 
